@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,table1,...] [--fast]
+
+Each module's run() prints a human-readable table and returns a dict that
+is archived under experiments/bench/.
+"""
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig2,table1,table2,table3")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller problem counts / widths")
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (fig2_proxy_metrics, table1_kv_reduction,
+                            table2_throughput, table3_ablation)
+
+    jobs = {
+        "fig2": lambda: fig2_proxy_metrics.run(
+            n_problems=16 if args.fast else 40),
+        "table1": lambda: table1_kv_reduction.run(
+            widths=(16, 64) if args.fast else (16, 64, 256),
+            n_problems=30 if args.fast else 60),
+        "table2": lambda: table2_throughput.run(
+            train_steps=60 if args.fast else 150,
+            n_problems=3 if args.fast else 6),
+        "table3": lambda: table3_ablation.run(
+            n_problems=30 if args.fast else 100),
+    }
+    os.makedirs(args.out, exist_ok=True)
+    for name, job in jobs.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        res = job()
+        res["wall_s"] = round(time.time() - t0, 1)
+        with open(os.path.join(args.out, name + ".json"), "w") as f:
+            json.dump(res, f, indent=1, default=str)
+        print(f"[{name}] done in {res['wall_s']}s\n")
+
+
+if __name__ == "__main__":
+    main()

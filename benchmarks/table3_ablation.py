@@ -1,0 +1,35 @@
+"""Table 3 reproduction: ETS vs ETS-KV (coverage-term ablation).
+
+Sweep lambda_b for both variants.  The paper's finding: without the
+diversity term the cost model "cannot distinguish redundant trajectories
+from necessary diverse trajectories", so aggressive KV budgets collapse
+accuracy; with it, ETS compresses further at equal accuracy.
+"""
+from repro.core import ETSConfig, SearchConfig, evaluate_method
+
+
+def run(width: int = 64, n_problems: int = 100):
+    base = evaluate_method(SearchConfig(method="rebase", width=width),
+                           n_problems=n_problems, seed=3)
+    out = {"rebase": {"acc": base["accuracy"],
+                      "kv": base["avg_kv_shared"]}, "rows": []}
+    print(f"\n== Table 3: coverage-term ablation (width={width}) ==")
+    print(f"REBASE: acc={base['accuracy']:.2f} kv={base['avg_kv_shared']:.0f}")
+    print(f"{'lambda_b':>8s} | {'ETS acc':>7s} {'KV red':>7s} | "
+          f"{'ETS-KV acc':>10s} {'KV red':>7s}")
+    for lb in [0.5, 1.0, 2.0, 4.0]:
+        row = {"lambda_b": lb}
+        for method in ["ets", "ets-kv"]:
+            scfg = SearchConfig(method=method, width=width,
+                                ets=ETSConfig(lambda_b=lb, lambda_d=1.0))
+            r = evaluate_method(scfg, n_problems=n_problems, seed=3)
+            row[method] = {
+                "acc": r["accuracy"],
+                "kv_red": base["avg_kv_shared"] / max(r["avg_kv_shared"], 1)}
+        out["rows"].append(row)
+        print(f"{lb:8.1f} | {row['ets']['acc']:7.2f} "
+              f"{row['ets']['kv_red']:6.1f}x | "
+              f"{row['ets-kv']['acc']:10.2f} {row['ets-kv']['kv_red']:6.1f}x")
+    print("-> the diversity term permits aggressive compression without "
+          "the accuracy collapse.")
+    return out

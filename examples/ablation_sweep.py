@@ -1,0 +1,36 @@
+"""Lambda sweep: the paper's Table 3 ablation on the synthetic task.
+
+    PYTHONPATH=src python examples/ablation_sweep.py
+
+Shows WHY the coverage term matters: without it (ETS-KV), pushing the KV
+budget term lambda_b to aggressive values prunes necessary diverse
+trajectories and accuracy collapses; with it, ETS holds accuracy at the
+same compression.
+"""
+from repro.core import ETSConfig, SearchConfig, evaluate_method
+
+
+def main():
+    width, n = 64, 80
+    base = evaluate_method(SearchConfig(method="rebase", width=width),
+                           n_problems=n, seed=3)
+    print(f"REBASE baseline: acc={base['accuracy']:.2f} "
+          f"kv={base['avg_kv_shared']:.0f}\n")
+    print(f"{'lambda_b':>8s} | {'ETS acc':>7s} {'KV red.':>8s} | "
+          f"{'ETS-KV acc':>10s} {'KV red.':>8s}")
+    for lb in [0.5, 1.0, 2.0, 4.0]:
+        row = []
+        for method in ["ets", "ets-kv"]:
+            scfg = SearchConfig(method=method, width=width,
+                                ets=ETSConfig(lambda_b=lb, lambda_d=1.0))
+            r = evaluate_method(scfg, n_problems=n, seed=3)
+            row.append((r["accuracy"],
+                        base["avg_kv_shared"] / max(r["avg_kv_shared"], 1)))
+        print(f"{lb:8.1f} | {row[0][0]:7.2f} {row[0][1]:7.1f}x | "
+              f"{row[1][0]:10.2f} {row[1][1]:7.1f}x")
+    print("\nThe diversity term lets ETS push to aggressive compression "
+          "without the\naccuracy collapse ETS-KV suffers (paper Table 3).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Quickstart: ETS vs REBASE on the synthetic search task (pure host, ~30s).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Reproduces the paper's headline qualitatively: ETS matches REBASE accuracy
+at a fraction of the average KV footprint (Table 1), because the ILP cost
+model prunes semantically-redundant branches while the coverage term keeps
+the diverse ones.
+"""
+from repro.core import ETSConfig, SearchConfig, evaluate_method
+from repro.core.costsim import HardwareModel, simulate_search_cost
+from repro.core.controllers import run_search
+from repro.core.synthetic import SyntheticProblem, SyntheticTaskConfig
+
+
+def main():
+    width = 64
+    print(f"search width = {width}, 60 synthetic problems\n")
+    print(f"{'method':8s} {'accuracy':>8s} {'avg KV (tok)':>12s} "
+          f"{'model calls':>11s} {'est. step time':>14s}")
+    hw = HardwareModel(model_bytes=2 * 34e9,
+                       kv_bytes_per_token=2 * 48 * 2 * 8 * 128 * 2 * 5)
+    for method in ["beam", "dvts", "rebase", "ets"]:
+        scfg = SearchConfig(method=method, width=width,
+                            ets=ETSConfig(lambda_b=2.0, lambda_d=1.0))
+        r = evaluate_method(scfg, n_problems=60, seed=7)
+        # cost-model a single representative search
+        prob = SyntheticProblem(SyntheticTaskConfig(), seed=1234)
+        res = run_search(prob, scfg, tree=prob.make_tree())
+        cost = simulate_search_cost(res.tree.kv_trace, hw)
+        print(f"{method:8s} {r['accuracy']:8.2f} {r['avg_kv_shared']:12.0f} "
+              f"{r['model_calls']:11.0f} {cost.est_seconds:13.3f}s")
+    print("\nETS keeps REBASE-level accuracy at a fraction of the KV "
+          "footprint;\nbeam/DVTS are cheap but lose accuracy "
+          "(insufficient exploration).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from .roofline import RooflineReport, analyze_compiled, parse_hlo_costs  # noqa: F401

@@ -1,0 +1,119 @@
+"""Assemble EXPERIMENTS.md roofline/dry-run tables from dryrun JSONs.
+
+    PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def fmt_b(x: float) -> str:
+    if x >= 1e9:
+        return f"{x / 1e9:.2f}GB"
+    if x >= 1e6:
+        return f"{x / 1e6:.1f}MB"
+    return f"{x / 1e3:.0f}KB"
+
+
+def load(dirpath: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def dryrun_table(recs, mesh: str) -> str:
+    rows = ["| arch | shape | status | peak/dev | TPU-proj | lower | compile |",
+            "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != mesh and not (
+                r.get("status") == "skip"):
+            continue
+        if r.get("mesh") != mesh and r.get("status") == "skip":
+            # skips recorded per-mesh too; keep only matching tag
+            continue
+        st = r["status"]
+        shape_lbl = r["shape"] + (" **(opt)**" if r.get("variant") == "opt"
+                                  else "")
+        if st == "ok":
+            m = r["memory"]
+            # projected TPU peak: discount CPU-backend f32 upcasts of bf16
+            # buffers, floored at live arguments + outputs (which are real)
+            upcast = r.get("roofline", {}).get("cpu_f32_upcast_bytes", 0)
+            proj = max(m["peak_bytes_est"] - upcast,
+                       m["argument_bytes"] + m["output_bytes"]
+                       - m["alias_bytes"])
+            rows.append(
+                f"| {r['arch']} | {shape_lbl} | ok | "
+                f"{fmt_b(m['peak_bytes_est'])} | "
+                f"{fmt_b(proj)} | "
+                f"{r.get('lower_s', '?')}s | {r.get('compile_s', '?')}s |")
+        elif st == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | skip | — | — | — "
+                        f"| {r['reason'][:40]} |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | — | — | — "
+                        f"| {r.get('error', '')[:40]} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh: str = "pod16x16") -> str:
+    rows = ["| arch | shape | compute | memory | collective | bottleneck |"
+            " MODEL_FLOPS/HLO | note |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        rf = r["roofline"]
+        note = _note(rf)
+        shape_lbl = r["shape"] + (" **(opt)**" if r.get("variant") == "opt"
+                                  else "")
+        rows.append(
+            f"| {r['arch']} | {shape_lbl} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"{rf['bottleneck']} | {rf['useful_flops_ratio']:.2f} | "
+            f"{note} |")
+    return "\n".join(rows)
+
+
+def _note(rf) -> str:
+    bn = rf["bottleneck"]
+    if bn == "collective":
+        return "reduce cross-shard resharding / overlap collectives"
+    if bn == "memory":
+        return "KV/weight streaming bound; quantize or batch more"
+    return "MXU-bound; increase per-chip batch only if mem allows"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    for mesh in ["pod16x16", "pod2x16x16"]:
+        sub = [r for r in recs if r.get("mesh") == mesh]
+        ok = sum(r["status"] == "ok" for r in sub)
+        sk = sum(r["status"] == "skip" for r in sub)
+        fl = sum(r["status"] == "fail" for r in sub)
+        print(f"\n### Mesh {mesh}: ok={ok} skip={sk} fail={fl}\n")
+        print(dryrun_table(recs, mesh))
+    print("\n### Roofline (single-pod)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,284 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**
+regardless of trip count (verified empirically), and every layer stack /
+chunked scan here lowers to ``while`` — so raw cost_analysis
+under-reports by ~the layer count.  ``parse_hlo_costs`` therefore walks
+the optimized HLO text itself: it parses every computation's ``dot``,
+collective and fusion ops with their shapes, resolves the while-loop call
+graph with its trip counts (from the loop-condition constants), and
+multiplies nested bodies out.  FLOPs come from dot shapes
+(2*numel(out)*K, the >95% term for these models), bytes from dot operand
+sizes, and collective bytes from the per-device buffer sizes of
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+ops.  Raw cost_analysis numbers are reported alongside for comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# --- TPU v5e hardware constants -------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _parse_shape(s: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _SHAPE_RE.match(s.strip())
+    if not m:
+        return ("", ())
+    dt, dims = m.group(1), m.group(2)
+    shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+    return dt, shape
+
+
+def _numel(shape) -> int:
+    out = 1
+    for d in shape:
+        out *= d
+    return out
+
+
+def _bytes(dt: str, shape) -> int:
+    return _DTYPE_BYTES.get(dt, 4) * _numel(shape)
+
+
+@dataclass
+class _Computation:
+    name: str
+    coll_bytes: float = 0.0
+    # raw dots: (out_dtype, out_shape, lhs_name, rhs_name, contract_dims)
+    dots: List[Tuple[str, tuple, str, str, tuple]] = field(
+        default_factory=list)
+    calls: List[str] = field(default_factory=list)
+    # while loops: (body_name, cond_name)
+    whiles: List[Tuple[str, str]] = field(default_factory=list)
+    cond_bound: Optional[int] = None     # max s32 constant (trip heuristic)
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+
+
+def parse_hlo_costs(hlo: str) -> Dict[str, float]:
+    """Scan-corrected FLOPs / dot-bytes / collective-bytes (per device)."""
+    comps: Dict[str, _Computation] = {}
+    shapes: Dict[str, Tuple[str, tuple]] = {}   # op name -> (dtype, shape)
+    cur: Optional[_Computation] = None
+
+    comp_re = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+    op_def_re = re.compile(
+        r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\w+)\[([\d,]*)\]")
+    convert_re = re.compile(
+        r"=\s*f32\[([\d,]+)\][^=]*convert\(%?([\w\.\-]+)\)")
+    param_ops: set = set()
+    upcasts: Dict[Tuple[str, tuple], float] = {}
+    dot_re = re.compile(
+        r"=\s*(\w+)\[([\d,]*)\][^=]*dot\(([^)]*)\).*?"
+        r"lhs_contracting_dims=\{([\d,]*)\}")
+    while_re = re.compile(
+        r"while\(.*\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+    call_re = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+    s32_const_re = re.compile(r"s32\[\]\s*constant\((\d+)\)")
+
+    lines = hlo.splitlines()
+    for ln in lines:
+        s = ln.strip()
+        m = comp_re.match(s)
+        if m:
+            cur = _Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        dm = op_def_re.match(s)
+        if dm:
+            dt = dm.group(2)
+            shape = tuple(int(d) for d in dm.group(3).split(",") if d)
+            shapes[dm.group(1)] = (dt, shape)
+            if " parameter(" in s:
+                param_ops.add(dm.group(1))
+        # XLA:CPU artifact: bf16 dot operands are upcast to materialized
+        # f32 copies (TPU runs bf16 natively on the MXU).  Track large
+        # f32 converts whose operand is bf16 so memory reports can
+        # discount them (keyed by operand so CSE'd copies count once).
+        cm_up = convert_re.search(s)
+        if cm_up:
+            src = cm_up.group(2)
+            src_dt = shapes.get(src, ("", ()))[0]
+            shp = tuple(int(d) for d in cm_up.group(1).split(","))
+            if (src in param_ops or src_dt == "bf16") \
+                    and _numel(shp) >= (1 << 22):
+                upcasts[(src, shp)] = 4.0 * _numel(shp)
+        if " dot(" in s:
+            ddm = dot_re.search(s)
+            if ddm:
+                out_dt = ddm.group(1)
+                out_shape = tuple(int(d) for d in ddm.group(2).split(",")
+                                  if d)
+                operands = [o.strip().lstrip("%") for o in
+                            ddm.group(3).split(",")]
+                cdims = tuple(int(d) for d in ddm.group(4).split(",") if d)
+                cur.dots.append((out_dt, out_shape,
+                                 operands[0] if operands else "",
+                                 operands[1] if len(operands) > 1 else "",
+                                 cdims))
+        is_coll = False
+        for coll in _COLLECTIVES:
+            if f" {coll}(" in s or f" {coll}-start(" in s:
+                is_coll = True
+                break
+        if is_coll and dm:
+            cur.coll_bytes += _bytes(dm.group(2), tuple(
+                int(d) for d in dm.group(3).split(",") if d))
+        wm = while_re.search(s)
+        if wm:
+            cur.whiles.append((wm.group(2), wm.group(1)))
+        elif ("fusion(" in s or " call(" in s) and " while(" not in s:
+            cm = call_re.search(s)
+            if cm:
+                cur.calls.append(cm.group(1))
+        sc = s32_const_re.search(s)
+        if sc:
+            v = int(sc.group(1))
+            cur.cond_bound = max(cur.cond_bound or 0, v)
+
+    # resolve dot costs now that all shapes are known
+    for c in comps.values():
+        for out_dt, out_shape, lhs_name, rhs_name, cdims in c.dots:
+            lhs_dt, lhs_shape = shapes.get(lhs_name, ("f32", ()))
+            rhs_dt, rhs_shape = shapes.get(rhs_name, ("f32", ()))
+            k = 1
+            for d in cdims:
+                if d < len(lhs_shape):
+                    k *= lhs_shape[d]
+            c.flops += 2.0 * _numel(out_shape) * k
+            c.dot_bytes += _bytes(out_dt, out_shape)
+            c.dot_bytes += _bytes(lhs_dt, lhs_shape)
+            c.dot_bytes += _bytes(rhs_dt, rhs_shape)
+
+    def cond_trip(cond_name: str) -> int:
+        c = comps.get(cond_name)
+        if c is None or not c.cond_bound:
+            return 1
+        return max(c.cond_bound, 1)
+
+    def total(name: str, seen=()) -> Tuple[float, float, float]:
+        if name in seen or name not in comps:
+            return (0.0, 0.0, 0.0)
+        c = comps[name]
+        f, b, cb = c.flops, c.dot_bytes, c.coll_bytes
+        for callee in c.calls:
+            cf, cbs, ccb = total(callee, seen + (name,))
+            f += cf
+            b += cbs
+            cb += ccb
+        for body, cond in c.whiles:
+            trips = cond_trip(cond)
+            bf, bb, bcb = total(body, seen + (name,))
+            f += trips * bf
+            b += trips * bb
+            cb += trips * bcb
+        return (f, b, cb)
+
+    entry = None
+    for ln in lines:
+        if ln.startswith("ENTRY"):
+            m = comp_re.match(ln.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        entry = next(iter(comps), None)
+    f, b, cb = total(entry) if entry else (0.0, 0.0, 0.0)
+    return {"flops": f, "dot_bytes": b, "collective_bytes": cb,
+            "cpu_f32_upcast_bytes": sum(upcasts.values())}
+
+
+# ---------------------------------------------------------------------------
+# Roofline report
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device numbers
+    flops: float
+    bytes_hbm: float
+    bytes_collective: float
+    raw_cost_flops: float
+    raw_cost_bytes: float
+    mem_argument_bytes: float
+    mem_temp_bytes: float
+    mem_output_bytes: float
+    cpu_f32_upcast_bytes: float  # CPU-backend artifact (absent on TPU)
+    model_flops: float          # 6*N*D (analytic, global)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def finalize(self):
+        self.compute_s = self.flops / PEAK_FLOPS
+        self.memory_s = self.bytes_hbm / HBM_BW
+        self.collective_s = self.bytes_collective / ICI_BW
+        return self
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["bottleneck"] = self.bottleneck
+        d["useful_flops_ratio"] = self.useful_flops_ratio
+        return d
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, model_flops: float) -> RooflineReport:
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    parsed = parse_hlo_costs(hlo)
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops=parsed["flops"],
+        bytes_hbm=parsed["dot_bytes"],
+        bytes_collective=parsed["collective_bytes"],
+        raw_cost_flops=float(cost.get("flops", 0.0)),
+        raw_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+        mem_argument_bytes=getattr(mem, "argument_size_in_bytes", 0),
+        mem_temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+        mem_output_bytes=getattr(mem, "output_size_in_bytes", 0),
+        cpu_f32_upcast_bytes=parsed["cpu_f32_upcast_bytes"],
+        model_flops=model_flops,
+    )
+    return rep.finalize()

@@ -1,0 +1,182 @@
+"""Unified PRM-guided tree-search controllers.
+
+One loop, four retention policies (the paper's baselines + ETS):
+
+  * ``beam``    — keep the top-k candidates by reward, split the budget
+                  evenly (Snell et al., 2024).  k fixed or sqrt(N).
+  * ``dvts``    — k independent subtrees, top-1 beam within each
+                  (Beeching et al., 2024).
+  * ``rebase``  — keep everything, allocate by Eq. 1 (Wu et al., 2024).
+  * ``ets``     — REBASE weights + ILP prune + re-weight (this paper).
+  * ``ets-kv``  — ETS with lambda_d = 0 (Table 3 ablation).
+
+The controller is generation-backend-agnostic: backends expand leaves,
+score them with a PRM, and embed last steps.  Backends include the
+synthetic oracle task (search-dynamics experiments; core/synthetic.py) and
+the real LM engine (serving/search_backend.py).
+
+Per the paper (§5.1): the search width shrinks as trajectories complete,
+and the final answer is selected by weighted majority voting with the
+final PRM score as weight.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple
+
+import numpy as np
+
+from .ets import ETSConfig, ets_prune
+from .rebase import rebase_weights
+from .tree import SearchTree
+
+
+class Backend(Protocol):
+    def expand(self, tree: SearchTree, leaf: int, n: int) -> List[int]:
+        """Sample n continuations of `leaf`; add to tree; return node ids."""
+        ...
+
+    def score(self, tree: SearchTree, node: int) -> float:
+        """PRM reward for the partial trajectory ending at `node`."""
+        ...
+
+    def embed(self, tree: SearchTree, node: int) -> np.ndarray:
+        """Semantic embedding of the node's last step."""
+        ...
+
+    def answer(self, tree: SearchTree, leaf: int) -> Any:
+        """Final answer of a finished trajectory."""
+        ...
+
+
+@dataclass
+class SearchConfig:
+    method: str = "ets"            # beam | dvts | rebase | ets | ets-kv
+    width: int = 16                # N — total continuation budget per step
+    keep: int = 0                  # beam/dvts: trajectories kept (0=sqrt(N))
+    max_steps: int = 16
+    ets: ETSConfig = field(default_factory=ETSConfig)
+
+    def __post_init__(self):
+        if self.method == "ets-kv":
+            self.ets = dataclasses.replace(self.ets, lambda_d=0.0,
+                                           use_clustering=False)
+
+    @property
+    def n_keep(self) -> int:
+        return self.keep if self.keep else max(int(math.sqrt(self.width)), 1)
+
+
+@dataclass
+class SearchResult:
+    answer: Any
+    completed: List[Tuple[Any, float]]      # (answer, final reward)
+    tree: SearchTree
+    kv_summary: Dict[str, float]
+    steps: int
+
+
+def weighted_majority(pairs: Sequence[Tuple[Any, float]]) -> Any:
+    """Answer with the largest summed reward weight."""
+    if not pairs:
+        return None
+    acc: Dict[Any, float] = defaultdict(float)
+    for ans, w in pairs:
+        acc[ans] += max(w, 0.0)
+    return max(acc.items(), key=lambda kv: kv[1])[0]
+
+
+# ---------------------------------------------------------------------------
+# The unified loop
+# ---------------------------------------------------------------------------
+
+def run_search(backend: Backend, scfg: SearchConfig,
+               tree: Optional[SearchTree] = None) -> SearchResult:
+    tree = tree if tree is not None else SearchTree()
+    N = scfg.width
+    completed: List[Tuple[Any, float]] = []
+    method = scfg.method
+
+    # subtree id for DVTS (assigned at the first expansion)
+    subtree_of: Dict[int, int] = {}
+
+    # --- step 0: expand the root -------------------------------------
+    live = {0: N}  # leaf id -> continuation count
+    steps = 0
+    while steps < scfg.max_steps and N > 0 and live:
+        steps += 1
+        # 1. expand
+        candidates: List[int] = []
+        for leaf, n in live.items():
+            if n <= 0:
+                continue
+            kids = backend.expand(tree, leaf, n)
+            if leaf == 0 and method == "dvts":
+                k = scfg.n_keep
+                for j, kid in enumerate(kids):
+                    subtree_of[kid] = j % k
+            else:
+                for kid in kids:
+                    subtree_of[kid] = subtree_of.get(leaf, 0)
+            candidates.extend(kids)
+        if not candidates:
+            break
+        # 2. score
+        for nid in candidates:
+            tree.node(nid).reward = backend.score(tree, nid)
+        # 3. split off finished trajectories (width shrinks, as in REBASE)
+        finished = [c for c in candidates if tree.node(c).finished]
+        for f in finished:
+            completed.append((backend.answer(tree, f), tree.node(f).reward))
+        N = max(scfg.width - len(completed), 0)
+        open_c = [c for c in candidates if not tree.node(c).finished]
+        hook = getattr(backend, "on_step", None)
+        if not open_c or N == 0:
+            tree.record_step([c for c in candidates])
+            if hook:
+                hook(tree, [])
+            break
+        rewards = [tree.node(c).reward for c in open_c]
+
+        # 4. retention policy
+        if method == "rebase":
+            counts = rebase_weights(rewards, N, scfg.ets.rebase_temperature)
+            live = {c: int(w) for c, w in zip(open_c, counts)}
+        elif method == "beam":
+            k = min(scfg.n_keep, len(open_c))
+            order = np.argsort(rewards)[::-1][:k]
+            per = max(N // k, 1)
+            live = {open_c[int(i)]: per for i in order}
+        elif method == "dvts":
+            k = scfg.n_keep
+            best_per_tree: Dict[int, int] = {}
+            for ci, c in enumerate(open_c):
+                st = subtree_of.get(c, 0)
+                cur = best_per_tree.get(st)
+                if cur is None or rewards[ci] > tree.node(cur).reward:
+                    best_per_tree[st] = c
+            keepers = list(best_per_tree.values())
+            per = max(N // max(len(keepers), 1), 1)
+            live = {c: per for c in keepers}
+        elif method in ("ets", "ets-kv"):
+            embs = None
+            if scfg.ets.use_clustering and scfg.ets.lambda_d > 0:
+                embs = np.stack([backend.embed(tree, c) for c in open_c])
+            step = ets_prune(tree, open_c, rewards, N, scfg.ets, embs)
+            live = {open_c[i]: int(n)
+                    for i, n in zip(step.selected, step.counts)}
+        else:
+            raise ValueError(method)
+
+        live = {c: n for c, n in live.items() if n > 0}
+        tree.record_step(list(live.keys()))
+        if hook:
+            hook(tree, list(live.keys()))
+
+    # unfinished leaves at exhaustion count as failures (no answer)
+    ans = weighted_majority(completed)
+    return SearchResult(answer=ans, completed=completed, tree=tree,
+                        kv_summary=tree.kv_summary(), steps=steps)

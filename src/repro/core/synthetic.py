@@ -1,0 +1,189 @@
+"""Synthetic multi-step reasoning task with an oracle generator + noisy PRM.
+
+This is the controlled environment for reproducing the paper's *search
+dynamics* (Table 1/3 qualitatively, Fig. 2's KV-size gaps) without GPUs or
+the Llemma checkpoints:
+
+  * A problem is a chain of up to ``depth`` reasoning steps.
+  * At each step there are ``n_semantics`` semantically-distinct ways to
+    continue.  Correctness is a hidden *transition table*: whether semantic
+    s is a valid move depends on (depth, previous semantic).  Some locally
+    valid moves are traps whose continuations are rare or absent — a
+    high-reward prefix can dead-end.  One golden path is guaranteed.
+  * Sampling picks semantics from a skewed (zipf) popularity distribution —
+    popular semantics are drawn repeatedly, producing the redundant
+    paraphrases ETS prunes (§4.2's "two steps, same meaning").
+  * The PRM is noisy (reward ~ clip(N(mu, sigma))), so exploitation-only
+    search (beam) collapses onto locally-plausible prefixes and loses to
+    methods that keep semantically diverse alternatives alive — the
+    paper's core accuracy-vs-diversity trade-off.
+  * Embeddings: each (depth, semantic) has a fixed random unit vector plus
+    small per-sample noise, so agglomerative clustering recovers the
+    semantic groups.
+
+Everything is seeded and pure-numpy; tests assert the qualitative paper
+claims (ETS ~ REBASE accuracy at materially lower average KV).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .controllers import Backend
+from .tree import SearchTree
+
+
+@dataclass
+class SyntheticTaskConfig:
+    depth: int = 5
+    n_semantics: int = 6           # distinct meanings available per step
+    p_transition_ok: float = 0.45  # chance a (prev, next) move is valid
+    trap_p: float = 0.40           # chance a (depth, prev) family dead-ends
+    p_recover: float = 0.12        # a flawed prefix can still be salvaged
+    zipf_s: float = 1.3            # skew of semantic popularity (redundancy)
+    reward_mu_correct: float = 0.62
+    reward_mu_wrong: float = 0.40
+    reward_sigma: float = 0.28
+    # complete solutions are easier to verify than partial ones
+    final_mu_correct: float = 0.80
+    final_mu_wrong: float = 0.25
+    final_sigma: float = 0.15
+    emb_dim: int = 16
+    emb_noise: float = 0.08
+    tokens_per_step: Tuple[int, int] = (24, 56)
+    prompt_tokens: int = 64
+    n_wrong_answers: int = 12
+    early_finish_depth: int = 3    # concluding moves possible from here
+    early_finish_p: float = 0.20   # a correct chain concludes readily
+    early_finish_p_wrong: float = 0.05  # wrong chains ramble on
+
+
+class SyntheticProblem(Backend):
+    """One problem instance implementing the controller Backend protocol."""
+
+    ROOT_SEM = -1  # previous-semantic index used at the root
+
+    def __init__(self, cfg: SyntheticTaskConfig, seed: int):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(seed)
+        ns = cfg.n_semantics
+        # fixed semantic embedding dictionary: (depth, sem) -> unit vector
+        self._emb = self.rng.normal(size=(cfg.depth, ns, cfg.emb_dim))
+        self._emb /= np.linalg.norm(self._emb, axis=-1, keepdims=True)
+        # hidden transition validity: (depth, prev_sem+1, sem).  Row 0 is
+        # the root context.
+        self._ok = self.rng.random((cfg.depth, ns + 1, ns)) \
+            < cfg.p_transition_ok
+        # traps: some semantic families dead-end (no valid continuation) —
+        # a locally-plausible prefix that cannot be completed.  This is why
+        # exploration pays: exploitation-only search that collapses onto a
+        # trapped family loses the problem.
+        trap = self.rng.random((cfg.depth, ns + 1)) < cfg.trap_p
+        self._ok &= ~trap[:, :, None]
+        # guarantee one golden path
+        golden = [int(self.rng.integers(ns)) for _ in range(cfg.depth)]
+        prev = self.ROOT_SEM
+        for d, g in enumerate(golden):
+            self._ok[d, prev + 1, g] = True
+            prev = g
+        # zipf-ish popularity, shuffled so popularity != correctness
+        ranks = np.arange(1, ns + 1, dtype=np.float64)
+        pop = ranks ** (-cfg.zipf_s)
+        self.rng.shuffle(pop)
+        self._pop = pop / pop.sum()
+        self.correct_answer = "ANS_TRUE"
+        self.n_model_calls = 0     # proxy-metric bookkeeping (Fig. 2)
+        self.gen_tokens = 0
+
+    # -- Backend ---------------------------------------------------------
+    def expand(self, tree: SearchTree, leaf: int, n: int) -> List[int]:
+        cfg = self.cfg
+        node = tree.node(leaf)
+        depth = node.depth          # root = 0 -> children at depth 1
+        if depth >= cfg.depth:
+            return []
+        pl = node.payload or {}
+        prefix_ok = pl.get("correct", True)
+        prev_sem = pl.get("sem", self.ROOT_SEM)
+        kids = []
+        for _ in range(n):
+            sem = int(self.rng.choice(cfg.n_semantics, p=self._pop))
+            ok = bool(prefix_ok and self._ok[depth, prev_sem + 1, sem])
+            if not ok and self.rng.random() < cfg.p_recover:
+                # a mistake is not always fatal — the chain recovers
+                ok = bool(self._ok[depth, prev_sem + 1, sem])
+            emb = self._emb[depth, sem] + \
+                self.rng.normal(scale=cfg.emb_noise, size=cfg.emb_dim)
+            ntok = int(self.rng.integers(*cfg.tokens_per_step))
+            fin_p = cfg.early_finish_p if ok else cfg.early_finish_p_wrong
+            finished = (depth + 1 >= cfg.depth) or (
+                depth + 1 >= cfg.early_finish_depth
+                and self.rng.random() < fin_p)
+            payload = {"sem": sem, "correct": ok, "emb": emb}
+            kid = tree.add(leaf, n_tokens=ntok, finished=finished,
+                           payload=payload)
+            kids.append(kid)
+            self.n_model_calls += 1
+            self.gen_tokens += ntok
+        return kids
+
+    def score(self, tree: SearchTree, node: int) -> float:
+        cfg = self.cfg
+        nd = tree.node(node)
+        ok = nd.payload["correct"]
+        if nd.finished:
+            mu = cfg.final_mu_correct if ok else cfg.final_mu_wrong
+            sd = cfg.final_sigma
+        else:
+            mu = cfg.reward_mu_correct if ok else cfg.reward_mu_wrong
+            sd = cfg.reward_sigma
+        return float(np.clip(self.rng.normal(mu, sd), 0.0, 1.0))
+
+    def embed(self, tree: SearchTree, node: int) -> np.ndarray:
+        return tree.node(node).payload["emb"]
+
+    def answer(self, tree: SearchTree, leaf: int) -> Any:
+        if tree.node(leaf).payload["correct"]:
+            return self.correct_answer
+        # wrong answers collide a little (finitely many wrong outcomes)
+        return f"ANS_WRONG_{self.rng.integers(self.cfg.n_wrong_answers)}"
+
+    def make_tree(self) -> SearchTree:
+        return SearchTree(root_tokens=self.cfg.prompt_tokens,
+                          root_payload={"correct": True, "sem": self.ROOT_SEM,
+                                        "emb": np.zeros(self.cfg.emb_dim)})
+
+
+# ---------------------------------------------------------------------------
+# Batch evaluation harness
+# ---------------------------------------------------------------------------
+
+def evaluate_method(scfg, task_cfg: Optional[SyntheticTaskConfig] = None,
+                    n_problems: int = 50, seed: int = 0) -> Dict[str, float]:
+    """Run `n_problems` searches; return accuracy + KV/proxy metrics."""
+    from .controllers import run_search
+    task_cfg = task_cfg or SyntheticTaskConfig()
+    acc = 0
+    kv_shared, kv_unshared, calls, toks, nodes = [], [], [], [], []
+    for i in range(n_problems):
+        prob = SyntheticProblem(task_cfg, seed=seed * 100003 + i)
+        res = run_search(prob, scfg, tree=prob.make_tree())
+        acc += int(res.answer == prob.correct_answer)
+        s = res.kv_summary
+        kv_shared.append(s["avg_kv_shared"])
+        kv_unshared.append(s["avg_kv_unshared"])
+        calls.append(prob.n_model_calls)
+        toks.append(prob.gen_tokens)
+        nodes.append(s["total_nodes"])
+    n = float(n_problems)
+    return {
+        "accuracy": acc / n,
+        "avg_kv_shared": float(np.mean(kv_shared)),
+        "avg_kv_unshared": float(np.mean(kv_unshared)),
+        "model_calls": float(np.mean(calls)),
+        "gen_tokens": float(np.mean(toks)),     # FLOPs proxy (Pope et al.)
+        "tree_nodes": float(np.mean(nodes)),
+    }

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the search serving hot-spots.
+
+  paged_attention — decode over block-tabled paged KV (vLLM/SGLang analogue)
+  tree_attention  — DeFT-adapted: each unique tree page loaded once for all
+                    descendant leaf queries (the paper's deferred kernel)
+  flash_prefill   — causal/sliding-window flash attention for prefill
+
+ops.py holds the jit wrappers (auto interpret off-TPU); ref.py the pure-jnp
+oracles.
+"""
+from . import ops  # noqa: F401
+from .ops import flash_prefill, paged_attention, tree_attention  # noqa: F401

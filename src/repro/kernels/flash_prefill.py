@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: flash attention for prefill (causal / sliding window).
+
+Standard online-softmax tiling: grid (B, K_heads, Q_blocks, KV_blocks) with
+the KV axis innermost (sequential on TPU) so (m, l, acc) scratch carries a
+query block's running softmax across KV tiles.  Causal masking skips fully
+masked KV tiles via ``pl.when``; the sliding-window variant additionally
+skips tiles entirely left of the window — giving the O(S*W) compute the
+SWA archs (mixtral, zamba2-long) rely on.
+
+Block sizes default to (128, 128): MXU-aligned for hd in {64, 128} and a
+VMEM footprint of ~3 tiles * 128*128*4B.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, causal: bool, window: int,
+            block_q: int, block_k: int, n_groups: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # tile-level skip: fully future tiles (causal) or fully pre-window
+    run = jnp.bool_(True)
+    if causal:
+        run &= k_start <= q_start + block_q - 1
+    if window:
+        run &= k_start + block_k - 1 > q_start - window
+
+    @pl.when(run)
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32)               # (bq, G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        bq, G, hd = q.shape
+        bk = k.shape[0]
+        s = jax.lax.dot_general(
+            q.reshape(bq * G, hd), k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bq*G, bk)
+        s = (s * scale).reshape(bq, G, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, G, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, G, bk), 2)
+        ok = jnp.ones((bq, G, bk), bool)
+        if causal:
+            ok &= kpos <= qpos
+        if window:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # (bq, G)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.reshape(bq * G, bk), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] \
+            + pv.reshape(bq, G, hd)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "causal", "window", "block_q", "block_k", "interpret"))
+def flash_prefill(q, k, v, *, scale: float, causal: bool = True,
+                  window: int = 0, block_q: int = 128, block_k: int = 128,
+                  interpret: bool = True):
+    """q (B,S,H,hd); k/v (B,S,K,hd) -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    nq, nk = S // block_q, S // block_k
+
+    # regroup queries by kv head: (B, K, S, G, hd)
+    qr = q.reshape(B, S, K, G, hd).transpose(0, 2, 1, 3, 4)
+    kr = k.transpose(0, 2, 1, 3)                          # (B, K, S, hd)
+    vr = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_groups=G)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, K, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, G, hd),
+                         lambda b, h, qi, ki: (b, h, qi, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, G, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, G), jnp.float32),
+            pltpu.VMEM((block_q, G), jnp.float32),
+            pltpu.VMEM((block_q, G, hd), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, K, S, G, hd), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, S, H, hd)

@@ -1,0 +1,41 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret`` defaults to auto: False on real TPU backends (compile the
+Mosaic kernel), True elsewhere (CPU CI / this container) so the same call
+sites run everywhere.  Refs live in ref.py; tests sweep shapes/dtypes and
+assert allclose between the two.
+"""
+from __future__ import annotations
+
+import jax
+
+from .flash_prefill import flash_prefill as _flash_prefill
+from .paged_attention import paged_attention as _paged_attention
+from .tree_attention import tree_attention as _tree_attention
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                    scale: float, interpret=None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _paged_attention(q, k_pool, v_pool, block_tables, lengths,
+                            scale=scale, interpret=interpret)
+
+
+def tree_attention(q, k_pool, v_pool, page_list, page_mask, page_lens, *,
+                   scale: float, interpret=None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _tree_attention(q, k_pool, v_pool, page_list, page_mask,
+                           page_lens, scale=scale, interpret=interpret)
+
+
+def flash_prefill(q, k, v, *, scale: float, causal: bool = True,
+                  window: int = 0, block_q: int = 128, block_k: int = 128,
+                  interpret=None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _flash_prefill(q, k, v, scale=scale, causal=causal, window=window,
+                          block_q=block_q, block_k=block_k,
+                          interpret=interpret)

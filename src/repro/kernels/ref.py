@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(interpret=True on CPU, shape/dtype sweeps in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kvcache.pool import paged_attention_ref  # noqa: F401  (re-export)
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def tree_attention_ref(q, k_pool, v_pool, page_list, page_mask, page_lens,
+                       *, scale: float):
+    """Oracle for kernels.tree_attention.
+
+    q (B,H,hd); k/v_pool (P,S,K,hd); page_list (N,); page_mask (N,B);
+    page_lens (N,).  Leaf b attends to all valid slots of pages with
+    page_mask[n, b] — softmax over the union.
+    """
+    B, H, hd = q.shape
+    P, S, K, _ = k_pool.shape
+    N = page_list.shape[0]
+    G = H // K
+
+    kk = k_pool[page_list]                                # (N, S, K, hd)
+    vv = v_pool[page_list]
+    kk = kk.reshape(N * S, K, hd)
+    vv = vv.reshape(N * S, K, hd)
+    slot_ok = (jnp.arange(S)[None, :]
+               < page_lens[:, None])                      # (N, S)
+    ok = (page_mask.astype(bool)[:, None, :]
+          & slot_ok[:, :, None])                          # (N, S, B)
+    ok = ok.reshape(N * S, B).T                           # (B, N*S)
+
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,ckh->bkgc", qg, kk.astype(jnp.float32)) * scale
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,ckh->bkgh", p, vv.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window"))
+def flash_prefill_ref(q, k, v, *, scale: float, causal: bool = True,
+                      window: int = 0):
+    """Oracle for kernels.flash_prefill.  q/k/v (B, S, H|K, hd)."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bskgh,bckh->bkgsc", qg, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgsc,bckh->bskgh", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: tree attention for tree-structured KV sharing.
+
+DeFT (Yao et al., 2024) adapted to TPU: during tree search many leaves
+share prefix KV segments.  Per-sequence paged attention would stream a
+shared page once *per descendant leaf*; this kernel makes the unique page
+the unit of work — the grid walks the unique pages of the whole tree, each
+page is loaded HBM->VMEM exactly **once** and attended against every
+leaf's query simultaneously, masked by a per-page descendant bitmap.
+Flash-style running (m, l, acc) scratch for *all* leaves persists in VMEM
+across the grid.
+
+IO: per decode step the tree's unique KV tokens are read once, instead of
+once per leaf — the kernel-level realization of the KV-sharing the ETS
+cost model optimizes for (the paper defers this to DeFT; here it is
+first-class).
+
+Inputs:
+  q          (B, H, hd)    — one query per live leaf
+  k/v_pool   (P, S, K, hd) — the paged pool (single layer)
+  page_list  (N,) int32    — unique pages of the tree (scalar prefetch)
+  page_mask  (N, B) int8   — leaf b descends from page n
+  page_lens  (N,) int32    — valid slots in each page
+Returns (B, H, hd).
+
+VMEM budget: scratch acc is (B, K, G, hd) fp32 — e.g. B=256, H=32,
+hd=128 -> 4 MiB, within the ~16 MiB/core budget alongside one
+(S, K, hd) page tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_list_ref, page_lens_ref,       # scalar prefetch
+            q_ref, k_ref, v_ref, mask_ref,      # VMEM
+            o_ref,
+            m_ref, l_ref, acc_ref,
+            *, scale: float):
+    n = pl.program_id(0)
+    N = pl.num_programs(0)
+
+    @pl.when(n == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)                    # (B, H, hd)
+    k = k_ref[0].astype(jnp.float32)                      # (S, K, hd)
+    v = v_ref[0].astype(jnp.float32)
+    leaf_mask = mask_ref[0] > 0                           # (B,)
+    n_valid = page_lens_ref[n]
+
+    B, H, hd = q.shape
+    S, K, _ = k.shape
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    # per-kv-head batched dot: (K, B*G, hd) x (K, S, hd) -> (K, B*G, S)
+    qk = qg.transpose(1, 0, 2, 3).reshape(K, B * G, hd)   # (K, B*G, hd)
+    kk = k.transpose(1, 0, 2)                             # (K, S, hd)
+    s = jax.lax.dot_general(
+        qk, kk, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)               # (K, B*G, S)
+    s = (s * scale).reshape(K, B, G, S).transpose(1, 0, 2, 3)  # (B,K,G,S)
+
+    slot_ok = jax.lax.broadcasted_iota(jnp.int32, (B, K, G, S), 3) < n_valid
+    ok = slot_ok & leaf_mask[:, None, None, None]
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (B, K, G)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+    pk = p.transpose(1, 0, 2, 3).reshape(K, B * G, S)
+    vv = v.transpose(1, 0, 2)                             # (K, S, hd)
+    pv = jax.lax.dot_general(
+        pk, vv, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)               # (K, B*G, hd)
+    pv = pv.reshape(K, B, G, hd).transpose(1, 0, 2, 3)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(n == N - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        out = acc_ref[...] / l[..., None]                 # (B, K, G, hd)
+        o_ref[...] = out.reshape(B, K * G, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def tree_attention(q, k_pool, v_pool, page_list, page_mask, page_lens, *,
+                   scale: float, interpret: bool = True):
+    B, H, hd = q.shape
+    P, S, K, _ = k_pool.shape
+    N = page_list.shape[0]
+    G = H // K
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((B, H, hd), lambda n, pls, pln: (0, 0, 0)),
+            pl.BlockSpec((1, S, K, hd), lambda n, pls, pln: (pls[n], 0, 0, 0)),
+            pl.BlockSpec((1, S, K, hd), lambda n, pls, pln: (pls[n], 0, 0, 0)),
+            pl.BlockSpec((1, B), lambda n, pls, pln: (n, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, H, hd), lambda n, pls, pln: (0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((B, K, G), jnp.float32),
+            pltpu.VMEM((B, K, G), jnp.float32),
+            pltpu.VMEM((B, K, G, hd), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(page_list.astype(jnp.int32), page_lens.astype(jnp.int32),
+      q, k_pool, v_pool, page_mask.astype(jnp.int8))

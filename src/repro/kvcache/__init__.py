@@ -1,0 +1,10 @@
+"""Paged KV cache with tree sharing (TPU-native RadixAttention analogue).
+
+Host: refcounted page allocator + per-sequence block tables with
+copy-on-write branching (allocator.py).  Device: static page pool +
+jitted append/gather ops (pool.py).  Sharing a prefix = two block tables
+referencing the same physical pages; the paper's KV-size savings are
+exactly the refcount>1 pages this module tracks.
+"""
+from .allocator import PageAllocator, SequenceHandle  # noqa: F401
+from .pool import KVPool  # noqa: F401

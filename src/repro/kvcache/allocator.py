@@ -1,0 +1,146 @@
+"""Host-side page allocator: refcounts, block tables, copy-on-write.
+
+TPU adaptation of SGLang's RadixAttention: instead of a dynamic radix tree
+with pointer chasing, we keep a *static* pool of fixed-size pages and give
+every live sequence a block table (list of page indices).  Tree sharing is
+plain aliasing — branching a sequence copies its block table and bumps
+refcounts; only the *partial* last page is copied eagerly (copy-on-write)
+because both branches will append different tokens into it.
+
+The allocator is pure host bookkeeping: it never touches device memory.
+Device-side copies required by CoW are returned as (src_page, dst_page,
+n_valid) descriptors for the engine to execute in one batched jit op.
+
+Accounting properties used by tests and the Fig. 2 reproduction:
+  * ``used_pages``  — unique physical pages alive (shared counted once).
+  * ``logical_pages`` — sum over sequences of their table lengths
+    (what per-sequence contiguous caches would cost).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class SequenceHandle:
+    seq_id: int
+    block_table: List[int]
+    length: int                   # tokens written so far
+
+    def last_page_fill(self, page_size: int) -> int:
+        rem = self.length % page_size
+        if rem == 0 and self.length > 0:
+            return page_size
+        return rem
+
+
+@dataclass
+class CopyOp:
+    src_page: int
+    dst_page: int
+    n_valid: int                  # token slots to copy
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+class PageAllocator:
+    def __init__(self, n_pages: int, page_size: int):
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.free: List[int] = list(range(n_pages - 1, -1, -1))
+        self.refcount: List[int] = [0] * n_pages
+        self.seqs: Dict[int, SequenceHandle] = {}
+        self._next_seq = 0
+
+    # -- stats -----------------------------------------------------------
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self.free)
+
+    @property
+    def logical_pages(self) -> int:
+        return sum(len(s.block_table) for s in self.seqs.values())
+
+    def shared_pages(self) -> int:
+        return sum(1 for rc in self.refcount if rc > 1)
+
+    # -- internals ---------------------------------------------------------
+    def _alloc_page(self) -> int:
+        if not self.free:
+            raise OutOfPages(f"pool exhausted ({self.n_pages} pages)")
+        pg = self.free.pop()
+        self.refcount[pg] = 1
+        return pg
+
+    def _release_page(self, pg: int) -> None:
+        self.refcount[pg] -= 1
+        assert self.refcount[pg] >= 0, pg
+        if self.refcount[pg] == 0:
+            self.free.append(pg)
+
+    # -- public API --------------------------------------------------------
+    def new_seq(self, prompt_tokens: int = 0) -> Tuple[SequenceHandle, List[CopyOp]]:
+        """Create an empty sequence with room for `prompt_tokens`."""
+        n_pages = -(-prompt_tokens // self.page_size) if prompt_tokens else 0
+        table = [self._alloc_page() for _ in range(n_pages)]
+        h = SequenceHandle(self._next_seq, table, prompt_tokens)
+        self._next_seq += 1
+        self.seqs[h.seq_id] = h
+        return h, []
+
+    def append_tokens(self, seq_id: int, n: int) -> List[CopyOp]:
+        """Reserve slots for n new tokens; may CoW the shared last page."""
+        h = self.seqs[seq_id]
+        ops: List[CopyOp] = []
+        # CoW: if the last page is shared and not full, privatize it first
+        if h.block_table:
+            last = h.block_table[-1]
+            fill = h.last_page_fill(self.page_size)
+            if self.refcount[last] > 1 and fill < self.page_size:
+                new_pg = self._alloc_page()
+                ops.append(CopyOp(last, new_pg, fill))
+                self._release_page(last)
+                h.block_table[-1] = new_pg
+        space = len(h.block_table) * self.page_size - h.length
+        need = n - space
+        while need > 0:
+            h.block_table.append(self._alloc_page())
+            need -= self.page_size
+        h.length += n
+        return ops
+
+    def branch(self, seq_id: int, n_branches: int = 1) -> List[SequenceHandle]:
+        """Fork a sequence into n additional branches sharing its pages."""
+        h = self.seqs[seq_id]
+        out = []
+        for _ in range(n_branches):
+            for pg in h.block_table:
+                self.refcount[pg] += 1
+            b = SequenceHandle(self._next_seq, list(h.block_table), h.length)
+            self._next_seq += 1
+            self.seqs[b.seq_id] = b
+            out.append(b)
+        return out
+
+    def free_seq(self, seq_id: int) -> None:
+        h = self.seqs.pop(seq_id)
+        for pg in h.block_table:
+            self._release_page(pg)
+
+    # -- invariants (tests) ------------------------------------------------
+    def check_invariants(self) -> None:
+        counts = [0] * self.n_pages
+        for s in self.seqs.values():
+            need = -(-s.length // self.page_size) if s.length else 0
+            assert len(s.block_table) >= need, (s.seq_id, s.length,
+                                                len(s.block_table))
+            for pg in s.block_table:
+                counts[pg] += 1
+        assert counts == self.refcount, "refcount mismatch"
+        free_set = set(self.free)
+        for pg, rc in enumerate(self.refcount):
+            assert (rc == 0) == (pg in free_set), (pg, rc)

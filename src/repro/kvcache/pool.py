@@ -1,0 +1,113 @@
+"""Device-side paged KV pool + jitted update/copy/gather helpers.
+
+Layout: ``k, v: (n_layers, n_pages, page_size, n_kv_heads, head_dim)``.
+Static shapes throughout — block tables arrive as padded int32 arrays
+(-1 = empty), so every op jits once and reuses.
+
+The pure-jnp gather path here is also the oracle for the Pallas
+``paged_attention`` kernel (kernels/ref.py builds on it).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .allocator import CopyOp
+
+
+class KVPool:
+    def __init__(self, n_layers: int, n_pages: int, page_size: int,
+                 n_kv_heads: int, head_dim: int, dtype=jnp.float32):
+        self.n_layers = n_layers
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.n_kv_heads = n_kv_heads
+        self.head_dim = head_dim
+        shape = (n_layers, n_pages, page_size, n_kv_heads, head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+
+    # ------------------------------------------------------------------
+    def write_tokens(self, layer_k, layer_v, pages, slots):
+        """Write B new tokens across all layers.
+
+        layer_k/v: (L, B, K, hd) — per-layer K/V of the new tokens.
+        pages, slots: (B,) int32 physical page + in-page slot per token.
+        """
+        self.k = _write(self.k, layer_k, pages, slots)
+        self.v = _write(self.v, layer_v, pages, slots)
+
+    def copy_pages(self, ops: Sequence[CopyOp]):
+        """Execute CoW copies (partial page duplication)."""
+        if not ops:
+            return
+        src = jnp.array([o.src_page for o in ops], jnp.int32)
+        dst = jnp.array([o.dst_page for o in ops], jnp.int32)
+        # copying the whole page is safe: slots beyond n_valid are dead
+        self.k = _copy_pages(self.k, src, dst)
+        self.v = _copy_pages(self.v, src, dst)
+
+    def gather_kv(self, layer: int, block_table, length: int):
+        """Materialize a contiguous (length, K, hd) view (oracle/tests)."""
+        pages = self.k.shape[1]
+        flat_k = self.k[layer].reshape(pages * self.page_size,
+                                       self.n_kv_heads, self.head_dim)
+        flat_v = self.v[layer].reshape(pages * self.page_size,
+                                       self.n_kv_heads, self.head_dim)
+        idx = (jnp.asarray(block_table)[:, None] * self.page_size
+               + jnp.arange(self.page_size)[None, :]).reshape(-1)[:length]
+        return flat_k[idx], flat_v[idx]
+
+
+@jax.jit
+def _write(pool, new_kv, pages, slots):
+    # pool (L,P,S,K,hd); new_kv (L,B,K,hd)
+    return pool.at[:, pages, slots].set(new_kv.astype(pool.dtype))
+
+
+@jax.jit
+def _copy_pages(pool, src, dst):
+    return pool.at[:, dst].set(pool[:, src])
+
+
+# ---------------------------------------------------------------------------
+# Reference paged attention (pure jnp) — oracle for kernels/paged_attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                        scale: float):
+    """Decode attention over a paged pool.
+
+    q            : (B, H, hd)       one query token per sequence
+    k_pool/v_pool: (P, S, K, hd)    single layer's pool
+    block_tables : (B, T) int32     padded with -1
+    lengths      : (B,) int32       context length per sequence
+    Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    P, S, K, _ = k_pool.shape
+    T = block_tables.shape[1]
+    G = H // K
+
+    # gather (B, T*S, K, hd)
+    flat_k = k_pool.reshape(P * S, K, hd)
+    flat_v = v_pool.reshape(P * S, K, hd)
+    safe_tables = jnp.maximum(block_tables, 0)
+    idx = (safe_tables[:, :, None] * S
+           + jnp.arange(S)[None, None, :]).reshape(B, T * S)
+    kk = flat_k[idx]                                    # (B, T*S, K, hd)
+    vv = flat_v[idx]
+    valid = (jnp.arange(T * S)[None, :] < lengths[:, None]) \
+        & (block_tables[:, :, None] >= 0).repeat(S, axis=2).reshape(B, T * S)
+
+    qg = q.reshape(B, K, G, hd)
+    scores = jnp.einsum("bkgh,bckh->bkgc", qg.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgc,bckh->bkgh", probs, vv.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

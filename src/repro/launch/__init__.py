@@ -1,0 +1,1 @@
+"""Distributed launch layer: mesh, sharding policy, step builders, dry-run."""

@@ -1,0 +1,223 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production mesh and record memory/cost/roofline artifacts.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape decode_32k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+This is the proof that the distribution config is coherent: a sharding
+mismatch, OOM at compile, or unsupported collective fails here.
+"""
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax
+# locks the device count at first init, so this MUST precede every other
+# import (including repro.*, which import jax).
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.roofline import analyze_compiled
+from repro.configs import get_config, get_shape, INPUT_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (batch_shardings, cache_shardings,
+                                   opt_shardings, param_shardings)
+from repro.launch.steps import (build_decode_step, build_model_for,
+                                build_prefill_step, build_train_step,
+                                cache_specs, input_specs, params_specs,
+                                skip_reason)
+from repro.training.optimizer import adamw_init
+
+ARCHES = [
+    "deepseek-moe-16b", "zamba2-7b", "hubert-xlarge", "phi3-mini-3.8b",
+    "qwen2-vl-7b", "llama3.2-1b", "mixtral-8x7b", "qwen3-14b",
+    "rwkv6-7b", "yi-6b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
+                compile_: bool = True, opt: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec["status"] = "skip"
+        rec["reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    model = build_model_for(
+        cfg, shape, quant_kv=(opt and shape.kind == "decode"
+                              and cfg.arch_type != "ssm"))
+    batch_s = input_specs(cfg, shape)
+
+    # pin MoE dispatch-buffer shardings to the token/data axes (GSPMD
+    # replicates them otherwise — see models/moe.py)
+    from repro.models import moe as MOE
+    from repro.models import model as MODEL
+    dp = ("pod", "data") if multi_pod else ("data",)
+    MOE.DATA_AXES = dp
+    MOE.N_GROUPS = 32 if multi_pod else 16   # = number of token shards
+    MODEL.ACT_SHARDING = (dp, None, "model")  # residual-stream checkpoints
+    MOE.MESH = None   # baseline: GSPMD-inferred dispatch collectives
+
+    if opt:
+        # beyond-paper §Perf variant: shard_map'd MoE dispatch (locality
+        # explicit -> no token-table all-gathers)
+        MOE.MESH = mesh
+        rec["variant"] = "opt"
+
+    with mesh:
+        if shape.kind == "train":
+            params_s = params_specs(model, serve=False)
+            opt_s = jax.eval_shape(adamw_init, params_s)
+            p_sh = param_shardings(mesh, params_s, train=True)
+            o_sh = opt_shardings(mesh, opt_s)
+            in_sh = (p_sh, o_sh,
+                     batch_shardings(mesh, batch_s, kind="train"))
+            fn = build_train_step(model)
+            # donate params+opt (updated in place); outputs keep their
+            # input shardings so the step is iterable.
+            lowered = jax.jit(
+                fn, in_shardings=in_sh,
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1)).lower(params_s, opt_s, batch_s)
+        elif shape.kind == "prefill":
+            params_s = params_specs(model, serve=True, quant_moe=opt)
+            in_sh = (param_shardings(mesh, params_s, train=False),
+                     batch_shardings(mesh, batch_s, kind="prefill"))
+            fn = build_prefill_step(model, cache_len=shape.seq_len)
+            cache_out = jax.eval_shape(fn, params_s, batch_s)[1]
+            c_sh = cache_shardings(mesh, cache_out) \
+                if cache_out is not None else None
+            lowered = jax.jit(
+                fn, in_shardings=in_sh,
+                out_shardings=(None, c_sh)).lower(params_s, batch_s)
+        else:  # decode
+            params_s = params_specs(model, serve=True, quant_moe=opt)
+            cache_s = cache_specs(model, shape)
+            c_sh = cache_shardings(mesh, cache_s)
+            in_sh = (param_shardings(mesh, params_s, train=False),
+                     batch_shardings(mesh, batch_s, kind="decode"),
+                     c_sh)
+            fn = build_decode_step(model)
+            # donate the cache: the serve step updates it in place
+            lowered = jax.jit(
+                fn, in_shardings=in_sh, out_shardings=(None, c_sh),
+                donate_argnums=(2,)).lower(params_s, batch_s, cache_s)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        if not compile_:
+            rec["status"] = "lowered"
+            return rec
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_bytes_est": (mem.argument_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           + mem.output_size_in_bytes
+                           - mem.alias_size_in_bytes),
+    }
+    # analytic useful FLOPs: 6*N_active*D for train, 2*N_active per token
+    # (+attention) for serving
+    tok = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                else 1)
+    if shape.kind == "train":
+        model_flops = 6.0 * cfg.active_param_count() * shape.global_batch \
+            * shape.seq_len
+    else:
+        model_flops = cfg.flops_per_token(
+            shape.seq_len if shape.kind == "decode" else 0) * tok
+        if shape.kind == "prefill":
+            model_flops = 2.0 * cfg.active_param_count() * tok
+
+    roof = analyze_compiled(compiled, arch=arch, shape=shape_name,
+                            mesh_name=mesh_name, chips=chips,
+                            model_flops=model_flops)
+    rec["roofline"] = roof.to_dict()
+    # TPU-projected peak: the CPU backend materializes f32 copies of bf16
+    # dot operands; the TPU MXU consumes bf16 natively, so those buffers
+    # do not exist on the target hardware.
+    rec["memory"]["peak_bytes_tpu_proj"] = max(
+        rec["memory"]["peak_bytes_est"] - roof.cpu_f32_upcast_bytes, 0)
+    rec["status"] = "ok"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="enable beyond-paper perf variants (see §Perf)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    combos = []
+    arches = ARCHES if (args.all or not args.arch) else [args.arch]
+    shapes = SHAPES if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in arches:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for a, s, mp in combos:
+        tag = f"{a}__{s}__{'mp' if mp else 'sp'}" + \
+            ("__opt" if args.opt else "")
+        try:
+            rec = lower_combo(a, s, multi_pod=mp,
+                              compile_=not args.no_compile, opt=args.opt)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            rec = {"arch": a, "shape": s, "mesh": mp, "status": "fail",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        st = rec["status"]
+        n_ok += st in ("ok", "lowered")
+        n_skip += st == "skip"
+        n_fail += st == "fail"
+        extra = ""
+        if st in ("ok",):
+            m = rec["memory"]["peak_bytes_est"] / 1e9
+            bn = rec["roofline"]["bottleneck"]
+            extra = f"peak/dev={m:.2f}GB bottleneck={bn} " \
+                    f"lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s"
+        elif st == "skip":
+            extra = rec["reason"]
+        elif st == "fail":
+            extra = rec["error"][:160]
+        print(f"[{st:5s}] {tag}: {extra}", flush=True)
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

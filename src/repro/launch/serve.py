@@ -1,0 +1,40 @@
+"""Serving launcher: run ETS search against a (tiny) LM + PRM, or lower
+the serve step on the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --method ets --width 16
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --dry-run
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny-lm")
+    ap.add_argument("--method", default="ets",
+                    choices=["beam", "dvts", "rebase", "ets", "ets-kv"])
+    ap.add_argument("--width", type=int, default=8)
+    ap.add_argument("--problems", type=int, default=5)
+    ap.add_argument("--train-steps", type=int, default=250)
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=512 "
+            + os.environ.get("XLA_FLAGS", ""))
+        from repro.launch.dryrun import lower_combo
+        rec = lower_combo(args.arch, args.shape, multi_pod=args.multi_pod)
+        print(rec.get("status"), rec.get("memory", rec.get("error")))
+        return
+
+    # end-to-end: train tiny models, then search
+    from examples_lib import run_e2e_search  # noqa: F401 (examples provide)
+    raise SystemExit(
+        "Use examples/train_and_search.py for the runnable e2e driver.")
+
+
+if __name__ == "__main__":
+    main()

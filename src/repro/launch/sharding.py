@@ -1,0 +1,204 @@
+"""Path-based PartitionSpec policy for params, optimizer state, caches and
+batches.
+
+Policies (per input-shape kind):
+  * train   — FSDP + TP: weight matrices shard (contract-dim -> `data`,
+    output-dim -> `model`); optimizer moments mirror params; batch shards
+    over (`pod`, `data`).
+  * serve (prefill/decode) — TP only: `data` is reserved for the request
+    batch, weights replicate across it (weight all-gathers per decode step
+    would dominate latency otherwise); KV caches shard batch -> `data`
+    and *sequence* -> `model` (flash-decoding style — works for every GQA
+    ratio incl. kv_heads < mesh axis, which head-sharding cannot do).
+
+Every rule is divisibility-checked against the mesh: a dim that doesn't
+divide its axis is left unsharded (recorded by the dry-run so per-arch
+fallbacks are visible in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= _axis_size(mesh, n)
+        return out
+    return mesh.shape[name]
+
+
+def fit_spec(mesh, shape: Tuple[int, ...], want: Tuple) -> P:
+    """Drop axes that don't divide their dim; pad/trim to rank."""
+    want = tuple(want) + (None,) * (len(shape) - len(want))
+    want = want[: len(shape)]
+    out = []
+    for dim, ax in zip(shape, want):
+        out.append(ax if ax and dim % _axis_size(mesh, ax) == 0 else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Parameter policy
+# ---------------------------------------------------------------------------
+
+# (regex on path tail, base rank, spec for the trailing `base rank` dims).
+# `D` is replaced by the data axis in train mode / None in serve mode.
+_PARAM_RULES: List[Tuple[str, int, Tuple]] = [
+    (r"moe/(w_up|w_gate)(/q)?$", 3, ("model", "D", None)),  # (E,d,de) E%model
+    (r"moe/w_down(/q)?$", 3, ("model", None, "D")),      # (E, de, d)
+    (r"moe/router$", 2, ("D", None)),
+    (r"shared/(w_up|w_gate)$", 2, ("D", "model")),
+    (r"shared/w_down$", 2, ("model", "D")),
+    (r"(wq|wk|wv|wg|w_up|w_gate|w1|in_proj|z_proj|xbc_proj|dt_proj|frontend_proj)$", 2,
+     ("D", "model")),
+    (r"(wo|w_down|w2|out_proj)$", 2, ("model", "D")),
+    (r"embed$", 2, ("model", "D")),
+    (r"lm_head$", 2, ("D", "model")),
+    (r"value_head$", 2, (None, None)),
+    (r"conv_w$", 2, (None, "model")),
+    (r"(mu|w_bias|u|gn_w|gn_b|ln1|ln2|ln|ln_f|norm_w|conv_b|A_log|dt_bias"
+     r"|D|q_norm|k_norm)$", 1, (None,)),
+]
+
+# MoE expert fallback when n_experts % model != 0 (e.g. mixtral 8e on 16):
+_MOE_FALLBACK = {
+    r"moe/(w_up|w_gate)(/q)?$": (None, "D", "model"),
+    r"moe/w_down(/q)?$": (None, "model", "D"),
+}
+
+
+def param_spec(mesh, path: str, shape: Tuple[int, ...], *,
+               train: bool) -> P:
+    data_ax = "data" if train else None
+    for pat, base_rank, spec in _PARAM_RULES:
+        if re.search(pat, path):
+            lead = len(shape) - base_rank
+            if lead < 0:  # e.g. 1D rule hit on scalar
+                return P()
+            tail_shape = shape[lead:]
+            want = tuple("data" if s == "D" else s for s in
+                         (tuple(spec)))
+            # substitute serve-mode data axis
+            want = tuple(None if (w == "data" and not train) else w
+                         for w in want)
+            # MoE expert fallback
+            m = re.search(r"moe/(w_up|w_gate|w_down)(/q)?$", path)
+            if m and tail_shape[0] % _axis_size(mesh, "model") != 0:
+                for pat2, spec2 in _MOE_FALLBACK.items():
+                    if re.search(pat2, path):
+                        want = tuple(
+                            "data" if s == "D" and train else
+                            (None if s == "D" else s) for s in spec2)
+                        break
+            fitted = fit_spec(mesh, tail_shape, want)
+            return P(*((None,) * lead + tuple(fitted)))
+    # fallback: replicate
+    return P()
+
+
+def param_shardings(mesh, params_shape, *, train: bool):
+    """Pytree of NamedShardings matching a params eval_shape tree."""
+    def assign(path, leaf):
+        spec = param_spec(mesh, _path_str(path), leaf.shape, train=train)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def opt_shardings(mesh, opt_shape, *, train: bool = True):
+    """m/v mirror params; scalar step replicates."""
+    def assign(path, leaf):
+        ps = _path_str(path)
+        if ps.startswith(("m/", "v/")):
+            spec = param_spec(mesh, ps.split("/", 1)[1], leaf.shape,
+                              train=train)
+        else:
+            spec = P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, opt_shape)
+
+
+# ---------------------------------------------------------------------------
+# Cache policy (decode)
+# ---------------------------------------------------------------------------
+
+_CACHE_RULES: List[Tuple[str, int, Tuple]] = [
+    # attention KV: (..., B, C, K, hd): batch->data, sequence->model
+    # (also the int8-quantized {q, s} leaves of the same layout)
+    (r"/(k|v)(/q)?$", 4, ("data", "model", None, None)),
+    (r"/(k|v)/s$", 4, ("data", "model", None, None)),
+    (r"/pos$", 2, ("data", None)),
+    # rwkv state (..., B, H, hd, hd): heads->model
+    (r"/S$", 4, ("data", "model", None, None)),
+    (r"/x_prev$", 3, ("data", None, "model")),
+    # mamba state (..., B, H, hd, ds) + conv tail (..., B, K-1, dxbc)
+    (r"/h$", 4, ("data", "model", None, None)),
+    (r"/conv$", 3, ("data", None, "model")),
+    (r"next_pos$", 1, ("data",)),
+]
+
+
+def cache_spec(mesh, path: str, shape: Tuple[int, ...]) -> P:
+    for pat, base_rank, spec in _CACHE_RULES:
+        if re.search(pat, path):
+            lead = len(shape) - base_rank
+            fitted = fit_spec(mesh, shape[lead:], spec)
+            return P(*((None,) * lead + tuple(fitted)))
+    return P()
+
+
+def cache_shardings(mesh, cache_shape):
+    def assign(path, leaf):
+        return NamedSharding(mesh,
+                             cache_spec(mesh, _path_str(path), leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batch policy
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh, batch_shape, *, kind: str):
+    """tokens/labels (B,S) -> batch over (pod,data); (3,B,S) positions."""
+    from .mesh import batch_axes
+    dp = batch_axes(mesh)
+
+    def assign(path, leaf):
+        shape = leaf.shape
+        ps = _path_str(path)
+        if ps == "positions" and len(shape) == 3:
+            spec = fit_spec(mesh, shape, (None, dp, None))
+        elif len(shape) >= 1:
+            spec = fit_spec(mesh, shape, (dp,) + (None,) * (len(shape) - 1))
+        else:
+            spec = P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, batch_shape)

@@ -1,0 +1,165 @@
+"""Step builders + input specs for every (architecture x input shape).
+
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable,
+no allocation) for the batch of each shape kind; the step builders return
+pure functions suitable for ``jax.jit(..., in_shardings=...).lower()`` on
+the production mesh (dry-run) or for direct execution at reduced scale
+(smoke tests).
+
+Shape-kind semantics:
+  train_4k     — full train step: fwd + bwd + AdamW update.
+  prefill_32k  — forward + KV/state cache materialization.
+  decode_*     — serve_step: ONE new token against a seq_len cache.
+
+Skip policy (documented in DESIGN.md):
+  * encoder archs (hubert) skip decode shapes;
+  * long_500k runs only for sub-quadratic archs (SSM/hybrid recurrent
+    or native-SWA) — pure full-attention archs skip it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import InputShape, ModelConfig, get_shape
+from repro.models.model import LM
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.train import prm_loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Combo policy
+# ---------------------------------------------------------------------------
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    if shape.kind == "decode":
+        if not cfg.supports_decode:
+            return "encoder-only arch has no decode step"
+        if shape.seq_len > 65536 and not cfg.supports_long_context:
+            return "full-attention arch: long_500k requires sub-quadratic"
+    return None
+
+
+def is_long(shape: InputShape) -> bool:
+    return shape.kind == "decode" and shape.seq_len > 65536
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step's batch inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        if cfg.arch_type == "encoder":      # audio: frames in, units out
+            return {"embeds": sds((B, S, cfg.frontend_dim), f),
+                    "labels": sds((B, S), i32),
+                    "loss_mask": sds((B, S), jnp.float32)}
+        if cfg.arch_type == "vlm":          # image prefix + text
+            s_img = S // 8
+            return {"embeds": sds((B, s_img, cfg.frontend_dim), f),
+                    "tokens": sds((B, S - s_img), i32),
+                    "positions": sds((3, B, S), i32),
+                    "labels": sds((B, S), i32),
+                    "loss_mask": sds((B, S), jnp.float32)}
+        return {"tokens": sds((B, S), i32),
+                "labels": sds((B, S), i32),
+                "loss_mask": sds((B, S), jnp.float32)}
+
+    if shape.kind == "prefill":
+        if cfg.arch_type == "encoder":
+            return {"embeds": sds((B, S, cfg.frontend_dim), f)}
+        if cfg.arch_type == "vlm":
+            s_img = S // 8
+            return {"embeds": sds((B, s_img, cfg.frontend_dim), f),
+                    "tokens": sds((B, S - s_img), i32),
+                    "positions": sds((3, B, S), i32)}
+        return {"tokens": sds((B, S), i32)}
+
+    # decode: one token per sequence
+    return {"tokens": sds((B, 1), i32)}
+
+
+def cache_specs(model: LM, shape: InputShape):
+    """ShapeDtypeStructs of the decode-time cache (filled to seq_len-1)."""
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def params_specs(model: LM, *, serve: bool, quant_moe: bool = False):
+    """eval_shape of init; serve casts master fp32 -> compute dtype.
+
+    quant_moe (serve-only, beyond-paper §Perf): expert weight banks are
+    stored as int8 + per-out-channel scales ({"q", "s"}), halving the
+    HBM bytes the memory-bound decode step streams per token.
+    """
+    ps = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    if serve:
+        cdt = model.compute_dtype
+        ps = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, cdt if jnp.issubdtype(s.dtype, jnp.floating)
+                else s.dtype), ps)
+        if quant_moe and model.cfg.arch_type == "moe":
+            def quant(tree):
+                for g in tree["groups"]:
+                    if "moe" not in g:
+                        continue
+                    for name in ("w_up", "w_gate", "w_down"):
+                        w = g["moe"][name]
+                        # keep the stacked layer dim (scanned over)
+                        scale_shape = (w.shape[0],) \
+                            + (1,) * (len(w.shape) - 2) + (w.shape[-1],)
+                        g["moe"][name] = {
+                            "q": jax.ShapeDtypeStruct(w.shape, jnp.int8),
+                            "s": jax.ShapeDtypeStruct(scale_shape,
+                                                      jnp.float32)}
+                return tree
+            ps = quant(ps)
+    return ps
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def build_model_for(cfg: ModelConfig, shape: InputShape, **kw) -> LM:
+    return LM(cfg, long_mode=is_long(shape), **kw)
+
+
+def build_train_step(model: LM, opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch))(params)
+        params, opt_state = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def build_prefill_step(model: LM, cache_len: int):
+    def prefill_step(params, batch):
+        if model.cfg.arch_type == "encoder":
+            logits, aux = model.forward(params, batch)
+            return logits, None
+        return model.prefill(params, batch, cache_len)
+
+    return prefill_step
+
+
+def build_decode_step(model: LM):
+    def decode_step(params, batch, cache):
+        return model.decode_step(params, batch["tokens"], cache)
+
+    return decode_step

@@ -1,0 +1,61 @@
+"""Training launcher.
+
+Two modes:
+  * ``--arch tiny-lm --steps 200`` — actually trains on the local host
+    mesh (CPU-runnable; used by the e2e example).
+  * ``--arch qwen3-14b --dry-run`` — lowers the distributed train step on
+    the production mesh (equivalent to dryrun.py train_4k, kept here so
+    the launcher surface matches a real framework's).
+
+    PYTHONPATH=src python -m repro.launch.train --arch tiny-lm --steps 100
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny-lm")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--tiny", action="store_true",
+                    help="train the reduced variant of --arch")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=512 "
+            + os.environ.get("XLA_FLAGS", ""))
+        from repro.launch.dryrun import lower_combo
+        rec = lower_combo(args.arch, "train_4k", multi_pod=args.multi_pod)
+        print(rec.get("status"), rec.get("memory", rec.get("error")))
+        return
+
+    import jax
+    from repro.configs import get_config, tiny_variant
+    from repro.models.model import build_model
+    from repro.training import TrainConfig, train_lm
+    from repro.training.task import ArithmeticTask, VOCAB_SIZE
+    from repro.training import checkpoint
+    import dataclasses
+
+    cfg = get_config(args.arch)
+    if args.tiny:
+        cfg = tiny_variant(cfg)
+    cfg = dataclasses.replace(cfg, vocab_size=max(VOCAB_SIZE, 32),
+                              dtype="float32")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    task = ArithmeticTask(n_ops=3, seq_len=64)
+    params, hist = train_lm(model, params, task,
+                            TrainConfig(steps=args.steps, batch=args.batch))
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params)
+        print(f"saved {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

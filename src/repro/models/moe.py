@@ -1,0 +1,447 @@
+"""Mixture-of-Experts FFN with sort-based token dispatch.
+
+Two assigned architectures use this block:
+  * mixtral-8x7b      — 8 experts, top-2, no shared experts.
+  * deepseek-moe-16b  — 64 fine-grained routed experts, top-6, +2 shared.
+
+Dispatch strategy (TPU/GSPMD-friendly):
+  GShard's one-hot dispatch tensor is O(S * E * C) and explodes for
+  1M-token training batches, so we instead sort token-replicas by expert
+  id, compute each replica's position within its expert via a cumsum over
+  expert counts, and scatter into a fixed (E, C, d) buffer (capacity drop
+  to a dump row).  Expert compute is then a single batched einsum whose
+  expert axis shards cleanly on the `model` mesh axis (expert parallelism;
+  the scatter/gather across the data->expert sharding boundary is where
+  GSPMD inserts the all-to-all).
+
+``moe_apply_dense`` is the naive loop-over-experts oracle used by tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+# Set by the launch layer (repro.launch.steps): the mesh axes that shard
+# the token dimension (e.g. ("data",) or ("pod", "data")) and the number
+# of dispatch groups (= number of token shards).  Grouped dispatch keeps
+# every sort/scatter/gather *local to its shard* (GShard-style); without
+# it GSPMD has to all-gather the (E, C, d) dispatch buffers across the
+# token shards — tens of GB per device at 1M-token batches.
+DATA_AXES = None
+N_GROUPS = 1
+# Optional (perf): mesh for shard_map'd dispatch/combine.  GSPMD cannot
+# prove that the dispatch gathers' indices are group-local, so it
+# all-gathers the full token table per MoE layer (~the dominant collective
+# in the MoE train baselines).  With MESH set, dispatch/combine run inside
+# shard_map over DATA_AXES, making locality explicit — the gathers become
+# purely local and the only collectives left are the expert einsum's.
+MESH = None
+
+
+def _constrain(x, *spec):
+    if DATA_AXES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    resolved = tuple(DATA_AXES if s == "DP" else s for s in spec)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+def _shmap_gather(fn, n_arrays):
+    """Wrap a gather fn in shard_map over the data axes (if configured)."""
+    if MESH is None:
+        return fn
+    from jax.sharding import PartitionSpec as P
+    dp = DATA_AXES
+    specs = [P(dp, None, None), P(dp, None), P(dp, None), P(dp, None),
+             P(dp, None)][:n_arrays]
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=MESH, in_specs=tuple(specs),
+                     out_specs=P(dp, None, None), check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    m = cfg.moe
+    d = cfg.d_model
+    de = m.d_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+
+    def expert_bank(k, d_in, d_out):
+        kk = jax.random.split(k, m.n_experts)
+        return jnp.stack([dense_init(kk[i], d_in, d_out, dtype)
+                          for i in range(m.n_experts)])
+
+    p = {
+        "router": dense_init(ks[0], d, m.n_experts, jnp.float32),
+        "w_gate": expert_bank(ks[1], d, de),    # (E, d, de)
+        "w_up": expert_bank(ks[2], d, de),      # (E, d, de)
+        "w_down": jnp.stack([dense_init(k, de, d, dtype)
+                             for k in jax.random.split(ks[3], m.n_experts)]),
+    }
+    if m.n_shared_experts:
+        ds = de * m.n_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(kk[0], d, ds, dtype),
+            "w_up": dense_init(kk[1], d, ds, dtype),
+            "w_down": dense_init(kk[2], ds, d, dtype),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+def route(router_w, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Top-k routing.  x: (S, d).  Returns (gates (S,k), idx (S,k), aux_loss)."""
+    m = cfg.moe
+    logits = x.astype(jnp.float32) @ router_w          # (S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)         # (S, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    S = x.shape[0]
+    one_hot = jax.nn.one_hot(idx, m.n_experts, dtype=jnp.float32)  # (S,k,E)
+    f = one_hot.sum((0, 1)) / (S * m.top_k)            # fraction routed
+    P = probs.mean(0)                                  # mean router prob
+    aux = m.n_experts * jnp.sum(f * P)
+    return gates, idx, aux
+
+
+# ---------------------------------------------------------------------------
+# Sort-based dispatch apply
+# ---------------------------------------------------------------------------
+
+def _w(w, dtype):
+    """Resolve a (possibly int8-quantized) weight bank to compute dtype.
+
+    Serving quantization (beyond-paper §Perf): expert banks are ~90% of a
+    MoE checkpoint's bytes and memory-bound decode streams them every
+    step, so the serve path can store them as symmetric per-out-channel
+    int8 ({"q": int8 W, "s": fp scales}).  The dequant multiply fuses into
+    the consuming dot on TPU; HBM reads drop ~2x for the expert GEMMs.
+    """
+    if isinstance(w, dict):
+        return (w["q"].astype(dtype)
+                * w["s"].astype(dtype))
+    return w.astype(dtype)
+
+
+def quantize_bank(w, axis: int = -1):
+    """Symmetric int8 quantization along all dims except `axis` groups.
+
+    Returns {"q": int8, "s": scales} with s shaped like w but size-1 on
+    every dim except the last (per-out-channel scales).
+    """
+    amax = jnp.max(jnp.abs(w), axis=tuple(range(w.ndim - 1)), keepdims=True)
+    s = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w / s), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": s.astype(jnp.float32)}
+
+
+def _expert_ffn(p, xe, act: str):
+    """xe: (G, E, C, d) -> (G, E, C, d)."""
+    h = jnp.einsum("gecd,edf->gecf", xe, _w(p["w_up"], xe.dtype))
+    if act == "swiglu":
+        g = jnp.einsum("gecd,edf->gecf", xe, _w(p["w_gate"], xe.dtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("gecf,efd->gecd", h, _w(p["w_down"], xe.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Gather-only dispatch/combine with gather-only VJPs.
+#
+# The VJP of a gather is a scatter-add, and GSPMD replicates scattered
+# operands — the exact pathology the forward avoids.  But routing is a
+# permutation-with-drops: each token replica fills at most one (expert,
+# slot) and each slot is filled by at most one replica, so the transpose
+# of either gather is itself a gather through the inverse mapping.  These
+# custom_vjp wrappers keep *both* directions scatter-free.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _dispatch(xg, src_token, slot_valid, slot, keep, k):
+    """xg (G, Sg, d) -> xe_flat (G, E*C, d)."""
+    xe = jnp.take_along_axis(xg, src_token[..., None], axis=1)
+    return jnp.where(slot_valid[..., None], xe, 0)
+
+
+def _dispatch_fwd(xg, src_token, slot_valid, slot, keep, k):
+    return _dispatch(xg, src_token, slot_valid, slot, keep, k), \
+        (src_token, slot_valid, slot, keep, xg.shape)
+
+
+def _dispatch_bwd(k, res, d_xe):
+    src_token, slot_valid, slot, keep, xg_shape = res
+    # replica r (original order) reads d_xe at its slot; token grad sums
+    # its k replicas (contiguous: replica = token*k + j)
+    d_rep = jnp.take_along_axis(d_xe, slot[..., None], axis=1)
+    d_rep = jnp.where(keep[..., None], d_rep, 0)
+    G, Lg, d = d_rep.shape
+    d_xg = d_rep.reshape(G, Lg // k, k, d).sum(axis=2)
+    return (d_xg.astype(jnp.result_type(d_rep)), None, None, None, None)
+
+
+_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@jax.custom_vjp
+def _combine(ye_flat, slot, keep, src_replica, slot_valid):
+    """ye_flat (G, E*C, d) -> ys (G, Lg, d) in original replica order."""
+    ys = jnp.take_along_axis(ye_flat, slot[..., None], axis=1)
+    return jnp.where(keep[..., None], ys, 0)
+
+
+def _combine_fwd(ye_flat, slot, keep, src_replica, slot_valid):
+    return _combine(ye_flat, slot, keep, src_replica, slot_valid), \
+        (slot, keep, src_replica, slot_valid)
+
+
+def _combine_bwd(res, d_ys):
+    slot, keep, src_replica, slot_valid = res
+    d_ye = jnp.take_along_axis(d_ys, src_replica[..., None], axis=1)
+    d_ye = jnp.where(slot_valid[..., None], d_ye, 0)
+    return (d_ye, None, None, None, None)
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+def moe_apply(p, x, cfg, *, capacity: int = 0):
+    """MoE FFN with grouped (GShard-style) sort dispatch.
+
+    x: (S, d) flattened tokens.  Returns (y (S,d), aux_loss).
+
+    Tokens are split into N_GROUPS groups aligned with the data shards
+    (batch-major order, so group g lives entirely on token shard g); the
+    sort, capacity scatter and un-sort are then *local* per group —
+    GSPMD never moves the dispatch buffers across shards, and the expert
+    einsum is one batched matmul (the all-to-all, when experts are
+    sharded, happens inside that einsum's resharding, which is exactly
+    where a production MoE puts it).
+
+    capacity: per-expert per-group capacity; 0 derives it from
+    ``capacity_factor`` (ceil(cf * Lg / E), padded to a multiple of 8).
+    """
+    m = cfg.moe
+    S, d = x.shape
+    E, k = m.n_experts, m.top_k
+    gates, idx, aux = route(p["router"], x, cfg)
+
+    G = N_GROUPS if S % max(N_GROUPS, 1) == 0 else 1
+    Lg = S * k // G                                     # replicas per group
+
+    if capacity <= 0:
+        cap = int(m.capacity_factor * Lg / E) + 1
+        capacity = -(-cap // 8) * 8
+    C = capacity
+
+    # Scatter partitions poorly under GSPMD (it replicates the operand),
+    # so the dispatch is formulated entirely with gathers: both directions
+    # are take_along_axis along the local (per-group) token axis.
+    eid = idx.reshape(G, Lg)                            # group-major
+    order = jnp.argsort(eid, axis=-1, stable=True)      # (G, Lg) local sort
+    rank = jnp.argsort(order, axis=-1)                  # inverse permutation
+    one_hot = jax.nn.one_hot(eid, E, dtype=jnp.int32)   # (G, Lg, E)
+    counts = one_hot.sum(axis=1)                        # (G, E)
+    starts = jnp.cumsum(counts, axis=-1) - counts       # (G, E)
+
+    # forward: slot (e, c) pulls the c-th replica routed to expert e
+    e_of_slot = jnp.arange(E * C) // C                  # (E*C,) static
+    c_of_slot = jnp.arange(E * C) % C
+    sorted_idx = starts[:, e_of_slot] + c_of_slot[None]  # (G, E*C)
+    slot_valid = c_of_slot[None] < counts[:, e_of_slot]  # capacity+presence
+    src_replica = jnp.take_along_axis(
+        order, jnp.clip(sorted_idx, 0, Lg - 1), axis=-1)  # (G, E*C)
+    src_token = src_replica // k
+
+    # replica -> slot mapping (used by _dispatch's VJP and by _combine)
+    pos = rank - jnp.take_along_axis(starts, eid, axis=-1)  # (G, Lg)
+    keep = pos < C
+    slot = jnp.clip(eid * C + pos, 0, E * C - 1)
+
+    xg = _constrain(x.reshape(G, S // G, d), "DP", None, None)
+    dispatch = _shmap_gather(
+        lambda a, b, c, d2, e: _dispatch(a, b, c, d2, e, k), 5)
+    xe = dispatch(xg, src_token, slot_valid, slot, keep)
+    xe = _constrain(xe, "DP", None, None).reshape(G, E, C, d)
+
+    ye = _expert_ffn(p, xe, cfg.act)                    # (G, E, C, d)
+    ye = _constrain(ye, "DP", None, None, None)
+
+    combine = _shmap_gather(_combine, 5)
+    ys = combine(ye.reshape(G, E * C, d), slot, keep, src_replica,
+                 slot_valid)                            # (G, Lg, d)
+    ys = _constrain(ys, "DP", None, None)
+    y = (ys.reshape(S, k, d)
+         * gates[..., None].astype(ye.dtype)).sum(axis=1)
+
+    if "shared" in p:
+        sh = p["shared"]
+        h = jax.nn.silu(x @ sh["w_gate"].astype(x.dtype)) \
+            * (x @ sh["w_up"].astype(x.dtype))
+        y = y + h @ sh["w_down"].astype(x.dtype)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel MoE (beyond-paper §Perf path)
+#
+# The GSPMD-inferred baseline reshards the dispatched activation tensor
+# (tokens x k x cf x d — tens of GB) across the expert einsum's mixed
+# shardings, costing ~an all-gather of it per MoE layer per pass.  The
+# classical fix moves each token's activation exactly once in each
+# direction: shard experts on `model`, keep tokens on `data`, and
+# all-to-all (tokens -> owning expert rank) inside shard_map where
+# locality is explicit.  Per-device ICI traffic drops from O(full
+# dispatch tensor) to O(local tokens), ~an order of magnitude here.
+#
+# Used when MESH is set and n_experts % model-axis == 0 (deepseek 64e);
+# archs with E < model-axis (mixtral 8e on 16) keep the baseline path.
+# ---------------------------------------------------------------------------
+
+def moe_apply_expert_parallel(p, x, cfg, *, capacity: int = 0):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    m = cfg.moe
+    S, d = x.shape
+    E, k = m.n_experts, m.top_k
+    msize = MESH.shape["model"]
+    E_local = E // msize
+    G = N_GROUPS if S % max(N_GROUPS, 1) == 0 else 1
+    # tokens are split over BOTH data and model ranks before dispatch —
+    # otherwise every model rank of a data row dispatches the same tokens
+    # and expert work is duplicated msize times.
+    Sg = S // G
+    if Sg % msize != 0:
+        return moe_apply(p, x, cfg, capacity=capacity)
+    Sl = Sg // msize                  # tokens per device
+    Lg = Sl * k
+    if capacity <= 0:
+        cap = int(m.capacity_factor * Lg / E) + 1
+        capacity = -(-cap // 8) * 8
+    C = capacity
+    dp = DATA_AXES
+    model_axis = "model"
+
+    def local_fn(xg, router_w, w_gate, w_up, w_down, shared):
+        # xg (1, Sg, d/msize): the residual stream enters in its NATIVE
+        # sharding (tokens on data, d on model) so GSPMD inserts no
+        # boundary collective; the token/hidden redistribution is an
+        # explicit Ulysses-style all_to_all (Sg*d/msize bytes — MBs,
+        # vs the multi-GB residual all-gather GSPMD emitted when the
+        # boundary respeced tokens onto `model`; §Perf pair 1 iter 4).
+        x_dl = xg[0]                                     # (Sg, d_l)
+        d_l = x_dl.shape[-1]
+        xt = x_dl.reshape(msize, Sl, d_l)
+        xl = jax.lax.all_to_all(xt, model_axis, split_axis=0,
+                                concat_axis=2, tiled=True)[0]  # (Sl, d)
+        gates, idx, aux = route(router_w, xl, cfg)
+        aux = jax.lax.pmean(aux, dp if isinstance(dp, str) else dp[-1])
+
+        # local dispatch (same gather machinery, G=1)
+        eid = idx.reshape(1, Lg)
+        order = jnp.argsort(eid, axis=-1, stable=True)
+        rank_ = jnp.argsort(order, axis=-1)
+        counts = jax.nn.one_hot(eid, E, dtype=jnp.int32).sum(axis=1)
+        starts = jnp.cumsum(counts, axis=-1) - counts
+        e_of_slot = jnp.arange(E * C) // C
+        c_of_slot = jnp.arange(E * C) % C
+        sorted_idx = starts[:, e_of_slot] + c_of_slot[None]
+        slot_valid = c_of_slot[None] < counts[:, e_of_slot]
+        src_replica = jnp.take_along_axis(
+            order, jnp.clip(sorted_idx, 0, Lg - 1), axis=-1)
+        src_token = src_replica // k
+        pos = rank_ - jnp.take_along_axis(starts, eid, axis=-1)
+        keep = pos < C
+        slot = jnp.clip(eid * C + pos, 0, E * C - 1)
+
+        xe = _dispatch(xl[None], src_token, slot_valid, slot, keep, k)
+        xe = xe.reshape(E, C, d)
+
+        # tokens -> owning expert rank (split E, concat capacity)
+        xa = jax.lax.all_to_all(xe, model_axis, split_axis=0,
+                                concat_axis=1, tiled=True)  # (E_l, ms*C, d)
+        h = jnp.einsum("ecd,edf->ecf", xa, _w(w_up, xa.dtype))
+        if cfg.act == "swiglu":
+            g = jnp.einsum("ecd,edf->ecf", xa, _w(w_gate, xa.dtype))
+            h = jax.nn.silu(g) * h
+        else:
+            h = jax.nn.gelu(h)
+        ye = jnp.einsum("ecf,efd->ecd", h, _w(w_down, xa.dtype))
+        # results -> token owners
+        ye = jax.lax.all_to_all(ye, model_axis, split_axis=1,
+                                concat_axis=0, tiled=True)  # (E, C, d)
+
+        ys = _combine(ye.reshape(1, E * C, d), slot, keep, src_replica,
+                      slot_valid)[0]                     # (Lg, d)
+        y = (ys.reshape(Sl, k, d)
+             * gates[..., None].astype(ys.dtype)).sum(axis=1)
+        if shared is not None:
+            hs = jax.nn.silu(xl @ shared["w_gate"].astype(xl.dtype)) \
+                * (xl @ shared["w_up"].astype(xl.dtype))
+            y = y + hs @ shared["w_down"].astype(xl.dtype)
+        # inverse hidden<->token all_to_all back to the native sharding
+        yt = jax.lax.all_to_all(y.reshape(Sl, msize, d_l)[None],
+                                model_axis, split_axis=2, concat_axis=1,
+                                tiled=True)              # (1, Sg, 1, d_l)
+        return yt.reshape(1, Sg, d_l), aux[None]
+
+    shared = p.get("shared")
+    shared_spec = jax.tree.map(lambda _: P(), shared) \
+        if shared is not None else None
+    fn = shard_map(
+        local_fn, mesh=MESH,
+        in_specs=(P(dp, None, model_axis), P(),
+                  P(model_axis, None, None), P(model_axis, None, None),
+                  P(model_axis, None, None), shared_spec),
+        out_specs=(P(dp, None, model_axis), P(dp)),
+        check_rep=False)
+    y, aux = fn(x.reshape(G, Sg, d), p["router"], p["w_gate"], p["w_up"],
+                p["w_down"], shared)
+    return y.reshape(S, d), aux.mean()
+
+
+def moe_apply_auto(p, x, cfg, *, capacity: int = 0):
+    """Expert-parallel path when configured & divisible, else baseline."""
+    if MESH is not None and cfg.moe.n_experts % MESH.shape["model"] == 0:
+        return moe_apply_expert_parallel(p, x, cfg, capacity=capacity)
+    return moe_apply(p, x, cfg, capacity=capacity)
+
+
+# ---------------------------------------------------------------------------
+# Oracle (loop over experts, no capacity drop) — tests only
+# ---------------------------------------------------------------------------
+
+def moe_apply_dense(p, x, cfg):
+    """Reference: compute every expert on every token, mask by gates."""
+    m = cfg.moe
+    gates, idx, aux = route(p["router"], x, cfg)
+    S, d = x.shape
+    y = jnp.zeros((S, d), jnp.float32)
+    for e in range(m.n_experts):
+        h = x @ p["w_up"][e]
+        if cfg.act == "swiglu":
+            h = jax.nn.silu(x @ p["w_gate"][e]) * h
+        else:
+            h = jax.nn.gelu(h)
+        ye = h @ p["w_down"][e]
+        w_e = jnp.where(idx == e, gates, 0.0).sum(-1)   # (S,)
+        y = y + w_e[:, None] * ye.astype(jnp.float32)
+    if "shared" in p:
+        sh = p["shared"]
+        h = jax.nn.silu(x @ sh["w_gate"]) * (x @ sh["w_up"])
+        y = y + (h @ sh["w_down"]).astype(jnp.float32)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,240 @@
+"""RWKV6 ("Finch") mixer — data-dependent per-channel decay WKV.
+
+Recurrence per head (key dim hd_k == value dim hd_v == hd):
+    wkv_t = S_{t-1} + diag(u) k_t v_t^T          (bonus for current token)
+    y_t   = r_t^T wkv_t                          (1 x hd)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T        (w_t in (0,1), per channel)
+
+Data dependence (RWKV6): w_t derives from the token-shifted input through a
+low-rank MLP; r/k/v/g use learned token-shift mixing (we keep the shift but
+use full-rank projections for r/k/v/g — same compute shape, fewer moving
+parts; the *decay* data-dependence, Finch's actual contribution, is kept).
+
+Chunked evaluation for train/prefill: scan over chunks of Q tokens; within
+a chunk the pairwise term uses the factorized q' = r * exp(cumw_{t-1}),
+k' = k * exp(-cumw_j) trick.  exp(-cumw) grows with chunk length, so the
+per-step log-decay is clamped to >= LOG_W_MIN and chunks are kept short
+(cfg.ssm.chunk_size, 32 by default for rwkv) — with LOG_W_MIN = -2 and
+Q = 32 the worst-case factor is exp(64) < fp32 max.  The clamp is a mild
+modeling constraint (w >= 0.135/step) and is applied in both the chunked
+path and the recurrent oracle, so they agree exactly.
+
+State per layer: S (B,H,hd,hd) fp32 + token-shift tail x_prev (B,2,d)
+(index 0: time-mix shift, 1: channel-mix shift).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, group_norm_heads
+
+LOG_W_MIN = -2.0  # per-step decay floor (see module docstring)
+
+
+def _dims(cfg):
+    hd = cfg.ssm.head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def rwkv_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    H, hd = _dims(cfg)
+    ks = jax.random.split(key, 10)
+    lora = max(32, d // 64)
+    return {
+        # token-shift mix coefficients for r,k,v,g,w
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(dtype),
+        "wr": dense_init(ks[1], d, d, dtype),
+        "wk": dense_init(ks[2], d, d, dtype),
+        "wv": dense_init(ks[3], d, d, dtype),
+        "wg": dense_init(ks[4], d, d, dtype),
+        "wo": dense_init(ks[5], d, d, dtype),
+        # data-dependent decay: low-rank MLP  d -> lora -> d
+        "w1": dense_init(ks[6], d, lora, dtype),
+        "w2": dense_init(ks[7], lora, d, dtype, scale=0.1),
+        "w_bias": jnp.full((d,), -0.5, jnp.float32),
+        "u": (jax.random.normal(ks[8], (H, hd)) * 0.1).astype(jnp.float32),
+        "gn_w": jnp.ones((d,), dtype),
+        "gn_b": jnp.zeros((d,), dtype),
+    }
+
+
+def init_rwkv_state(cfg, batch: int, dtype=jnp.float32):
+    H, hd = _dims(cfg)
+    return {
+        "S": jnp.zeros((batch, H, hd, hd), dtype),
+        "x_prev": jnp.zeros((batch, 2, cfg.d_model), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Shared projections
+# ---------------------------------------------------------------------------
+
+def _proj(p, x, x_shift, cfg):
+    """x, x_shift: (B,T,d).  Returns r,k,v,g (B,T,H,hd), logw (B,T,H,hd) fp32."""
+    H, hd = _dims(cfg)
+    B, T, d = x.shape
+
+    def mix(i):
+        mu = p["mu"][i].astype(x.dtype)
+        return x * mu + x_shift * (1.0 - mu)
+
+    r = (mix(0) @ p["wr"].astype(x.dtype)).reshape(B, T, H, hd)
+    k = (mix(1) @ p["wk"].astype(x.dtype)).reshape(B, T, H, hd)
+    v = (mix(2) @ p["wv"].astype(x.dtype)).reshape(B, T, H, hd)
+    g = jax.nn.silu(mix(3) @ p["wg"].astype(x.dtype))
+    dd = jnp.tanh(mix(4).astype(jnp.float32) @ p["w1"].astype(jnp.float32)) \
+        @ p["w2"].astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(dd + p["w_bias"], -6.0, 2.0))   # (B,T,d) < 0
+    logw = jnp.clip(logw, LOG_W_MIN, -1e-4).reshape(B, T, H, hd)
+    return r, k, v, g, logw
+
+
+def _finish(p, y, g, cfg):
+    """y: (B,T,H,hd) fp32 -> output projection with group-norm + gate."""
+    H, hd = _dims(cfg)
+    B, T = y.shape[:2]
+    y = y.reshape(B, T, H * hd).astype(g.dtype)
+    y = group_norm_heads(p["gn_w"], p["gn_b"], y, H, cfg.norm_eps)
+    return (y * g) @ p["wo"].astype(g.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked scan (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _wkv_chunk(S, inp):
+    """One chunk.  S: (B,H,hd,hd) fp32; r,k,v (B,Q,H,hd); logw same; u (H,hd)."""
+    r, k, v, logw, u = inp
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    B, Q = r.shape[:2]
+    cum = jnp.cumsum(logw, axis=1)                       # (B,Q,H,hd) <= 0
+    cum_prev = cum - logw                                # exclusive cumsum
+    q_f = r * jnp.exp(cum_prev)                          # r_t * W_{t-1}
+    k_f = k * jnp.exp(-cum)                              # k_j / W_j
+    # strict-lower intra-chunk attention (j < t)
+    scores = jnp.einsum("bqhc,bthc->bhqt", q_f, k_f)
+    strict = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    scores = jnp.where(strict[None, None], scores, 0.0)
+    y = jnp.einsum("bhqt,bthv->bqhv", scores, v)
+    # bonus (current token)
+    bonus = jnp.einsum("bqhc,bqhc->bqh", r, u[None, None] * k)
+    y = y + bonus[..., None] * v
+    # inter-chunk: contribution of carried state
+    y = y + jnp.einsum("bqhc,bhcv->bqhv", q_f, S)
+    # state update: S' = diag(W_Q) S + sum_j diag(W_Q/W_j) k_j v_j^T
+    decay_to_end = jnp.exp(cum[:, -1:] - cum)            # (B,Q,H,hd)
+    S_new = S * jnp.exp(cum[:, -1])[..., None] \
+        + jnp.einsum("bthc,bthv->bhcv", k * decay_to_end, v)
+    return S_new, y
+
+
+def rwkv_apply_full(p, x, cfg, state=None) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence time-mix.  x: (B,T,d) -> (y (B,T,d), new state)."""
+    H, hd = _dims(cfg)
+    B, T, d = x.shape
+    if state is None:
+        state = init_rwkv_state(cfg, B)
+    x_shift = jnp.concatenate([state["x_prev"][:, 0:1].astype(x.dtype),
+                               x[:, :-1]], axis=1)
+    r, k, v, g, logw = _proj(p, x, x_shift, cfg)
+
+    Q = min(cfg.ssm.chunk_size, T)
+    pad = (-T) % Q
+    if pad:
+        # pad with identity steps: k = v = 0, logw = 0 (no state change)
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Q
+    u = p["u"]
+
+    def body(S, chunk):
+        return _wkv_chunk(S, chunk + (u,))
+
+    chunks = (
+        r.reshape(B, nc, Q, H, hd).swapaxes(0, 1),
+        k.reshape(B, nc, Q, H, hd).swapaxes(0, 1),
+        v.reshape(B, nc, Q, H, hd).swapaxes(0, 1),
+        logw.reshape(B, nc, Q, H, hd).swapaxes(0, 1),
+    )
+    S_final, ys = jax.lax.scan(body, state["S"].astype(jnp.float32), chunks)
+    y = ys.swapaxes(0, 1).reshape(B, Tp, H, hd)[:, :T]
+    out = _finish(p, y, g, cfg)
+    new_state = {"S": S_final,
+                 "x_prev": state["x_prev"].at[:, 0].set(
+                     x[:, -1].astype(state["x_prev"].dtype))}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode
+# ---------------------------------------------------------------------------
+
+def rwkv_decode_step(p, x, cfg, state) -> Tuple[jnp.ndarray, dict]:
+    """x: (B,1,d) -> (y (B,1,d), new state)."""
+    H, hd = _dims(cfg)
+    B = x.shape[0]
+    x_shift = state["x_prev"][:, 0:1].astype(x.dtype)
+    r, k, v, g, logw = _proj(p, x, x_shift, cfg)
+    r32, k32, v32 = (a[:, 0].astype(jnp.float32) for a in (r, k, v))
+    S = state["S"].astype(jnp.float32)                   # (B,H,hd,hd)
+    wkv = S + p["u"][None, :, :, None] * k32[..., None] * v32[..., None, :]
+    y = jnp.einsum("bhc,bhcv->bhv", r32, wkv)[:, None]   # (B,1,H,hd)
+    w = jnp.exp(logw[:, 0])                              # (B,H,hd)
+    S_new = S * w[..., None] + k32[..., None] * v32[..., None, :]
+    out = _finish(p, y, g, cfg)
+    new_state = {"S": S_new,
+                 "x_prev": state["x_prev"].at[:, 0].set(
+                     x[:, 0].astype(state["x_prev"].dtype))}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Channel mix (RWKV FFN with token shift)
+# ---------------------------------------------------------------------------
+
+def channel_mix_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": (jax.random.uniform(ks[0], (2, d)) * 0.5 + 0.25).astype(dtype),
+        "wk": dense_init(ks[1], d, cfg.d_ff, dtype),
+        "wv": dense_init(ks[2], cfg.d_ff, d, dtype),
+    }
+
+
+def channel_mix_apply(p, x, x_shift):
+    """x, x_shift: (B,T,d)."""
+    mu = p["mu"].astype(x.dtype)
+    xk = x * mu[0] + x_shift * (1.0 - mu[0])
+    h = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    return h @ p["wv"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Oracle: per-token recurrence (tests only)
+# ---------------------------------------------------------------------------
+
+def rwkv_apply_recurrent(p, x, cfg, state=None):
+    B, T, _ = x.shape
+    if state is None:
+        state = init_rwkv_state(cfg, B)
+    ys = []
+    for t in range(T):
+        y, state = rwkv_decode_step(p, x[:, t:t + 1], cfg, state)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), state

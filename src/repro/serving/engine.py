@@ -1,0 +1,259 @@
+"""Paged decode engine: step-synchronous batched decode with tree branching.
+
+The TPU-native stand-in for SGLang's continuous-batching server, scoped to
+what PRM tree search actually needs (step-level expand -> score -> prune):
+
+  * a static paged KV pool (repro.kvcache) shared by every live branch;
+  * ``prefill(tokens)``   — run the prompt, build its pages;
+  * ``branch(seq, n)``    — fork block tables (refcount++, CoW last page);
+  * ``decode(seq_ids, …)``— ONE jitted step decodes all live branches in
+    lock-step against the pool via block tables;
+  * free / stats          — physical vs logical page accounting (the
+    engine-level measurement behind Table 1's KV reduction).
+
+The decode step pads the live set to ``max_batch`` so the jit signature is
+stable.  Attention runs through the paged-attention path: the pure-jnp
+reference everywhere, or the Pallas kernel (interpret on CPU, Mosaic on
+TPU) when ``use_kernel=True``.
+
+Supports the dense/GQA families (the search LM + PRM of the paper are
+dense llama-style models); MoE/SSM serving goes through the unified
+``LM.decode_step`` contiguous path instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kvcache import KVPool, PageAllocator
+from repro.kvcache.pool import paged_attention_ref
+from repro.models.layers import mlp_apply, rms_norm
+from repro.models.layers import apply_rope, rope_angles
+
+
+@dataclass
+class EngineConfig:
+    n_pages: int = 512
+    page_size: int = 16
+    max_batch: int = 64
+    max_seq_len: int = 512
+    use_kernel: bool = False       # True: Pallas paged_attention
+
+
+class PagedEngine:
+    def __init__(self, model, params, ecfg: EngineConfig):
+        cfg = model.cfg
+        assert cfg.arch_type in ("dense", "vlm"), \
+            "paged engine serves attention archs"
+        self.model = model
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        # last physical page is the dump target for padded batch rows
+        self.dump_page = ecfg.n_pages - 1
+        self.alloc = PageAllocator(ecfg.n_pages - 1, ecfg.page_size)
+        L = cfg.n_layers
+        self.pool = KVPool(L, ecfg.n_pages, ecfg.page_size,
+                           cfg.n_kv_heads, cfg.head_dim,
+                           dtype=jnp.float32)
+        self.tokens: Dict[int, List[int]] = {}   # full token history
+        self.max_pages_per_seq = -(-ecfg.max_seq_len // ecfg.page_size)
+        self._decode_fn = self._build_decode_fn()
+        self._prefill_fn = self._build_prefill_fn()
+
+    # ------------------------------------------------------------------
+    # Stats (Table 1 / Fig. 2 measurements)
+    # ------------------------------------------------------------------
+    def kv_stats(self) -> Dict[str, int]:
+        return {
+            "physical_pages": self.alloc.used_pages,
+            "logical_pages": self.alloc.logical_pages,
+            "shared_pages": self.alloc.shared_pages(),
+        }
+
+    # ------------------------------------------------------------------
+    # Jitted model steps
+    # ------------------------------------------------------------------
+    def _build_prefill_fn(self):
+        cfg, model = self.cfg, self.model
+
+        def prefill(params, tokens, pages, slots, pool_k, pool_v):
+            """tokens (1,S); pages/slots (S,) physical targets."""
+            x, positions = model.embed_inputs(params, {"tokens": tokens})
+            gp = params["groups"][0]
+            L = cfg.n_layers
+            from repro.models import attention as A
+            for l in range(L):
+                blk = jax.tree.map(lambda a: a[l], gp)
+                h = rms_norm(blk["ln1"], x, cfg.norm_eps)
+                y, cache = A.attn_prefill(blk["attn"], h, cfg, positions,
+                                          cache_len=tokens.shape[1],
+                                          cache_dtype=pool_k.dtype)
+                pool_k = pool_k.at[l, pages, slots].set(cache["k"][0])
+                pool_v = pool_v.at[l, pages, slots].set(cache["v"][0])
+                x = x + y
+                h = rms_norm(blk["ln2"], x, cfg.norm_eps)
+                x = x + mlp_apply(blk["mlp"], h, cfg.act)
+            logits = model.logits(params, x[:, -1])
+            return logits, pool_k, pool_v
+
+        return jax.jit(prefill, donate_argnums=(4, 5))
+
+    def _build_decode_fn(self):
+        cfg, model = self.cfg, self.model
+        use_kernel = self.ecfg.use_kernel
+
+        def step(params, tokens, block_tables, lengths, pages, slots,
+                 active, pool_k, pool_v):
+            """One lock-step decode for the padded batch.
+
+            tokens (B,) previous tokens; lengths (B,) context length
+            (position of the new token); pages/slots (B,) write targets.
+            """
+            B = tokens.shape[0]
+            cdt = jnp.float32
+            x = params["embed"].astype(cdt)[tokens][:, None]   # (B,1,d)
+            gp = params["groups"][0]
+            scale = cfg.head_dim ** -0.5
+            for l in range(cfg.n_layers):
+                blk = jax.tree.map(lambda a: a[l], gp)
+                h = rms_norm(blk["ln1"], x, cfg.norm_eps)
+                ap = blk["attn"]
+                hd = cfg.head_dim
+                q = (h @ ap["wq"]).reshape(B, 1, cfg.n_heads, hd)
+                k = (h @ ap["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+                v = (h @ ap["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+                if cfg.qk_norm:
+                    q = rms_norm(ap["q_norm"], q, cfg.norm_eps)
+                    k = rms_norm(ap["k_norm"], k, cfg.norm_eps)
+                ang = rope_angles(lengths[:, None], hd, cfg.rope_theta, ())
+                q = apply_rope(q, ang)
+                k = apply_rope(k, ang)
+                pool_k = pool_k.at[l, pages, slots].set(k[:, 0])
+                pool_v = pool_v.at[l, pages, slots].set(v[:, 0])
+                if use_kernel:
+                    from repro.kernels import ops
+                    y = ops.paged_attention(
+                        q[:, 0], pool_k[l], pool_v[l], block_tables,
+                        lengths + 1, scale=scale)
+                else:
+                    y = paged_attention_ref(
+                        q[:, 0], pool_k[l], pool_v[l], block_tables,
+                        lengths + 1, scale=scale)
+                x = x + (y.reshape(B, 1, -1) @ ap["wo"])
+                h = rms_norm(blk["ln2"], x, cfg.norm_eps)
+                x = x + mlp_apply(blk["mlp"], h, cfg.act)
+            logits = model.logits(params, x[:, 0])
+            logits = jnp.where(active[:, None], logits, 0.0)
+            return logits, pool_k, pool_v
+
+        return jax.jit(step, donate_argnums=(7, 8))
+
+    # ------------------------------------------------------------------
+    # Public host API
+    # ------------------------------------------------------------------
+    def prefill(self, tokens: Sequence[int]) -> int:
+        """Run a prompt; returns seq_id.
+
+        Invariant: the pool holds KV for ``tokens[:-1]``; the last token is
+        *pending* — the next decode step computes its KV (at its reserved
+        slot) together with the next-token logits.  This keeps prefill,
+        branching and decode consistent: every token's KV is written
+        exactly once, by whichever step consumes it as input.
+        """
+        toks = list(int(t) for t in tokens)
+        assert toks, "empty prompt"
+        ctx = toks[:-1]
+        h, _ = self.alloc.new_seq(len(ctx))
+        self.tokens[h.seq_id] = toks
+        if ctx:
+            ps = self.ecfg.page_size
+            pages = np.repeat(h.block_table, ps)[: len(ctx)]
+            slots = np.tile(np.arange(ps), len(h.block_table))[: len(ctx)]
+            _, self.pool.k, self.pool.v = self._prefill_fn(
+                self.params, jnp.asarray([ctx], jnp.int32),
+                jnp.asarray(pages, jnp.int32), jnp.asarray(slots, jnp.int32),
+                self.pool.k, self.pool.v)
+        return h.seq_id
+
+    def branch(self, seq_id: int, n: int) -> List[int]:
+        handles = self.alloc.branch(seq_id, n)
+        for b in handles:
+            self.tokens[b.seq_id] = list(self.tokens[seq_id])
+        return [b.seq_id for b in handles]
+
+    def free(self, seq_id: int) -> None:
+        self.alloc.free_seq(seq_id)
+        self.tokens.pop(seq_id, None)
+
+    # ------------------------------------------------------------------
+    def decode(self, seq_ids: Sequence[int], n_tokens: int,
+               key, temperature: float = 1.0,
+               stop_tokens: Sequence[int] = ()) -> Dict[int, List[int]]:
+        """Decode up to n_tokens for each sequence, lock-step batched.
+
+        Stops a sequence early when a stop token is emitted (the stop
+        token is included in the returned step).  Returns new tokens per
+        seq_id.
+        """
+        from .sampler import sample_tokens
+        ecfg = self.ecfg
+        ids = list(seq_ids)
+        assert len(ids) <= ecfg.max_batch, (len(ids), ecfg.max_batch)
+        out: Dict[int, List[int]] = {i: [] for i in ids}
+        done = {i: False for i in ids}
+        stop = set(int(s) for s in stop_tokens)
+
+        for _ in range(n_tokens):
+            live = [i for i in ids if not done[i]]
+            if not live:
+                break
+            # reserve one slot per live sequence (may CoW)
+            copy_ops = []
+            for i in live:
+                copy_ops += self.alloc.append_tokens(i, 1)
+            self.pool.copy_pages(copy_ops)
+
+            B = ecfg.max_batch
+            T = self.max_pages_per_seq
+            tok = np.zeros(B, np.int32)
+            bt = np.full((B, T), -1, np.int32)
+            lens = np.zeros(B, np.int32)
+            pages = np.full(B, self.dump_page, np.int32)  # inactive -> dump
+            slots = np.zeros(B, np.int32)
+            act = np.zeros(B, bool)
+            for j, i in enumerate(ids):
+                if done[i]:
+                    continue
+                h = self.alloc.seqs[i]
+                hist = self.tokens[i]
+                tok[j] = hist[-1]
+                n_t = len(h.block_table)
+                bt[j, :n_t] = h.block_table
+                pos = h.length - 1          # slot reserved for the new token
+                lens[j] = pos
+                pages[j] = h.block_table[pos // ecfg.page_size]
+                slots[j] = pos % ecfg.page_size
+                act[j] = True
+
+            logits, self.pool.k, self.pool.v = self._decode_fn(
+                self.params, jnp.asarray(tok), jnp.asarray(bt),
+                jnp.asarray(lens), jnp.asarray(pages), jnp.asarray(slots),
+                jnp.asarray(act), self.pool.k, self.pool.v)
+            key, sub = jax.random.split(key)
+            new = np.asarray(sample_tokens(sub, logits, temperature))
+            for j, i in enumerate(ids):
+                if done[i] or not act[j]:
+                    continue
+                t = int(new[j])
+                self.tokens[i].append(t)
+                out[i].append(t)
+                if t in stop or len(self.tokens[i]) >= ecfg.max_seq_len:
+                    done[i] = True
+        return out

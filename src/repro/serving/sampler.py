@@ -1,0 +1,17 @@
+"""Token sampling."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("temperature",))
+def sample_tokens(key, logits, temperature: float = 1.0):
+    """logits (B, V) -> (B,) int32.  temperature<=0 means greedy."""
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)

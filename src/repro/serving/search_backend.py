@@ -1,0 +1,129 @@
+"""LM search backend: the real end-to-end driver behind the controllers.
+
+Wires the paged engine (search LM), a PRM (LM with value head) and a small
+encoder embedder into the ``repro.core.controllers.Backend`` protocol:
+
+  expand — branch the leaf's sequence (block-table fork, CoW) and decode
+           one reasoning step per branch (until the step delimiter / EOS);
+  score  — PRM reward at the trajectory's last position (paper §5.1 uses
+           the final PRM score of each step);
+  embed  — mean-pooled encoder state of the *last step's* tokens (§4.2);
+  answer — task-specific extractor over the finished trajectory.
+
+``on_step`` (called by run_search after pruning) frees the engine
+sequences of pruned leaves — this is where ETS's ILP decisions become
+physical page releases, and where ``kv_stats`` is sampled for the
+engine-level KV trace (the measured counterpart of the tree-level
+accounting in repro.core.tree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import SearchTree
+
+from .engine import PagedEngine
+
+
+@dataclass
+class BackendConfig:
+    step_token: int                # reasoning-step delimiter (e.g. '\n')
+    eos_token: int
+    max_step_tokens: int = 48
+    max_depth: int = 16
+    temperature: float = 1.0
+
+
+class LMBackend:
+    def __init__(self, engine: PagedEngine, prm_model, prm_params,
+                 embed_model, embed_params, bcfg: BackendConfig,
+                 answer_fn: Callable[[List[int]], Optional[Any]],
+                 seed: int = 0):
+        self.engine = engine
+        self.prm_model = prm_model
+        self.prm_params = prm_params
+        self.embed_model = embed_model
+        self.embed_params = embed_params
+        self.bcfg = bcfg
+        self.answer_fn = answer_fn
+        self.key = jax.random.key(seed)
+        self.kv_trace: List[Dict[str, int]] = []
+        self._score_fn = jax.jit(
+            lambda p, toks: prm_model.reward(p, {"tokens": toks}))
+        self._embed_fn = jax.jit(
+            lambda p, toks: embed_model.hidden(p, {"tokens": toks}))
+
+    # ------------------------------------------------------------------
+    def start(self, prompt_tokens: Sequence[int]) -> SearchTree:
+        sid = self.engine.prefill(prompt_tokens)
+        return SearchTree(root_tokens=len(prompt_tokens),
+                          root_payload={"seq_id": sid, "tokens": []})
+
+    def _next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    # -- Backend protocol --------------------------------------------------
+    def expand(self, tree: SearchTree, leaf: int, n: int) -> List[int]:
+        node = tree.node(leaf)
+        if node.depth >= self.bcfg.max_depth:
+            return []
+        sid = node.payload["seq_id"]
+        branch_ids = self.engine.branch(sid, n)
+        outs = self.engine.decode(
+            branch_ids, self.bcfg.max_step_tokens, self._next_key(),
+            temperature=self.bcfg.temperature,
+            stop_tokens=(self.bcfg.step_token, self.bcfg.eos_token))
+        kids = []
+        for bid in branch_ids:
+            toks = outs[bid]
+            full = self.engine.tokens[bid]
+            ans = self.answer_fn(full)
+            finished = (bool(toks) and toks[-1] == self.bcfg.eos_token) \
+                or ans is not None \
+                or node.depth + 1 >= self.bcfg.max_depth \
+                or len(full) >= self.engine.ecfg.max_seq_len - \
+                self.bcfg.max_step_tokens
+            kid = tree.add(leaf, n_tokens=len(toks), finished=finished,
+                           payload={"seq_id": bid, "tokens": toks,
+                                    "answer": ans})
+            kids.append(kid)
+        return kids
+
+    def score(self, tree: SearchTree, node: int) -> float:
+        sid = tree.node(node).payload["seq_id"]
+        toks = jnp.asarray([self.engine.tokens[sid]], jnp.int32)
+        r = self._score_fn(self.prm_params, toks)
+        return float(r[0, -1])
+
+    def embed(self, tree: SearchTree, node: int) -> np.ndarray:
+        step = tree.node(node).payload["tokens"]
+        if not step:
+            return np.zeros(self.embed_model.cfg.d_model, np.float32)
+        toks = jnp.asarray([step], jnp.int32)
+        h = self._embed_fn(self.embed_params, toks)
+        return np.asarray(h[0].mean(axis=0), np.float32)
+
+    def answer(self, tree: SearchTree, leaf: int) -> Any:
+        return tree.node(leaf).payload.get("answer")
+
+    # -- lifecycle -----------------------------------------------------
+    def on_step(self, tree: SearchTree, live: Sequence[int]) -> None:
+        """Free engine sequences of pruned/finished leaves; sample stats."""
+        # Only live leaves need engine sequences: interior nodes' pages
+        # stay alive through their descendants' block-table refcounts.
+        keep = set()
+        for leaf in live:
+            pl = tree.node(leaf).payload
+            if pl and "seq_id" in pl:
+                keep.add(pl["seq_id"])
+        for sid in list(self.engine.alloc.seqs):
+            if sid not in keep:
+                self.engine.free(sid)
+        self.kv_trace.append(self.engine.kv_stats())

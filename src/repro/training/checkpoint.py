@@ -1,0 +1,48 @@
+"""Flat-npz checkpointing for param/optimizer pytrees.
+
+Paths are '/'-joined pytree keys; arrays are stored verbatim.  No pickle:
+loads are safe on untrusted files and stable across refactors as long as
+tree structure is unchanged.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (shapes must match)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+
+    def build(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: build(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            vals = [build(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+            return type(tree)(vals) if isinstance(tree, tuple) else vals
+        arr = data[prefix[:-1]]
+        assert arr.shape == tuple(tree.shape), (prefix, arr.shape, tree.shape)
+        return jax.numpy.asarray(arr, dtype=tree.dtype)
+
+    return build(like)

@@ -1,0 +1,83 @@
+"""AdamW + cosine schedule, pure JAX (no optax dependency).
+
+State is a pytree mirroring params: {m, v} fp32 + scalar step.  The
+update is jit-friendly and pjit-shardable (m/v inherit the params'
+PartitionSpecs in the distributed train step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    warmup_steps: int = 50
+    total_steps: int = 1000
+    min_lr_frac: float = 0.1
+    grad_clip: float = 1.0
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    """Warmup + cosine decay to min_lr_frac * lr."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac * cfg.lr + (1 - cfg.min_lr_frac) * cfg.lr \
+        * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree))
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state
+                 ) -> Tuple[Any, dict]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = cosine_lr(cfg, step)
+    b1c = 1.0 - cfg.beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.beta2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v2 = cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g)
+        mh = m2 / b1c
+        vh = v2 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,126 @@
+"""End-to-end: LM backend (paged engine + PRM + embedder) driving the
+unified search controllers — the full serving stack in miniature."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ETSConfig, SearchConfig, run_search
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, PagedEngine
+from repro.serving.search_backend import BackendConfig, LMBackend
+from repro.training import TrainConfig, train_lm, train_prm
+from repro.training.task import (ArithmeticTask, EOS, NEWLINE, VOCAB_SIZE,
+                                 encode)
+
+
+@pytest.fixture(scope="module")
+def stack():
+    """Untrained tiny LM/PRM/embedder — structure tests only."""
+    lm_cfg = dataclasses.replace(get_config("tiny-lm"),
+                                 vocab_size=VOCAB_SIZE, n_layers=2,
+                                 d_model=128, n_heads=4, n_kv_heads=2,
+                                 d_ff=256)
+    lm = build_model(lm_cfg, remat=False)
+    lm_params = lm.init(jax.random.key(0))
+    prm = build_model(lm_cfg, with_value_head=True, remat=False)
+    prm_params = prm.init(jax.random.key(1))
+    emb_cfg = dataclasses.replace(get_config("tiny-embedder"),
+                                  vocab_size=VOCAB_SIZE)
+    emb = build_model(emb_cfg, remat=False)
+    emb_params = emb.init(jax.random.key(2))
+    return (lm, lm_params), (prm, prm_params), (emb, emb_params)
+
+
+def make_backend(stack, seed=0, width=4):
+    (lm, lm_params), (prm, prm_params), (emb, emb_params) = stack
+    engine = PagedEngine(lm, lm_params, EngineConfig(
+        n_pages=512, page_size=8, max_batch=width * 2, max_seq_len=120))
+    return LMBackend(
+        engine, prm, prm_params, emb, emb_params,
+        BackendConfig(step_token=NEWLINE, eos_token=EOS,
+                      max_step_tokens=10, max_depth=5),
+        answer_fn=ArithmeticTask.extract_answer, seed=seed)
+
+
+@pytest.mark.parametrize("method", ["rebase", "ets", "beam"])
+def test_lm_backend_search_runs(stack, method):
+    backend = make_backend(stack, width=4)
+    tree = backend.start(encode("Q3+4\n"))
+    scfg = SearchConfig(method=method, width=4, max_steps=5,
+                        ets=ETSConfig(lambda_b=1.0, lambda_d=1.0,
+                                      cluster_threshold=0.2))
+    res = run_search(backend, scfg, tree=tree)
+    assert res.steps >= 1
+    assert len(res.tree.nodes) > 1
+    # engine accounting stayed coherent throughout
+    backend.engine.alloc.check_invariants()
+    assert backend.kv_trace, "engine KV stats sampled per step"
+
+
+def test_backend_scoring_and_embedding(stack):
+    # multi-page prompt so the shared prefix spans full (shareable) pages —
+    # a prompt shorter than one page is privatized by the first CoW
+    backend = make_backend(stack)
+    tree = backend.start(encode("Q1+2*3-4*5+6-7\n"))
+    kids = backend.expand(tree, 0, 3)
+    assert len(kids) == 3
+    for kid in kids:
+        r = backend.score(tree, kid)
+        assert 0.0 <= r <= 1.0
+        e = backend.embed(tree, kid)
+        assert e.shape == (backend.embed_model.cfg.d_model,)
+    # all branches share the prompt pages
+    stats = backend.engine.kv_stats()
+    assert stats["logical_pages"] > stats["physical_pages"]
+
+
+def test_backend_frees_pruned_sequences(stack):
+    backend = make_backend(stack)
+    tree = backend.start(encode("Q5*2\n"))
+    kids = backend.expand(tree, 0, 4)
+    n_before = len(backend.engine.alloc.seqs)
+    backend.on_step(tree, kids[:1])     # prune 3 of 4
+    assert len(backend.engine.alloc.seqs) == 1
+    backend.engine.alloc.check_invariants()
+
+
+@pytest.mark.slow
+def test_trained_e2e_ets_beats_chance():
+    task = ArithmeticTask(n_ops=2, seq_len=48)
+    lm_cfg = dataclasses.replace(get_config("tiny-lm"),
+                                 vocab_size=VOCAB_SIZE)
+    lm = build_model(lm_cfg, remat=False)
+    lm_params, _ = train_lm(lm, lm.init(jax.random.key(0)), task,
+                            TrainConfig(steps=250, batch=32,
+                                        log_every=10 ** 9))
+    prm_cfg = dataclasses.replace(lm_cfg, n_layers=2)
+    prm = build_model(prm_cfg, with_value_head=True, remat=False)
+    prm_params, _ = train_prm(prm, prm.init(jax.random.key(1)), task,
+                              TrainConfig(steps=250, batch=32,
+                                          log_every=10 ** 9))
+    emb_cfg = dataclasses.replace(get_config("tiny-embedder"),
+                                  vocab_size=VOCAB_SIZE)
+    emb = build_model(emb_cfg, remat=False)
+    emb_params = emb.init(jax.random.key(2))
+
+    rng = np.random.default_rng(5)
+    correct = 0
+    n = 6
+    for i in range(n):
+        prompt, _, ans = task.sample_problem(rng)
+        engine = PagedEngine(lm, lm_params, EngineConfig(
+            n_pages=1024, page_size=8, max_batch=16, max_seq_len=160))
+        backend = LMBackend(
+            engine, prm, prm_params, emb, emb_params,
+            BackendConfig(step_token=NEWLINE, eos_token=EOS,
+                          max_step_tokens=12, max_depth=6),
+            answer_fn=ArithmeticTask.extract_answer, seed=100 + i)
+        tree = backend.start(encode(prompt))
+        res = run_search(backend,
+                         SearchConfig(method="ets", width=8, max_steps=6),
+                         tree=tree)
+        correct += int(res.answer == ans)
+    assert correct >= 2   # >> 1/10 chance on mod-10 answers

@@ -1,0 +1,163 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.tree_attention import tree_attention
+from repro.kernels.ref import (flash_prefill_ref, paged_attention_ref,
+                               tree_attention_ref)
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged_attention
+# ---------------------------------------------------------------------------
+
+PAGED_CASES = [
+    # B, H, K, hd, page_size, P, T
+    (2, 4, 2, 32, 8, 16, 4),
+    (3, 8, 8, 64, 16, 32, 5),
+    (1, 4, 1, 128, 8, 8, 3),
+    (4, 8, 4, 64, 32, 16, 2),
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_matches_ref(case, dtype):
+    B, H, K, hd, S, P, T = case
+    kp, vp = _rand((P, S, K, hd), dtype), _rand((P, S, K, hd), dtype)
+    q = _rand((B, H, hd), dtype)
+    bt = np.full((B, T), -1, np.int32)
+    lens = np.zeros(B, np.int32)
+    for b in range(B):
+        n = int(RNG.integers(1, T + 1))
+        bt[b, :n] = RNG.choice(P, n, replace=False)
+        lens[b] = int(RNG.integers(1, n * S + 1))
+    bt, lens = jnp.asarray(bt), jnp.asarray(lens)
+    out = paged_attention(q, kp, vp, bt, lens, scale=hd ** -0.5,
+                          interpret=True)
+    ref = paged_attention_ref(q, kp, vp, bt, lens, scale=hd ** -0.5)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_attention_single_token_context():
+    B, H, K, hd, S, P, T = 2, 4, 2, 32, 8, 8, 2
+    kp, vp = _rand((P, S, K, hd)), _rand((P, S, K, hd))
+    q = _rand((B, H, hd))
+    bt = jnp.asarray([[0, -1], [1, -1]], jnp.int32)
+    lens = jnp.asarray([1, 1], jnp.int32)
+    out = paged_attention(q, kp, vp, bt, lens, scale=hd ** -0.5)
+    ref = paged_attention_ref(q, kp, vp, bt, lens, scale=hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tree_attention
+# ---------------------------------------------------------------------------
+
+TREE_CASES = [
+    (4, 4, 2, 32, 8, 16, 5),
+    (8, 8, 4, 64, 16, 32, 7),
+    (2, 2, 2, 128, 8, 8, 3),
+]
+
+
+@pytest.mark.parametrize("case", TREE_CASES)
+def test_tree_attention_matches_ref(case):
+    B, H, K, hd, S, P, N = case
+    kp, vp = _rand((P, S, K, hd)), _rand((P, S, K, hd))
+    q = _rand((B, H, hd))
+    pl = jnp.asarray(RNG.choice(P, N, replace=False), jnp.int32)
+    mask = np.zeros((N, B), np.int8)
+    mask[0] = 1                        # shared root page
+    for b in range(B):
+        for n in range(1, N):
+            mask[n, b] = RNG.random() < 0.5
+    lens = jnp.asarray(RNG.integers(1, S + 1, N), jnp.int32)
+    out = tree_attention(q, kp, vp, pl, jnp.asarray(mask), lens,
+                         scale=hd ** -0.5, interpret=True)
+    ref = tree_attention_ref(q, kp, vp, pl, jnp.asarray(mask), lens,
+                             scale=hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_tree_attention_equals_paged_for_disjoint_paths():
+    """With no sharing, tree attention == per-sequence paged attention."""
+    B, H, K, hd, S = 3, 4, 2, 32, 8
+    P = 6
+    kp, vp = _rand((P, S, K, hd)), _rand((P, S, K, hd))
+    q = _rand((B, H, hd))
+    # leaf b owns pages {2b, 2b+1}
+    pl = jnp.arange(6, dtype=jnp.int32)
+    mask = np.zeros((6, B), np.int8)
+    for b in range(B):
+        mask[2 * b, b] = mask[2 * b + 1, b] = 1
+    lens = jnp.full((6,), S, jnp.int32)
+    out_tree = tree_attention(q, kp, vp, pl, jnp.asarray(mask), lens,
+                              scale=hd ** -0.5)
+    bt = jnp.asarray([[0, 1], [2, 3], [4, 5]], jnp.int32)
+    out_paged = paged_attention_ref(q, kp, vp, bt,
+                                    jnp.full((B,), 2 * S, jnp.int32),
+                                    scale=hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out_tree), np.asarray(out_paged),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_prefill
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, S, H, K, hd, causal, window, bq, bk
+    (2, 128, 4, 2, 32, True, 0, 64, 64),
+    (1, 256, 8, 4, 64, True, 64, 64, 64),
+    (2, 64, 4, 4, 32, False, 0, 32, 32),
+    (1, 128, 2, 1, 128, True, 0, 128, 64),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_prefill_matches_ref(case):
+    B, S, H, K, hd, causal, window, bq, bk = case
+    q = _rand((B, S, H, hd))
+    k = _rand((B, S, K, hd))
+    v = _rand((B, S, K, hd))
+    out = flash_prefill(q, k, v, scale=hd ** -0.5, causal=causal,
+                        window=window, block_q=bq, block_k=bk,
+                        interpret=True)
+    ref = flash_prefill_ref(q, k, v, scale=hd ** -0.5, causal=causal,
+                            window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# blocked (pure-JAX flash) attention used by the models at long S
+# ---------------------------------------------------------------------------
+
+def test_blocked_attention_matches_dense():
+    from repro.models.attention import (blocked_attention, make_mask,
+                                        masked_attention)
+    B, S, H, K, hd = 2, 256, 4, 2, 32
+    q, k, v = _rand((B, S, H, hd)), _rand((B, S, K, hd)), _rand((B, S, K, hd))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    out = blocked_attention(q, k, v, pos, pos, scale=hd ** -0.5,
+                            causal=True, window=0, block_q=64, block_k=64)
+    ref = masked_attention(q, k, v, make_mask(pos, pos, causal=True),
+                           scale=hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,151 @@
+"""Paged KV cache invariants (hypothesis property tests) + engine e2e."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.kvcache import PageAllocator
+from repro.kvcache.allocator import OutOfPages
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, PagedEngine
+
+
+# ---------------------------------------------------------------------------
+# Allocator property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(
+    st.one_of(
+        st.tuples(st.just("new"), st.integers(0, 40)),
+        st.tuples(st.just("append"), st.integers(1, 30)),
+        st.tuples(st.just("branch"), st.integers(1, 3)),
+        st.tuples(st.just("free"), st.integers(0, 10)),
+    ), min_size=1, max_size=40))
+def test_allocator_invariants_random_ops(ops):
+    """Refcounts always equal table references; freeing returns pages."""
+    a = PageAllocator(n_pages=256, page_size=16)
+    live = []
+    rng = np.random.default_rng(0)
+    for op, arg in ops:
+        try:
+            if op == "new":
+                h, _ = a.new_seq(arg)
+                live.append(h.seq_id)
+            elif op == "append" and live:
+                a.append_tokens(live[int(rng.integers(len(live)))], arg)
+            elif op == "branch" and live:
+                bs = a.branch(live[int(rng.integers(len(live)))], arg)
+                live.extend(b.seq_id for b in bs)
+            elif op == "free" and live:
+                sid = live.pop(int(rng.integers(len(live))))
+                a.free_seq(sid)
+        except OutOfPages:
+            pass
+        a.check_invariants()
+    for sid in live:
+        a.free_seq(sid)
+    assert a.used_pages == 0
+    a.check_invariants()
+
+
+def test_branch_shares_pages_and_cow_splits():
+    a = PageAllocator(64, 16)
+    h, _ = a.new_seq(40)           # 3 pages, last partially full (8 slots)
+    (b,) = a.branch(h.seq_id, 1)
+    assert a.used_pages == 3
+    assert a.logical_pages == 6
+    ops = a.append_tokens(b.seq_id, 1)
+    assert len(ops) == 1           # CoW of the partial page
+    assert ops[0].n_valid == 8
+    assert a.used_pages == 4
+    # parent appends now: its last page is exclusively owned again
+    ops2 = a.append_tokens(h.seq_id, 1)
+    assert ops2 == []
+
+
+def test_full_page_branch_no_cow():
+    a = PageAllocator(64, 16)
+    h, _ = a.new_seq(32)           # exactly 2 full pages
+    (b,) = a.branch(h.seq_id, 1)
+    ops = a.append_tokens(b.seq_id, 1)
+    assert ops == []               # new page allocated, nothing copied
+    assert a.used_pages == 3
+
+
+def test_out_of_pages_raises():
+    a = PageAllocator(4, 16)
+    with pytest.raises(OutOfPages):
+        a.new_seq(100)
+
+
+# ---------------------------------------------------------------------------
+# Engine vs contiguous-cache reference
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = get_config("tiny-lm")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    return model, params
+
+
+def test_engine_greedy_matches_reference(tiny_lm):
+    model, params = tiny_lm
+    eng = PagedEngine(model, params, EngineConfig(
+        n_pages=128, page_size=8, max_batch=8, max_seq_len=256))
+    prompt = list(np.random.default_rng(0).integers(0, 64, 20))
+    sid = eng.prefill(prompt)
+    out = eng.decode([sid], 10, jax.random.key(42), temperature=0.0)
+
+    lg, cache = model.prefill(
+        params, {"tokens": jnp.asarray([prompt[:-1]], jnp.int32)},
+        cache_len=64)
+    toks = [prompt[-1]]
+    ref = []
+    for _ in range(10):
+        lg, cache = model.decode_step(
+            params, jnp.asarray([[toks[-1]]], jnp.int32), cache)
+        nxt = int(jnp.argmax(lg[0]))
+        ref.append(nxt)
+        toks.append(nxt)
+    assert out[sid] == ref
+
+
+def test_engine_branching_shares_and_diverges(tiny_lm):
+    model, params = tiny_lm
+    eng = PagedEngine(model, params, EngineConfig(
+        n_pages=128, page_size=8, max_batch=8, max_seq_len=256))
+    sid = eng.prefill(list(range(1, 18)))
+    b1, b2 = eng.branch(sid, 2)
+    stats0 = eng.kv_stats()
+    assert stats0["logical_pages"] > stats0["physical_pages"]
+    # greedy: both branches continue identically
+    out = eng.decode([b1, b2], 6, jax.random.key(0), temperature=0.0)
+    assert out[b1] == out[b2]
+    # temperature: branches may diverge but caches stay consistent
+    eng.decode([b1, b2], 6, jax.random.key(1), temperature=1.0)
+    eng.alloc.check_invariants()
+    eng.free(sid)
+    eng.free(b1)
+    eng.free(b2)
+    assert eng.alloc.used_pages == 0
+
+
+def test_engine_stop_token(tiny_lm):
+    model, params = tiny_lm
+    eng = PagedEngine(model, params, EngineConfig(
+        n_pages=64, page_size=8, max_batch=4, max_seq_len=128))
+    sid = eng.prefill([1, 2, 3])
+    out = eng.decode([sid], 50, jax.random.key(0), temperature=1.0,
+                     stop_tokens=range(0, 64, 2))  # half the vocab stops
+    toks = out[sid]
+    assert len(toks) <= 50
+    if len(toks) < 50:
+        assert toks[-1] % 2 == 0
+        assert all(t % 2 == 1 for t in toks[:-1])

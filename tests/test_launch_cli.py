@@ -1,0 +1,46 @@
+"""Launcher CLIs exercised in subprocesses (they mutate XLA device state,
+so they must not run in the test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+def _run(args, timeout=600):
+    return subprocess.run(
+        [sys.executable, "-m"] + args, cwd=REPO, env=ENV,
+        capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_dryrun_cli_lowers_on_production_mesh(tmp_path):
+    r = _run(["repro.launch.dryrun", "--arch", "llama3.2-1b",
+              "--shape", "decode_32k", "--out", str(tmp_path)])
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.load(open(tmp_path / "llama3.2-1b__decode_32k__sp.json"))
+    assert rec["status"] == "ok"
+    assert rec["memory"]["peak_bytes_est"] > 0
+    assert rec["roofline"]["bottleneck"] in ("compute", "memory",
+                                             "collective")
+
+
+@pytest.mark.slow
+def test_dryrun_cli_respects_skip_policy(tmp_path):
+    r = _run(["repro.launch.dryrun", "--arch", "hubert-xlarge",
+              "--shape", "decode_32k", "--out", str(tmp_path)])
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.load(open(tmp_path / "hubert-xlarge__decode_32k__sp.json"))
+    assert rec["status"] == "skip"
+
+
+def test_report_cli_runs():
+    if not os.path.isdir(os.path.join(REPO, "experiments", "dryrun")):
+        pytest.skip("no recorded dryruns")
+    r = _run(["repro.analysis.report"], timeout=120)
+    assert r.returncode == 0
+    assert "Roofline" in r.stdout
