@@ -1,16 +1,24 @@
-"""Table 2 reproduction: measured serving throughput, REBASE vs ETS.
+"""Table 2 reproduction: measured serving throughput, REBASE vs ETS,
+serial vs batched search steps.
 
 Runs the *real* stack end to end — tiny trained LM, paged KV pool with
 refcounted tree sharing, lock-step batched decode — and measures
 
   * decoded tokens / wall-second (throughput),
+  * decode streams opened per search step (1.0 on the batched path while
+    the branch count fits ``max_batch``; one per live leaf on the serial
+    path),
   * average physical pages held (the true KV footprint),
   * accuracy on the arithmetic task.
 
-The paper reports 1.4x throughput from 1.8x KV reduction on H100s behind
-SGLang; at tiny-CPU scale the wall-clock gain is dominated by the smaller
-decode batches ETS schedules (fewer live branches per step), while the
-page accounting shows the memory effect directly.
+The serial path is the pre-batching orchestration (one ``engine.decode``
+per leaf, one PRM/embedder call per candidate, each jit signature keyed
+on raw sequence length); the batched path issues one decode stream and
+one padded-bucket PRM call per step.  The paper reports 1.4x throughput
+from 1.8x KV reduction on H100s behind SGLang; at tiny-CPU scale the
+wall-clock gain comes from collapsing per-leaf decode calls and from the
+bounded jit-signature set, while the page accounting shows the memory
+effect directly.
 """
 import dataclasses
 import time
@@ -48,44 +56,76 @@ def run(train_steps: int = 150, n_problems: int = 6, width: int = 12):
 
     out = {"rows": []}
     print(f"\n== Table 2: measured engine throughput (width={width}) ==")
-    print(f"{'method':8s} {'acc':>5s} {'tok/s':>7s} {'phys pages':>10s} "
-          f"{'KV red.':>8s}")
+    print(f"{'method':8s} {'path':8s} {'acc':>5s} {'tok/s':>8s} "
+          f"{'dec/step':>8s} {'phys pages':>10s} {'KV red.':>8s}")
     base_pages = None
     rng = np.random.default_rng(123)
     problems = [task.sample_problem(rng) for _ in range(n_problems)]
     for method in ["rebase", "ets"]:
-        correct, pages, toks = 0, [], 0
-        t0 = time.time()
-        for i, (prompt, _, ans) in enumerate(problems):
+        for batched in [False, True]:
+            path = "batched" if batched else "serial"
+            # One engine + backend per configuration: jit caches persist
+            # across problems and the warmup problem compiles the
+            # decode/prefill steps, so the shared machinery is
+            # steady-state.  The serial path still pays per-length PRM /
+            # embedder recompiles inside the timed loop — that unbounded
+            # signature set is inherent to that path and part of what
+            # this table measures (the batched path's buckets compile
+            # once at warmup).
             engine = PagedEngine(lm, lm_params, EngineConfig(
-                n_pages=2048, page_size=8, max_batch=max(width * 2, 32),
-                max_seq_len=200))
+                n_pages=2048, page_size=8,
+                max_batch=max(width * 2, 32), max_seq_len=200))
             backend = LMBackend(
                 engine, prm, prm_params, emb, emb_params,
                 BackendConfig(step_token=NEWLINE, eos_token=EOS,
                               max_step_tokens=12, max_depth=8),
-                answer_fn=ArithmeticTask.extract_answer, seed=500 + i)
-            tree = backend.start(encode(prompt))
+                answer_fn=ArithmeticTask.extract_answer, seed=500)
             scfg = SearchConfig(
-                method=method, width=width, max_steps=8,
+                method=method, width=width, max_steps=8, batched=batched,
                 ets=ETSConfig(lambda_b=2.0, lambda_d=1.0,
                               cluster_threshold=0.15))
-            res = run_search(backend, scfg, tree=tree)
-            correct += int(res.answer == ans)
-            toks += sum(n.n_tokens for n in res.tree.nodes[1:])
-            if backend.kv_trace:
-                pages.append(np.mean([t["physical_pages"]
-                                      for t in backend.kv_trace]))
-        wall = time.time() - t0
-        avg_pages = float(np.mean(pages or [0]))
-        if base_pages is None:
-            base_pages = avg_pages
-        row = {"method": method, "acc": correct / n_problems,
-               "tok_per_s": toks / wall, "phys_pages": avg_pages,
-               "kv_red": base_pages / max(avg_pages, 1e-9)}
-        out["rows"].append(row)
-        print(f"{method:8s} {row['acc']:5.2f} {row['tok_per_s']:7.1f} "
-              f"{row['phys_pages']:10.1f} {row['kv_red']:7.2f}x")
+
+            def solve(prompt):
+                engine.reset()
+                tree = backend.start(encode(prompt))
+                return run_search(backend, scfg, tree=tree)
+
+            solve(problems[0][0])          # warmup: compile everything
+            correct = 0
+            engine.n_decoded_tokens = engine.n_decode_calls = 0
+            backend.kv_trace.clear()
+            steps = 0
+            t0 = time.time()
+            for prompt, _, ans in problems:
+                res = solve(prompt)
+                correct += int(res.answer == ans)
+                steps += res.steps
+            wall = time.time() - t0
+            toks = engine.n_decoded_tokens
+            calls = engine.n_decode_calls
+            avg_pages = float(np.mean(
+                [t["physical_pages"] for t in backend.kv_trace] or [0]))
+            if base_pages is None:
+                base_pages = avg_pages
+            row = {"method": method, "path": path,
+                   "acc": correct / n_problems,
+                   "tok_per_s": toks / wall,
+                   "decode_calls_per_step": calls / max(steps, 1),
+                   "phys_pages": avg_pages,
+                   "kv_red": base_pages / max(avg_pages, 1e-9),
+                   "wall_s": wall}
+            out["rows"].append(row)
+            print(f"{method:8s} {path:8s} {row['acc']:5.2f} "
+                  f"{row['tok_per_s']:8.1f} "
+                  f"{row['decode_calls_per_step']:8.2f} "
+                  f"{row['phys_pages']:10.1f} {row['kv_red']:7.2f}x")
+    sp = {(r["method"], r["path"]): r for r in out["rows"]}
+    for method in ["rebase", "ets"]:
+        s, b = sp[(method, "serial")], sp[(method, "batched")]
+        print(f"-> {method}: batched path {b['tok_per_s'] / s['tok_per_s']:.2f}x "
+              f"tokens/s of serial "
+              f"({s['decode_calls_per_step']:.2f} -> "
+              f"{b['decode_calls_per_step']:.2f} decode streams/step)")
     print("-> ETS holds accuracy with measurably fewer live KV pages "
           "(paper: 1.8x KV -> 1.4x throughput).")
     return out

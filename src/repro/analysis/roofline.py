@@ -71,8 +71,9 @@ class _Computation:
     dots: List[Tuple[str, tuple, str, str, tuple]] = field(
         default_factory=list)
     calls: List[str] = field(default_factory=list)
-    # while loops: (body_name, cond_name)
-    whiles: List[Tuple[str, str]] = field(default_factory=list)
+    # while loops: (body_name, cond_name, known_trip_count or None)
+    whiles: List[Tuple[str, str, Optional[int]]] = field(
+        default_factory=list)
     cond_bound: Optional[int] = None     # max s32 constant (trip heuristic)
     flops: float = 0.0
     dot_bytes: float = 0.0
@@ -96,6 +97,7 @@ def parse_hlo_costs(hlo: str) -> Dict[str, float]:
         r"lhs_contracting_dims=\{([\d,]*)\}")
     while_re = re.compile(
         r"while\(.*\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+    trip_re = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
     call_re = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
     s32_const_re = re.compile(r"s32\[\]\s*constant\((\d+)\)")
 
@@ -134,8 +136,13 @@ def parse_hlo_costs(hlo: str) -> Dict[str, float]:
                 out_dt = ddm.group(1)
                 out_shape = tuple(int(d) for d in ddm.group(2).split(",")
                                   if d)
-                operands = [o.strip().lstrip("%") for o in
-                            ddm.group(3).split(",")]
+                # Optimized HLO writes typed operands
+                # ("f32[64,64]{1,0} %name, …") whose shapes contain
+                # commas, so split on op-name references, not commas.
+                operands = re.findall(r"%([\w\.\-]+)", ddm.group(3))
+                if not operands:
+                    operands = [o.strip() for o in ddm.group(3).split(",")
+                                if o.strip()]
                 cdims = tuple(int(d) for d in ddm.group(4).split(",") if d)
                 cur.dots.append((out_dt, out_shape,
                                  operands[0] if operands else "",
@@ -151,7 +158,9 @@ def parse_hlo_costs(hlo: str) -> Dict[str, float]:
                 int(d) for d in dm.group(3).split(",") if d))
         wm = while_re.search(s)
         if wm:
-            cur.whiles.append((wm.group(2), wm.group(1)))
+            tm = trip_re.search(s)
+            cur.whiles.append((wm.group(2), wm.group(1),
+                               int(tm.group(1)) if tm else None))
         elif ("fusion(" in s or " call(" in s) and " while(" not in s:
             cm = call_re.search(s)
             if cm:
@@ -191,8 +200,8 @@ def parse_hlo_costs(hlo: str) -> Dict[str, float]:
             f += cf
             b += cbs
             cb += ccb
-        for body, cond in c.whiles:
-            trips = cond_trip(cond)
+        for body, cond, known in c.whiles:
+            trips = known if known is not None else cond_trip(cond)
             bf, bb, bcb = total(body, seen + (name,))
             f += trips * bf
             b += trips * bb
@@ -262,9 +271,17 @@ class RooflineReport:
         return d
 
 
+def normalize_cost_analysis(cost) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on recent jax but a
+    one-element list of dicts on older releases — accept both."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
                      chips: int, model_flops: float) -> RooflineReport:
-    cost = compiled.cost_analysis() or {}
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     parsed = parse_hlo_costs(hlo)

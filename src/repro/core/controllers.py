@@ -15,6 +15,32 @@ score them with a PRM, and embed last steps.  Backends include the
 synthetic oracle task (search-dynamics experiments; core/synthetic.py) and
 the real LM engine (serving/search_backend.py).
 
+Batched step protocol
+---------------------
+One search step makes O(1) backend calls, not O(leaves):
+
+  * ``expand_many(tree, leaf_counts)`` — ``leaf_counts`` is a sequence of
+    ``(leaf_id, n)`` pairs; the backend expands *all* of them (the LM
+    engine decodes every new branch in a single lock-step batched stream)
+    and returns the new node ids **flat, grouped by leaf, in
+    ``leaf_counts`` order** — each leaf's children contiguous and in
+    sampling order.  The controller recovers the grouping via
+    ``tree.node(kid).parent``.
+  * ``score_many(tree, nodes)`` — PRM rewards for all candidates in one
+    call (the LM backend pads to power-of-two buckets so its jitted
+    scorer does not recompile per sequence length).
+  * ``embed_many(tree, nodes)`` — stacked (L, D) last-step embeddings.
+
+Fallback contract: the ``Backend`` protocol ships default ``*_many``
+bodies that loop over the single-node methods in order, so a third-party
+backend that only implements ``expand``/``score``/``embed`` keeps
+working — ``run_search`` dispatches through ``getattr`` and falls back to
+the same per-node loop when a backend (structural, non-subclassing)
+lacks the batched methods.  The RNG-visible call order of the fallbacks
+is identical to the legacy serial loop, so for a deterministic backend
+``run_search(..., batched=True)`` and ``batched=False`` produce
+bit-identical trees.
+
 Per the paper (§5.1): the search width shrinks as trajectories complete,
 and the final answer is selected by weighted majority voting with the
 final PRM score as weight.
@@ -34,6 +60,30 @@ from .rebase import rebase_weights
 from .tree import SearchTree
 
 
+# Canonical serial fallback loops: the ONE place that defines the
+# single-node call order (the property the serial/batched bit-equivalence
+# tests depend on).  Used by the Backend protocol's default *_many bodies,
+# by run_search's getattr dispatch for structural backends without them,
+# and by run_search's forced-serial path.
+
+def _serial_expand(backend, tree: SearchTree,
+                   leaf_counts: Sequence[Tuple[int, int]]) -> List[int]:
+    out: List[int] = []
+    for leaf, n in leaf_counts:
+        out.extend(backend.expand(tree, leaf, n))
+    return out
+
+
+def _serial_score(backend, tree: SearchTree,
+                  nodes: Sequence[int]) -> List[float]:
+    return [backend.score(tree, nid) for nid in nodes]
+
+
+def _serial_embed(backend, tree: SearchTree,
+                  nodes: Sequence[int]) -> np.ndarray:
+    return np.stack([backend.embed(tree, nid) for nid in nodes])
+
+
 class Backend(Protocol):
     def expand(self, tree: SearchTree, leaf: int, n: int) -> List[int]:
         """Sample n continuations of `leaf`; add to tree; return node ids."""
@@ -51,6 +101,27 @@ class Backend(Protocol):
         """Final answer of a finished trajectory."""
         ...
 
+    # -- batched step API (default: loop over the single-node methods) ----
+    def expand_many(self, tree: SearchTree,
+                    leaf_counts: Sequence[Tuple[int, int]]) -> List[int]:
+        """Expand every (leaf, n) pair; return new node ids flat.
+
+        Children are grouped by leaf, contiguous, in ``leaf_counts``
+        order.  Backends override this to batch the whole step (one
+        decode stream); the default preserves the serial call order.
+        """
+        return _serial_expand(self, tree, leaf_counts)
+
+    def score_many(self, tree: SearchTree,
+                   nodes: Sequence[int]) -> List[float]:
+        """PRM rewards for all `nodes`, in order."""
+        return _serial_score(self, tree, nodes)
+
+    def embed_many(self, tree: SearchTree,
+                   nodes: Sequence[int]) -> np.ndarray:
+        """Stacked (len(nodes), D) embeddings, in order."""
+        return _serial_embed(self, tree, nodes)
+
 
 @dataclass
 class SearchConfig:
@@ -58,6 +129,7 @@ class SearchConfig:
     width: int = 16                # N — total continuation budget per step
     keep: int = 0                  # beam/dvts: trajectories kept (0=sqrt(N))
     max_steps: int = 16
+    batched: bool = True           # one backend call per step stage
     ets: ETSConfig = field(default_factory=ETSConfig)
 
     def __post_init__(self):
@@ -90,6 +162,35 @@ def weighted_majority(pairs: Sequence[Tuple[Any, float]]) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# Batched dispatch: use the backend's *_many when present, else loop the
+# single-node methods (same order, so deterministic backends agree).
+# ---------------------------------------------------------------------------
+
+def _expand_many(backend, tree: SearchTree,
+                 leaf_counts: Sequence[Tuple[int, int]]) -> List[int]:
+    fn = getattr(backend, "expand_many", None)
+    if fn is not None:
+        return fn(tree, leaf_counts)
+    return _serial_expand(backend, tree, leaf_counts)
+
+
+def _score_many(backend, tree: SearchTree,
+                nodes: Sequence[int]) -> List[float]:
+    fn = getattr(backend, "score_many", None)
+    if fn is not None:
+        return list(fn(tree, nodes))
+    return _serial_score(backend, tree, nodes)
+
+
+def _embed_many(backend, tree: SearchTree,
+                nodes: Sequence[int]) -> np.ndarray:
+    fn = getattr(backend, "embed_many", None)
+    if fn is not None:
+        return np.asarray(fn(tree, nodes))
+    return _serial_embed(backend, tree, nodes)
+
+
+# ---------------------------------------------------------------------------
 # The unified loop
 # ---------------------------------------------------------------------------
 
@@ -99,6 +200,7 @@ def run_search(backend: Backend, scfg: SearchConfig,
     N = scfg.width
     completed: List[Tuple[Any, float]] = []
     method = scfg.method
+    batched = scfg.batched
 
     # subtree id for DVTS (assigned at the first expansion)
     subtree_of: Dict[int, int] = {}
@@ -108,12 +210,20 @@ def run_search(backend: Backend, scfg: SearchConfig,
     steps = 0
     while steps < scfg.max_steps and N > 0 and live:
         steps += 1
-        # 1. expand
-        candidates: List[int] = []
-        for leaf, n in live.items():
-            if n <= 0:
-                continue
-            kids = backend.expand(tree, leaf, n)
+        # 1. expand: one batched call over every live leaf
+        leaf_counts = [(leaf, n) for leaf, n in live.items() if n > 0]
+        if batched:
+            candidates = _expand_many(backend, tree, leaf_counts)
+        else:
+            candidates = _serial_expand(backend, tree, leaf_counts)
+        if not candidates:
+            break
+        # subtree bookkeeping (children arrive grouped by parent leaf)
+        kids_of: Dict[int, List[int]] = defaultdict(list)
+        for kid in candidates:
+            kids_of[tree.node(kid).parent].append(kid)
+        for leaf, _ in leaf_counts:
+            kids = kids_of.get(leaf, [])
             if leaf == 0 and method == "dvts":
                 k = scfg.n_keep
                 for j, kid in enumerate(kids):
@@ -121,12 +231,13 @@ def run_search(backend: Backend, scfg: SearchConfig,
             else:
                 for kid in kids:
                     subtree_of[kid] = subtree_of.get(leaf, 0)
-            candidates.extend(kids)
-        if not candidates:
-            break
-        # 2. score
-        for nid in candidates:
-            tree.node(nid).reward = backend.score(tree, nid)
+        # 2. score: one batched PRM call over all candidates
+        if batched:
+            scores = _score_many(backend, tree, candidates)
+        else:
+            scores = _serial_score(backend, tree, candidates)
+        for nid, r in zip(candidates, scores):
+            tree.node(nid).reward = float(r)
         # 3. split off finished trajectories (width shrinks, as in REBASE)
         finished = [c for c in candidates if tree.node(c).finished]
         for f in finished:
@@ -164,7 +275,10 @@ def run_search(backend: Backend, scfg: SearchConfig,
         elif method in ("ets", "ets-kv"):
             embs = None
             if scfg.ets.use_clustering and scfg.ets.lambda_d > 0:
-                embs = np.stack([backend.embed(tree, c) for c in open_c])
+                if batched:
+                    embs = _embed_many(backend, tree, open_c)
+                else:
+                    embs = _serial_embed(backend, tree, open_c)
             step = ets_prune(tree, open_c, rewards, N, scfg.ets, embs)
             live = {open_c[i]: int(n)
                     for i, n in zip(step.selected, step.counts)}

@@ -23,6 +23,12 @@ the Llemma checkpoints:
 
 Everything is seeded and pure-numpy; tests assert the qualitative paper
 claims (ETS ~ REBASE accuracy at materially lower average KV).
+
+The backend implements the batched step API (``expand_many`` /
+``score_many`` / ``embed_many``) by looping the single-node methods in
+controller call order, so batched and serial searches consume the RNG
+stream identically and produce bit-identical trees — the equivalence
+tests rely on this.
 """
 from __future__ import annotations
 
@@ -32,7 +38,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .controllers import Backend
+from .controllers import (Backend, _serial_embed, _serial_expand,
+                          _serial_score)
 from .tree import SearchTree
 
 
@@ -97,6 +104,11 @@ class SyntheticProblem(Backend):
         self.correct_answer = "ANS_TRUE"
         self.n_model_calls = 0     # proxy-metric bookkeeping (Fig. 2)
         self.gen_tokens = 0
+        # batched-step bookkeeping: how many *_many calls the controller
+        # issued (one per step stage on the batched path)
+        self.n_expand_batches = 0
+        self.n_score_batches = 0
+        self.n_embed_batches = 0
 
     # -- Backend ---------------------------------------------------------
     def expand(self, tree: SearchTree, leaf: int, n: int) -> List[int]:
@@ -150,6 +162,24 @@ class SyntheticProblem(Backend):
             return self.correct_answer
         # wrong answers collide a little (finitely many wrong outcomes)
         return f"ANS_WRONG_{self.rng.integers(self.cfg.n_wrong_answers)}"
+
+    # -- batched step API -------------------------------------------------
+    # The oracle draws from one sequential RNG stream, so the batched
+    # implementations delegate to the canonical serial loops — batched
+    # and serial searches are bit-identical for a fixed seed (asserted
+    # by tests).  The batch counters let tests assert the controller
+    # makes O(1) calls per step.
+    def expand_many(self, tree: SearchTree, leaf_counts) -> List[int]:
+        self.n_expand_batches += 1
+        return _serial_expand(self, tree, leaf_counts)
+
+    def score_many(self, tree: SearchTree, nodes) -> List[float]:
+        self.n_score_batches += 1
+        return _serial_score(self, tree, nodes)
+
+    def embed_many(self, tree: SearchTree, nodes) -> np.ndarray:
+        self.n_embed_batches += 1
+        return _serial_embed(self, tree, nodes)
 
     def make_tree(self) -> SearchTree:
         return SearchTree(root_tokens=self.cfg.prompt_tokens,

@@ -64,6 +64,12 @@ class PagedEngine:
                            dtype=jnp.float32)
         self.tokens: Dict[int, List[int]] = {}   # full token history
         self.max_pages_per_seq = -(-ecfg.max_seq_len // ecfg.page_size)
+        # throughput accounting (benchmarks/table2): how many decode
+        # streams were opened, how many jitted lock-step iterations ran,
+        # and how many tokens they produced
+        self.n_decode_calls = 0
+        self.n_decode_steps = 0
+        self.n_decoded_tokens = 0
         self._decode_fn = self._build_decode_fn()
         self._prefill_fn = self._build_prefill_fn()
 
@@ -192,6 +198,14 @@ class PagedEngine:
         self.alloc.free_seq(seq_id)
         self.tokens.pop(seq_id, None)
 
+    def reset(self) -> None:
+        """Free every live sequence; keeps the pool and compiled steps.
+
+        Lets one engine serve a stream of independent search problems
+        without re-jitting prefill/decode (benchmarks, serving loops)."""
+        for sid in list(self.alloc.seqs):
+            self.free(sid)
+
     # ------------------------------------------------------------------
     def decode(self, seq_ids: Sequence[int], n_tokens: int,
                key, temperature: float = 1.0,
@@ -209,11 +223,13 @@ class PagedEngine:
         out: Dict[int, List[int]] = {i: [] for i in ids}
         done = {i: False for i in ids}
         stop = set(int(s) for s in stop_tokens)
+        self.n_decode_calls += 1
 
         for _ in range(n_tokens):
             live = [i for i in ids if not done[i]]
             if not live:
                 break
+            self.n_decode_steps += 1
             # reserve one slot per live sequence (may CoW)
             copy_ops = []
             for i in live:
@@ -254,6 +270,7 @@ class PagedEngine:
                 t = int(new[j])
                 self.tokens[i].append(t)
                 out[i].append(t)
+                self.n_decoded_tokens += 1
                 if t in stop or len(self.tokens[i]) >= ecfg.max_seq_len:
                     done[i] = True
         return out

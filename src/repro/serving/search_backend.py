@@ -10,6 +10,32 @@ encoder embedder into the ``repro.core.controllers.Backend`` protocol:
   embed  — mean-pooled encoder state of the *last step's* tokens (§4.2);
   answer — task-specific extractor over the finished trajectory.
 
+Batched step protocol (the serving idiom the paper's throughput numbers
+depend on — one search step costs one decode stream and O(1) jit
+signatures):
+
+  expand_many — branch *all* live leaves up front, then decode every new
+      branch in a single lock-step batched ``engine.decode`` call;
+      when the total branch count exceeds ``engine.ecfg.max_batch`` the
+      branch list is split into ``max_batch`` chunks (the only case with
+      more than one decode stream per step).
+  score_many  — one PRM forward over all candidates.  Sequences are
+      right-padded into power-of-two length buckets (and the batch into a
+      power-of-two row count), with padded positions set to -1 so the
+      attention mask excludes them; the jitted scorer therefore compiles
+      once per (batch-bucket, length-bucket) pair instead of once per
+      distinct sequence length.  The per-row reward is gathered at each
+      sequence's true last position.
+  embed_many  — same bucketing for the (bidirectional) encoder; the
+      position mask keeps padding out of the attention, and the mean
+      pool runs over valid positions only, so batched embeddings match
+      the single-node path.
+
+Fallback contract: the single-node ``expand``/``score``/``embed`` remain
+fully supported (``run_search(..., batched=False)`` and third-party
+callers use them); ``score_traces``/``embed_traces`` count jit traces of
+the bucketed functions so tests can assert the recompilation bound.
+
 ``on_step`` (called by run_search after pruning) frees the engine
 sequences of pruned leaves — this is where ETS's ILP decisions become
 physical page releases, and where ``kv_stats`` is sampled for the
@@ -20,7 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +64,37 @@ class BackendConfig:
     max_step_tokens: int = 48
     max_depth: int = 16
     temperature: float = 1.0
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Smallest power-of-two >= n (at least `lo`) — the padding bucket."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def _pad_bucket(seqs: Sequence[Sequence[int]]):
+    """Pad token sequences into a power-of-two (rows, length) bucket.
+
+    Returns (toks (Bp,T), pos (Bp,T), lengths (Bp,)): tokens
+    zero-padded, positions -1 at pads (the attention mask treats -1 as
+    an empty slot, so padding never leaks into real positions), padded
+    rows given length 1.  Bucketing both dims bounds the jit-signature
+    count at O(log max_batch * log max_len).
+    """
+    B = len(seqs)
+    lens = [len(s) for s in seqs]
+    T = _bucket(max(lens))
+    Bp = _bucket(B, lo=1)
+    toks = np.zeros((Bp, T), np.int32)
+    pos = np.full((Bp, T), -1, np.int32)
+    for i, s in enumerate(seqs):
+        toks[i, :len(s)] = s
+        pos[i, :len(s)] = np.arange(len(s))
+    lengths = np.ones(Bp, np.int32)
+    lengths[:B] = lens
+    return toks, pos, lengths
 
 
 class LMBackend:
@@ -58,6 +115,28 @@ class LMBackend:
             lambda p, toks: prm_model.reward(p, {"tokens": toks}))
         self._embed_fn = jax.jit(
             lambda p, toks: embed_model.hidden(p, {"tokens": toks}))
+        # Bucketed batch paths.  The trace counters increment when jax
+        # traces (i.e. compiles) a new signature — tests assert they stay
+        # O(log max_len), not O(distinct lengths).
+        self.score_traces = 0
+        self.embed_traces = 0
+
+        def score_batch(p, toks, positions, lengths):
+            self.score_traces += 1      # trace-time side effect
+            r = prm_model.reward(p, {"tokens": toks, "positions": positions})
+            idx = jnp.clip(lengths - 1, 0, toks.shape[1] - 1)
+            return jnp.take_along_axis(r, idx[:, None], axis=1)[:, 0]
+
+        def embed_batch(p, toks, positions):
+            self.embed_traces += 1      # trace-time side effect
+            h = embed_model.hidden(p, {"tokens": toks,
+                                       "positions": positions})
+            mask = (positions >= 0).astype(h.dtype)
+            denom = jnp.maximum(mask.sum(axis=1), 1.0)
+            return (h * mask[:, :, None]).sum(axis=1) / denom[:, None]
+
+        self._score_batch_fn = jax.jit(score_batch)
+        self._embed_batch_fn = jax.jit(embed_batch)
 
     # ------------------------------------------------------------------
     def start(self, prompt_tokens: Sequence[int]) -> SearchTree:
@@ -69,31 +148,56 @@ class LMBackend:
         self.key, sub = jax.random.split(self.key)
         return sub
 
+    def _add_child(self, tree: SearchTree, leaf: int, bid: int,
+                   toks: List[int]) -> int:
+        """Create the tree node for decoded branch `bid` of `leaf`."""
+        node = tree.node(leaf)
+        full = self.engine.tokens[bid]
+        ans = self.answer_fn(full)
+        finished = (bool(toks) and toks[-1] == self.bcfg.eos_token) \
+            or ans is not None \
+            or node.depth + 1 >= self.bcfg.max_depth \
+            or len(full) >= self.engine.ecfg.max_seq_len - \
+            self.bcfg.max_step_tokens
+        return tree.add(leaf, n_tokens=len(toks), finished=finished,
+                        payload={"seq_id": bid, "tokens": toks,
+                                 "answer": ans})
+
     # -- Backend protocol --------------------------------------------------
     def expand(self, tree: SearchTree, leaf: int, n: int) -> List[int]:
-        node = tree.node(leaf)
-        if node.depth >= self.bcfg.max_depth:
+        return self.expand_many(tree, [(leaf, n)])
+
+    def expand_many(self, tree: SearchTree,
+                    leaf_counts: Sequence[Tuple[int, int]]) -> List[int]:
+        """Branch every live leaf, then decode all branches lock-step.
+
+        One ``engine.decode`` stream covers the whole step; the branch
+        list is chunked only when it exceeds ``max_batch``.  Children are
+        returned flat, grouped by leaf in ``leaf_counts`` order.
+        """
+        plan: List[Tuple[int, List[int]]] = []     # (leaf, branch_ids)
+        all_branches: List[int] = []
+        for leaf, n in leaf_counts:
+            node = tree.node(leaf)
+            if node.depth >= self.bcfg.max_depth or n <= 0:
+                continue
+            bids = self.engine.branch(node.payload["seq_id"], n)
+            plan.append((leaf, bids))
+            all_branches.extend(bids)
+        if not all_branches:
             return []
-        sid = node.payload["seq_id"]
-        branch_ids = self.engine.branch(sid, n)
-        outs = self.engine.decode(
-            branch_ids, self.bcfg.max_step_tokens, self._next_key(),
-            temperature=self.bcfg.temperature,
-            stop_tokens=(self.bcfg.step_token, self.bcfg.eos_token))
-        kids = []
-        for bid in branch_ids:
-            toks = outs[bid]
-            full = self.engine.tokens[bid]
-            ans = self.answer_fn(full)
-            finished = (bool(toks) and toks[-1] == self.bcfg.eos_token) \
-                or ans is not None \
-                or node.depth + 1 >= self.bcfg.max_depth \
-                or len(full) >= self.engine.ecfg.max_seq_len - \
-                self.bcfg.max_step_tokens
-            kid = tree.add(leaf, n_tokens=len(toks), finished=finished,
-                           payload={"seq_id": bid, "tokens": toks,
-                                    "answer": ans})
-            kids.append(kid)
+        mb = self.engine.ecfg.max_batch
+        outs: Dict[int, List[int]] = {}
+        for i in range(0, len(all_branches), mb):
+            chunk = all_branches[i:i + mb]
+            outs.update(self.engine.decode(
+                chunk, self.bcfg.max_step_tokens, self._next_key(),
+                temperature=self.bcfg.temperature,
+                stop_tokens=(self.bcfg.step_token, self.bcfg.eos_token)))
+        kids: List[int] = []
+        for leaf, bids in plan:
+            for bid in bids:
+                kids.append(self._add_child(tree, leaf, bid, outs[bid]))
         return kids
 
     def score(self, tree: SearchTree, node: int) -> float:
@@ -102,6 +206,18 @@ class LMBackend:
         r = self._score_fn(self.prm_params, toks)
         return float(r[0, -1])
 
+    def score_many(self, tree: SearchTree,
+                   nodes: Sequence[int]) -> List[float]:
+        """One padded-bucket PRM call for every candidate of the step."""
+        if not nodes:
+            return []
+        seqs = [self.engine.tokens[tree.node(n).payload["seq_id"]]
+                for n in nodes]
+        toks, pos, lengths = _pad_bucket(seqs)
+        r = self._score_batch_fn(self.prm_params, jnp.asarray(toks),
+                                 jnp.asarray(pos), jnp.asarray(lengths))
+        return [float(x) for x in np.asarray(r)[:len(seqs)]]
+
     def embed(self, tree: SearchTree, node: int) -> np.ndarray:
         step = tree.node(node).payload["tokens"]
         if not step:
@@ -109,6 +225,25 @@ class LMBackend:
         toks = jnp.asarray([step], jnp.int32)
         h = self._embed_fn(self.embed_params, toks)
         return np.asarray(h[0].mean(axis=0), np.float32)
+
+    def embed_many(self, tree: SearchTree,
+                   nodes: Sequence[int]) -> np.ndarray:
+        """Bucketed batch embed; padding is masked out of the encoder's
+        attention (positions == -1) and of the mean pool."""
+        d = self.embed_model.cfg.d_model
+        steps = [tree.node(n).payload["tokens"] for n in nodes]
+        out = np.zeros((len(nodes), d), np.float32)
+        idx = [i for i, s in enumerate(steps) if s]
+        if not idx:
+            return out
+        seqs = [steps[i] for i in idx]
+        toks, pos, _ = _pad_bucket(seqs)
+        h = self._embed_batch_fn(self.embed_params, jnp.asarray(toks),
+                                 jnp.asarray(pos))
+        h = np.asarray(h, np.float32)
+        for row, i in enumerate(idx):
+            out[i] = h[row]
+        return out
 
     def answer(self, tree: SearchTree, leaf: int) -> Any:
         return tree.node(leaf).payload.get("answer")

@@ -1,0 +1,110 @@
+"""Optional-``hypothesis`` shim for the property tests.
+
+Tier-1 must collect and run on a bare environment (the container bakes in
+the jax toolchain but not hypothesis).  When the real library is
+available we re-export it untouched; otherwise a tiny seeded fallback
+implements just the strategy surface these tests use (``integers``,
+``just``, ``sampled_from``, ``one_of``, ``tuples``, ``lists``) and a
+``given`` that draws a fixed number of deterministic examples per test.
+The fallback trades hypothesis's shrinking/coverage for zero
+dependencies — enough to keep the invariant checks exercised everywhere.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+try:                                        # pragma: no cover - env-dependent
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 25
+
+    class HealthCheck:                      # placeholder attributes only
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"
+        filter_too_much = "filter_too_much"
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def sampled_from(elements):
+            xs = list(elements)
+            return _Strategy(lambda rng: xs[int(rng.integers(len(xs)))])
+
+        @staticmethod
+        def one_of(*strategies):
+            return _Strategy(lambda rng: strategies[
+                int(rng.integers(len(strategies)))].draw(rng))
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.draw(rng) for s in strategies))
+
+        @staticmethod
+        def lists(strategy, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [strategy.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*pos_strategies, **kw_strategies):
+        def deco(fn):
+            params = list(inspect.signature(fn).parameters)
+            # hypothesis maps positional strategies onto the rightmost
+            # parameters; keyword strategies onto their names
+            pos_names = params[len(params) - len(pos_strategies):] \
+                if pos_strategies else []
+            drawn_names = set(pos_names) | set(kw_strategies)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_max_examples",
+                                _DEFAULT_EXAMPLES), 50)
+                # crc32, not hash(): str hashing is salted per process,
+                # which would make failures unreproducible across runs
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = {name: s.draw(rng)
+                             for name, s in zip(pos_names, pos_strategies)}
+                    drawn.update({name: s.draw(rng)
+                                  for name, s in kw_strategies.items()})
+                    fn(*args, **drawn, **kwargs)
+
+            # hide drawn parameters from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in drawn_names])
+            return wrapper
+        return deco

@@ -1,0 +1,297 @@
+"""Batched search steps: serial/batched equivalence, one decode stream
+per step, and the bucketed-PRM recompilation bound."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ETSConfig, SearchConfig, run_search
+from repro.core.synthetic import SyntheticProblem, SyntheticTaskConfig
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig
+from repro.serving.search_backend import BackendConfig, LMBackend, _bucket
+
+METHODS = ["beam", "dvts", "rebase", "ets", "ets-kv"]
+
+
+# ---------------------------------------------------------------------------
+# Batched == serial on the synthetic backend (bit-identical trees)
+# ---------------------------------------------------------------------------
+
+def _tree_signature(tree):
+    return [(n.id, n.parent, n.n_tokens, n.reward, n.finished,
+             n.payload.get("sem") if isinstance(n.payload, dict) else None)
+            for n in tree.nodes]
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_batched_matches_serial_bit_identical(method):
+    results = {}
+    for batched in (True, False):
+        prob = SyntheticProblem(SyntheticTaskConfig(), seed=11)
+        scfg = SearchConfig(method=method, width=16, batched=batched,
+                            ets=ETSConfig(lambda_b=1.0, lambda_d=1.0))
+        res = run_search(prob, scfg, tree=prob.make_tree())
+        results[batched] = (res, prob)
+    res_b, prob_b = results[True]
+    res_s, prob_s = results[False]
+    assert _tree_signature(res_b.tree) == _tree_signature(res_s.tree)
+    assert res_b.answer == res_s.answer
+    assert res_b.completed == res_s.completed
+    assert res_b.kv_summary == res_s.kv_summary
+    # the batched path made exactly one expand + one score call per step
+    assert prob_b.n_expand_batches == res_b.steps
+    assert prob_b.n_score_batches == res_b.steps
+    # the serial path made none
+    assert prob_s.n_expand_batches == 0
+    assert prob_s.n_score_batches == 0
+
+
+def test_structural_backend_without_many_methods_still_runs():
+    """Fallback contract: a backend that only implements the single-node
+    protocol (no *_many, no Backend subclassing) works on the batched
+    path via the controller's per-node fallback loop."""
+
+    class Minimal:
+        def __init__(self, seed):
+            self.inner = SyntheticProblem(SyntheticTaskConfig(), seed=seed)
+
+        def expand(self, tree, leaf, n):
+            return self.inner.expand(tree, leaf, n)
+
+        def score(self, tree, node):
+            return self.inner.score(tree, node)
+
+        def embed(self, tree, node):
+            return self.inner.embed(tree, node)
+
+        def answer(self, tree, leaf):
+            return self.inner.answer(tree, leaf)
+
+    ref = SyntheticProblem(SyntheticTaskConfig(), seed=3)
+    res_ref = run_search(ref, SearchConfig(method="ets", width=8),
+                         tree=ref.make_tree())
+    m = Minimal(seed=3)
+    res = run_search(m, SearchConfig(method="ets", width=8),
+                     tree=m.inner.make_tree())
+    assert _tree_signature(res.tree) == _tree_signature(res_ref.tree)
+    assert res.answer == res_ref.answer
+
+
+# ---------------------------------------------------------------------------
+# One decode stream per search step (call-counting engine stub)
+# ---------------------------------------------------------------------------
+
+class _StubAlloc:
+    def __init__(self):
+        self.seqs = {}
+
+
+class CountingEngine:
+    """Minimal engine double: records decode calls and batch sizes."""
+
+    def __init__(self, ecfg: EngineConfig, step_token: int):
+        self.ecfg = ecfg
+        self.step_token = step_token
+        self.tokens = {}
+        self.alloc = _StubAlloc()
+        self._next = 0
+        self.decode_calls = 0
+        self.decode_batches = []
+
+    def prefill(self, toks):
+        sid = self._new(list(int(t) for t in toks))
+        return sid
+
+    def _new(self, toks):
+        sid = self._next
+        self._next += 1
+        self.tokens[sid] = toks
+        self.alloc.seqs[sid] = True
+        return sid
+
+    def branch(self, seq_id, n):
+        return [self._new(list(self.tokens[seq_id])) for _ in range(n)]
+
+    def decode(self, seq_ids, n_tokens, key, temperature=1.0,
+               stop_tokens=()):
+        ids = list(seq_ids)
+        assert len(ids) <= self.ecfg.max_batch
+        self.decode_calls += 1
+        self.decode_batches.append(len(ids))
+        out = {}
+        for i in ids:
+            step = [7, self.step_token]
+            self.tokens[i].extend(step)
+            out[i] = step
+        return out
+
+    def free(self, seq_id):
+        self.alloc.seqs.pop(seq_id, None)
+        self.tokens.pop(seq_id, None)
+
+    def kv_stats(self):
+        return {"physical_pages": len(self.alloc.seqs),
+                "logical_pages": len(self.alloc.seqs), "shared_pages": 0}
+
+
+class StubPRM:
+    """Traceable stand-in for the PRM: deterministic token-dependent
+    rewards so retention policies have something to rank."""
+    cfg = type("C", (), {"d_model": 8})()
+    with_value_head = True
+
+    def reward(self, p, batch):
+        toks = batch["tokens"]
+        base = (toks.astype(jnp.float32) % 7.0) / 7.0
+        return jax.nn.sigmoid(jnp.cumsum(base, axis=1) / 10.0)
+
+
+class StubEmbedder:
+    cfg = type("C", (), {"d_model": 8})()
+
+    def hidden(self, p, batch):
+        toks = batch["tokens"]
+        return jnp.stack([(toks == v).astype(jnp.float32)
+                          for v in range(8)], axis=-1)
+
+
+def _make_stub_backend(max_batch=32, max_depth=3, width=6):
+    STEP = 9
+    eng = CountingEngine(EngineConfig(n_pages=64, page_size=8,
+                                      max_batch=max_batch,
+                                      max_seq_len=500), STEP)
+    backend = LMBackend(eng, StubPRM(), {}, StubEmbedder(), {},
+                        BackendConfig(step_token=STEP, eos_token=10,
+                                      max_step_tokens=4,
+                                      max_depth=max_depth),
+                        answer_fn=lambda full: None, seed=0)
+    return eng, backend
+
+
+@pytest.mark.parametrize("method", ["rebase", "ets", "beam"])
+def test_one_decode_call_per_step(method):
+    """L live leaves with <= max_batch total branches => exactly one
+    batched decode stream per search step."""
+    eng, backend = _make_stub_backend(max_batch=32)
+    tree = backend.start([1, 2, 3])
+    res = run_search(backend, SearchConfig(
+        method=method, width=6, max_steps=4,
+        ets=ETSConfig(lambda_b=1.0, lambda_d=1.0)), tree=tree)
+    assert res.steps >= 2
+    assert eng.decode_calls == res.steps
+    # every stream covered the whole step's branch set at once: one
+    # stream per step, and every non-root node came out of exactly one
+    # stream slot (a regression splitting a step into sub-batches would
+    # break the first; merging/interleaving steps would break the second)
+    assert len(eng.decode_batches) == res.steps
+    assert sum(eng.decode_batches) == len(res.tree.nodes) - 1
+
+
+def test_decode_chunks_only_above_max_batch():
+    eng, backend = _make_stub_backend(max_batch=4)
+    tree = backend.start([1, 2, 3])
+    kids = backend.expand_many(tree, [(0, 10)])
+    assert len(kids) == 10
+    # 10 branches on a max_batch=4 engine: ceil(10/4) = 3 streams
+    assert eng.decode_calls == 3
+    assert eng.decode_batches == [4, 4, 2]
+
+
+def test_expand_many_groups_children_by_leaf():
+    eng, backend = _make_stub_backend(max_batch=32, max_depth=5)
+    tree = backend.start([1, 2, 3])
+    first = backend.expand_many(tree, [(0, 2)])
+    counts = [(first[0], 3), (first[1], 2)]
+    kids = backend.expand_many(tree, counts)
+    parents = [tree.node(k).parent for k in kids]
+    assert parents == [first[0]] * 3 + [first[1]] * 2
+
+
+# ---------------------------------------------------------------------------
+# Bucketed PRM scoring: O(buckets) compilations, not O(lengths)
+# ---------------------------------------------------------------------------
+
+def test_bucket_is_next_pow2():
+    assert [_bucket(n) for n in (1, 7, 8, 9, 31, 33)] == \
+        [8, 8, 8, 16, 32, 64]
+    assert _bucket(3, lo=1) == 4
+
+
+@pytest.fixture(scope="module")
+def real_prm_backend():
+    """Stub engine + real (tiny) PRM and embedder, so the bucketed batch
+    functions run the genuine jitted models."""
+    lm_cfg = dataclasses.replace(get_config("tiny-lm"), n_layers=1,
+                                 d_model=64, n_heads=2, n_kv_heads=1,
+                                 d_ff=128)
+    prm = build_model(lm_cfg, with_value_head=True, remat=False)
+    prm_params = prm.init(jax.random.key(0))
+    emb_cfg = dataclasses.replace(get_config("tiny-embedder"), n_layers=1,
+                                  d_model=64, n_heads=2, n_kv_heads=2,
+                                  d_ff=128)
+    emb = build_model(emb_cfg, remat=False)
+    emb_params = emb.init(jax.random.key(1))
+    eng = CountingEngine(EngineConfig(max_batch=64, max_seq_len=512), 9)
+    backend = LMBackend(eng, prm, prm_params, emb, emb_params,
+                        BackendConfig(step_token=9, eos_token=10,
+                                      max_step_tokens=8, max_depth=8),
+                        answer_fn=lambda full: None, seed=0)
+    return eng, backend
+
+
+def _fake_nodes(eng, backend, tree, lengths, rng):
+    nodes = []
+    for ln in lengths:
+        toks = [int(t) for t in rng.integers(1, 60, ln)]
+        sid = eng._new(toks)
+        nodes.append(tree.add(0, n_tokens=ln,
+                              payload={"seq_id": sid,
+                                       "tokens": toks[-min(ln, 6):]}))
+    return nodes
+
+
+def test_score_many_matches_single_scores(real_prm_backend):
+    eng, backend = real_prm_backend
+    tree = backend.start(list(range(1, 9)))
+    rng = np.random.default_rng(0)
+    nodes = _fake_nodes(eng, backend, tree, [9, 14, 23, 30], rng)
+    batch = backend.score_many(tree, nodes)
+    single = [backend.score(tree, n) for n in nodes]
+    np.testing.assert_allclose(batch, single, rtol=1e-5, atol=1e-5)
+
+
+def test_embed_many_matches_single_embeds(real_prm_backend):
+    eng, backend = real_prm_backend
+    tree = backend.start(list(range(1, 9)))
+    rng = np.random.default_rng(1)
+    nodes = _fake_nodes(eng, backend, tree, [7, 12, 20], rng)
+    batch = backend.embed_many(tree, nodes)
+    single = np.stack([backend.embed(tree, n) for n in nodes])
+    np.testing.assert_allclose(batch, single, rtol=2e-4, atol=2e-4)
+
+
+def test_prm_scoring_recompilation_bound(real_prm_backend):
+    eng, backend = real_prm_backend
+    tree = backend.start(list(range(1, 9)))
+    rng = np.random.default_rng(2)
+    backend.score_traces = 0
+    n_calls = 0
+    distinct_lengths = set()
+    # many mixes of lengths inside the 33..64 bucket with 4-row batches:
+    # one jit signature regardless of the per-call length mix
+    for trial in range(6):
+        lengths = [int(x) for x in rng.integers(33, 65, size=4)]
+        distinct_lengths.update(lengths)
+        nodes = _fake_nodes(eng, backend, tree, lengths, rng)
+        backend.score_many(tree, nodes)
+        n_calls += 1
+    assert len(distinct_lengths) > 4
+    assert backend.score_traces == 1
+    # a second (batch-rows, length) bucket adds exactly one signature
+    nodes = _fake_nodes(eng, backend, tree, [70, 90], rng)
+    backend.score_many(tree, nodes)
+    assert backend.score_traces == 2

@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import HealthCheck, given, settings, st
 
 from repro.configs import get_config
 from repro.kvcache import PageAllocator

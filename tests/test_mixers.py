@@ -6,8 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 import repro.models.moe as MOE
 from repro.configs import MoEConfig, SSMConfig, get_config, tiny_variant
@@ -60,6 +59,7 @@ def test_mamba_state_carries_across_calls():
                                np.asarray(y_full), rtol=3e-4, atol=3e-4)
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(T=st.integers(4, 40), chunk=st.sampled_from([8, 16]),
        seed=st.integers(0, 100))
@@ -129,6 +129,7 @@ def test_moe_grouped_matches_dense(moe_setup, G):
     np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_moe_grads_match_dense(moe_setup):
     cfg, p, x = moe_setup
     MOE.N_GROUPS = 2

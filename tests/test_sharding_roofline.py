@@ -8,6 +8,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.analysis.roofline import (PEAK_FLOPS, RooflineReport,
+                                     normalize_cost_analysis,
                                      parse_hlo_costs)
 from repro.launch.sharding import fit_spec, param_spec, cache_spec
 
@@ -142,7 +143,7 @@ def test_parse_real_compiled_scan():
     assert abs(out["flops"] - expect) / expect < 0.05
     # cross-check: raw cost_analysis counts the body once (the very bug
     # the parser corrects)
-    raw = compiled.cost_analysis()["flops"]
+    raw = normalize_cost_analysis(compiled.cost_analysis())["flops"]
     assert raw < expect / 2
 
 
