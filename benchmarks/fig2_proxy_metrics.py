@@ -5,13 +5,91 @@ and model calls at the same width, but very different runtimes — because
 runtime tracks KV-cache size (memory-bound decode), which the proxy
 metrics ignore.  We reproduce the *shape* of Fig. 2: all metrics
 normalized to beam search at width 64.
+
+Second section: the cost simulator's ``tree_attention=True`` branch
+assumes unique tree tokens are streamed once per step.  The engine now
+*measures* exactly that (``unique_pages_streamed`` vs
+``logical_pages_streamed`` under ``EngineConfig(attention="tree")``),
+so we validate the model's per-step predicted sharing ratio against the
+measured unique-page trace of a real (tiny, untrained — IO does not
+depend on weight quality) LM search.
 """
+import dataclasses
+
+import numpy as np
+
 from repro.core import (ETSConfig, HardwareModel, SearchConfig,
                         evaluate_method, run_search, simulate_search_cost)
 from repro.core.synthetic import SyntheticProblem, SyntheticTaskConfig
 
 
-def run(width: int = 64, n_problems: int = 40):
+def _measured_io_validation(width: int = 8, n_problems: int = 2):
+    """Costsim prediction vs engine measurement of KV-IO sharing.
+
+    Predicted per-step sharing = kv_tokens_unshared / kv_tokens_shared
+    from the tree-level trace (what ``simulate_search_cost`` consumes);
+    measured = logical / unique pages the tree-attention decode step
+    actually streamed.  The prediction covers the post-prune live set
+    while the measurement covers the decoded branch set, so we compare
+    ratios, not raw counts.
+    """
+    import jax
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    from repro.serving.engine import EngineConfig, PagedEngine
+    from repro.serving.search_backend import BackendConfig, LMBackend
+    from repro.training.task import (ArithmeticTask, EOS, NEWLINE,
+                                     VOCAB_SIZE, encode)
+
+    task = ArithmeticTask(n_ops=4, seq_len=64)
+    lm_cfg = dataclasses.replace(get_config("tiny-lm"), n_layers=2,
+                                 vocab_size=VOCAB_SIZE)
+    lm = build_model(lm_cfg, remat=False)
+    lm_params = lm.init(jax.random.key(0))
+    prm = build_model(dataclasses.replace(lm_cfg, n_layers=1),
+                      with_value_head=True, remat=False)
+    prm_params = prm.init(jax.random.key(1))
+    emb_cfg = dataclasses.replace(get_config("tiny-embedder"), n_layers=1,
+                                  vocab_size=VOCAB_SIZE)
+    emb = build_model(emb_cfg, remat=False)
+    emb_params = emb.init(jax.random.key(2))
+    engine = PagedEngine(lm, lm_params, EngineConfig(
+        n_pages=1024, page_size=8, max_batch=max(width * 2, 16),
+        max_seq_len=160, attention="tree"))
+    backend = LMBackend(engine, prm, prm_params, emb, emb_params,
+                        BackendConfig(step_token=NEWLINE, eos_token=EOS,
+                                      max_step_tokens=10, max_depth=6),
+                        answer_fn=ArithmeticTask.extract_answer, seed=7)
+    scfg = SearchConfig(method="ets", width=width, max_steps=5,
+                        ets=ETSConfig(lambda_b=2.0, lambda_d=0.0,
+                                      use_clustering=False))
+    rng = np.random.default_rng(42)
+    pred, meas = [], []
+    for _ in range(n_problems):
+        backend.reset()
+        prompt, _, _ = task.sample_problem(rng)
+        tree = backend.start(encode(prompt))
+        run_search(backend, scfg, tree=tree)
+        for t_tree, t_eng in zip(tree.kv_trace, backend.kv_trace):
+            if t_eng["unique_pages_streamed"] <= 0:
+                continue
+            pred.append(t_tree["kv_tokens_unshared"]
+                        / max(t_tree["kv_tokens_shared"], 1))
+            meas.append(t_eng["logical_pages_streamed"]
+                        / t_eng["unique_pages_streamed"])
+    pred_m, meas_m = float(np.mean(pred)), float(np.mean(meas))
+    rel_err = abs(pred_m - meas_m) / max(meas_m, 1e-9)
+    print(f"\n-- costsim tree_attention=True vs measured engine IO --")
+    print(f"predicted sharing ratio (tree trace) : {pred_m:6.2f}x")
+    print(f"measured  sharing ratio (engine)     : {meas_m:6.2f}x")
+    print(f"relative error of the mean           : {rel_err:6.1%}")
+    return {"predicted_sharing_ratio": pred_m,
+            "measured_sharing_ratio": meas_m,
+            "rel_err": rel_err, "n_steps": len(meas)}
+
+
+def run(width: int = 64, n_problems: int = 40, io_width: int = 8,
+        io_problems: int = 2):
     # Calibrated to the paper's profiling setup: Llemma-34B on one H100
     # NVL serving 8 problems in parallel.  Synthetic-task steps are short
     # (~40 tok) vs MATH solutions (~hundreds), so kv_bytes_per_token is
@@ -49,4 +127,6 @@ def run(width: int = 64, n_problems: int = 40):
         print(f"{m:8s} {norm['flops_proxy']:7.2f} {norm['model_calls']:7.2f} "
               f"{norm['kv_size']:8.2f} {norm['sim_runtime_s']:8.2f}")
     print("-> FLOPs/calls are flat across methods; runtime tracks KV size.")
+    out["io_validation"] = _measured_io_validation(width=io_width,
+                                                   n_problems=io_problems)
     return out

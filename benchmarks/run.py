@@ -3,7 +3,16 @@
     PYTHONPATH=src python -m benchmarks.run [--only fig2,table1,...] [--fast]
 
 Each module's run() prints a human-readable table and returns a dict that
-is archived under experiments/bench/.
+is archived under experiments/bench/.  The table2 rows are additionally
+written to ``BENCH_table2.json`` (repo root by default) — the
+machine-readable perf record (tokens/s, decode calls/step, pages
+streamed per decode step for serial / batched-paged / batched-tree)
+that tracks the serving trajectory across PRs; CI uploads it as an
+artifact from the smoke invocation.
+
+``--smoke`` shrinks everything to a tiny 2-step configuration that
+finishes in a couple of minutes on CPU — a liveness check for the whole
+measured stack, not a meaningful measurement.
 """
 import argparse
 import json
@@ -17,24 +26,41 @@ def main() -> None:
                     help="comma list: fig2,table1,table2,table3")
     ap.add_argument("--fast", action="store_true",
                     help="smaller problem counts / widths")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny 2-step CI liveness run (implies --fast)")
     ap.add_argument("--out", default="experiments/bench")
+    ap.add_argument("--bench-json", default="BENCH_table2.json",
+                    help="where to write the machine-readable table2 rows")
     args = ap.parse_args()
+    args.fast = args.fast or args.smoke
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig2_proxy_metrics, table1_kv_reduction,
                             table2_throughput, table3_ablation)
 
+    # one jobs table; smoke/fast only shrink the per-job parameters
+    if args.smoke:
+        p = dict(fig2_problems=4, fig2_io=dict(io_width=6, io_problems=1),
+                 t1_widths=(16,), t1_problems=6,
+                 t2=dict(train_steps=30, n_problems=1, width=6, max_steps=2),
+                 t3_problems=8)
+    elif args.fast:
+        p = dict(fig2_problems=16, fig2_io={},
+                 t1_widths=(16, 64), t1_problems=30,
+                 t2=dict(train_steps=60, n_problems=3),
+                 t3_problems=30)
+    else:
+        p = dict(fig2_problems=40, fig2_io={},
+                 t1_widths=(16, 64, 256), t1_problems=60,
+                 t2=dict(train_steps=150, n_problems=6),
+                 t3_problems=100)
     jobs = {
         "fig2": lambda: fig2_proxy_metrics.run(
-            n_problems=16 if args.fast else 40),
+            n_problems=p["fig2_problems"], **p["fig2_io"]),
         "table1": lambda: table1_kv_reduction.run(
-            widths=(16, 64) if args.fast else (16, 64, 256),
-            n_problems=30 if args.fast else 60),
-        "table2": lambda: table2_throughput.run(
-            train_steps=60 if args.fast else 150,
-            n_problems=3 if args.fast else 6),
-        "table3": lambda: table3_ablation.run(
-            n_problems=30 if args.fast else 100),
+            widths=p["t1_widths"], n_problems=p["t1_problems"]),
+        "table2": lambda: table2_throughput.run(**p["t2"]),
+        "table3": lambda: table3_ablation.run(n_problems=p["t3_problems"]),
     }
     os.makedirs(args.out, exist_ok=True)
     for name, job in jobs.items():
@@ -45,6 +71,11 @@ def main() -> None:
         res["wall_s"] = round(time.time() - t0, 1)
         with open(os.path.join(args.out, name + ".json"), "w") as f:
             json.dump(res, f, indent=1, default=str)
+        if name == "table2":
+            with open(args.bench_json, "w") as f:
+                json.dump({"smoke": args.smoke, "fast": args.fast,
+                           "rows": res["rows"]}, f, indent=1, default=str)
+            print(f"[table2] rows -> {args.bench_json}")
         print(f"[{name}] done in {res['wall_s']}s\n")
 
 

@@ -1,24 +1,38 @@
 """Table 2 reproduction: measured serving throughput, REBASE vs ETS,
-serial vs batched search steps.
+across the three decode orchestrations.
 
 Runs the *real* stack end to end — tiny trained LM, paged KV pool with
 refcounted tree sharing, lock-step batched decode — and measures
 
   * decoded tokens / wall-second (throughput),
-  * decode streams opened per search step (1.0 on the batched path while
-    the branch count fits ``max_batch``; one per live leaf on the serial
-    path),
+  * decode streams opened per search step (1.0 on the batched paths
+    while the branch count fits ``max_batch``; one per live leaf on the
+    serial path),
+  * pages streamed per decode step: ``unique`` (what tree attention
+    reads — shared prefix pages once per step) vs ``logical`` (what
+    per-leaf paged attention reads), and their ratio — the measured IO
+    sharing that the paper defers to DeFT,
   * average physical pages held (the true KV footprint),
   * accuracy on the arithmetic task.
 
-The serial path is the pre-batching orchestration (one ``engine.decode``
-per leaf, one PRM/embedder call per candidate, each jit signature keyed
-on raw sequence length); the batched path issues one decode stream and
-one padded-bucket PRM call per step.  The paper reports 1.4x throughput
-from 1.8x KV reduction on H100s behind SGLang; at tiny-CPU scale the
-wall-clock gain comes from collapsing per-leaf decode calls and from the
-bounded jit-signature set, while the page accounting shows the memory
-effect directly.
+Three decode modes per method:
+
+  serial        — pre-batching orchestration: one ``engine.decode`` per
+                  leaf, one PRM/embedder call per candidate, jit
+                  signatures keyed on raw sequence length;
+  batched       — one decode stream + one padded-bucket PRM call per
+                  step, per-sequence paged attention;
+  batched-tree  — same orchestration, ``EngineConfig(attention="tree")``:
+                  the decode step walks the unique live pages of the
+                  whole tree, so shared prefixes are streamed once.
+
+The paper reports 1.4x throughput from 1.8x KV reduction on H100s
+behind SGLang; at tiny-CPU scale the wall-clock gain comes from
+collapsing per-leaf decode calls and the bounded jit-signature set,
+while the page accounting and the streamed-page counters show the
+memory and IO effects directly.  ``benchmarks/run.py`` archives the
+returned rows as ``BENCH_table2.json`` so the perf trajectory is
+tracked across PRs.
 """
 import dataclasses
 import time
@@ -26,8 +40,16 @@ import time
 import jax
 import numpy as np
 
+# (label, batched orchestration, EngineConfig.attention)
+MODES = [
+    ("serial", False, "paged"),
+    ("batched", True, "paged"),
+    ("batched-tree", True, "tree"),
+]
 
-def run(train_steps: int = 150, n_problems: int = 6, width: int = 12):
+
+def run(train_steps: int = 150, n_problems: int = 6, width: int = 12,
+        max_steps: int = 8):
     from repro.configs import get_config
     from repro.core import ETSConfig, SearchConfig, run_search
     from repro.models.model import build_model
@@ -56,14 +78,14 @@ def run(train_steps: int = 150, n_problems: int = 6, width: int = 12):
 
     out = {"rows": []}
     print(f"\n== Table 2: measured engine throughput (width={width}) ==")
-    print(f"{'method':8s} {'path':8s} {'acc':>5s} {'tok/s':>8s} "
-          f"{'dec/step':>8s} {'phys pages':>10s} {'KV red.':>8s}")
+    print(f"{'method':8s} {'path':12s} {'acc':>5s} {'tok/s':>8s} "
+          f"{'dec/step':>8s} {'pages/dec':>9s} {'IO shr':>6s} "
+          f"{'phys pages':>10s} {'KV red.':>8s}")
     base_pages = None
     rng = np.random.default_rng(123)
     problems = [task.sample_problem(rng) for _ in range(n_problems)]
     for method in ["rebase", "ets"]:
-        for batched in [False, True]:
-            path = "batched" if batched else "serial"
+        for path, batched, attention in MODES:
             # One engine + backend per configuration: jit caches persist
             # across problems and the warmup problem compiles the
             # decode/prefill steps, so the shared machinery is
@@ -74,58 +96,77 @@ def run(train_steps: int = 150, n_problems: int = 6, width: int = 12):
             # once at warmup).
             engine = PagedEngine(lm, lm_params, EngineConfig(
                 n_pages=2048, page_size=8,
-                max_batch=max(width * 2, 32), max_seq_len=200))
+                max_batch=max(width * 2, 32), max_seq_len=200,
+                attention=attention))
             backend = LMBackend(
                 engine, prm, prm_params, emb, emb_params,
                 BackendConfig(step_token=NEWLINE, eos_token=EOS,
                               max_step_tokens=12, max_depth=8),
                 answer_fn=ArithmeticTask.extract_answer, seed=500)
             scfg = SearchConfig(
-                method=method, width=width, max_steps=8, batched=batched,
+                method=method, width=width, max_steps=max_steps,
+                batched=batched,
                 ets=ETSConfig(lambda_b=2.0, lambda_d=1.0,
                               cluster_threshold=0.15))
 
             def solve(prompt):
-                engine.reset()
+                backend.reset()      # clears trace + counters, re-seeds
                 tree = backend.start(encode(prompt))
                 return run_search(backend, scfg, tree=tree)
 
             solve(problems[0][0])          # warmup: compile everything
-            correct = 0
-            engine.n_decoded_tokens = engine.n_decode_calls = 0
-            backend.kv_trace.clear()
-            steps = 0
+            correct = steps = toks = calls = dec_steps = 0
+            uniq = logical = 0
+            pages_trace = []
             t0 = time.time()
             for prompt, _, ans in problems:
                 res = solve(prompt)
                 correct += int(res.answer == ans)
                 steps += res.steps
+                # backend.reset() zeroes the counters per problem, so
+                # post-solve values are this problem's — accumulate
+                toks += engine.n_decoded_tokens
+                calls += engine.n_decode_calls
+                dec_steps += engine.n_decode_steps
+                uniq += engine.unique_pages_streamed
+                logical += engine.logical_pages_streamed
+                pages_trace += [t["physical_pages"]
+                                for t in backend.kv_trace]
             wall = time.time() - t0
-            toks = engine.n_decoded_tokens
-            calls = engine.n_decode_calls
-            avg_pages = float(np.mean(
-                [t["physical_pages"] for t in backend.kv_trace] or [0]))
+            avg_pages = float(np.mean(pages_trace or [0]))
             if base_pages is None:
                 base_pages = avg_pages
-            row = {"method": method, "path": path,
+            row = {"method": method, "path": path, "attention": attention,
                    "acc": correct / n_problems,
                    "tok_per_s": toks / wall,
                    "decode_calls_per_step": calls / max(steps, 1),
+                   "unique_pages_per_decode": uniq / max(dec_steps, 1),
+                   "logical_pages_per_decode": logical / max(dec_steps, 1),
+                   "io_sharing_ratio": logical / max(uniq, 1),
                    "phys_pages": avg_pages,
                    "kv_red": base_pages / max(avg_pages, 1e-9),
                    "wall_s": wall}
             out["rows"].append(row)
-            print(f"{method:8s} {path:8s} {row['acc']:5.2f} "
+            print(f"{method:8s} {path:12s} {row['acc']:5.2f} "
                   f"{row['tok_per_s']:8.1f} "
                   f"{row['decode_calls_per_step']:8.2f} "
+                  f"{row['unique_pages_per_decode']:9.1f} "
+                  f"{row['io_sharing_ratio']:5.2f}x "
                   f"{row['phys_pages']:10.1f} {row['kv_red']:7.2f}x")
     sp = {(r["method"], r["path"]): r for r in out["rows"]}
     for method in ["rebase", "ets"]:
-        s, b = sp[(method, "serial")], sp[(method, "batched")]
-        print(f"-> {method}: batched path {b['tok_per_s'] / s['tok_per_s']:.2f}x "
+        s = sp[(method, "serial")]
+        b = sp[(method, "batched")]
+        t = sp[(method, "batched-tree")]
+        print(f"-> {method}: batched {b['tok_per_s'] / s['tok_per_s']:.2f}x "
               f"tokens/s of serial "
               f"({s['decode_calls_per_step']:.2f} -> "
-              f"{b['decode_calls_per_step']:.2f} decode streams/step)")
-    print("-> ETS holds accuracy with measurably fewer live KV pages "
-          "(paper: 1.8x KV -> 1.4x throughput).")
+              f"{b['decode_calls_per_step']:.2f} decode streams/step); "
+              f"tree attention streams "
+              f"{t['unique_pages_per_decode']:.1f} unique vs "
+              f"{t['logical_pages_per_decode']:.1f} logical pages/step "
+              f"({t['io_sharing_ratio']:.2f}x IO sharing)")
+    print("-> ETS holds accuracy with measurably fewer live KV pages; "
+          "tree decode realizes the shared-prefix IO saving the cost "
+          "model promises (paper: 1.8x KV -> 1.4x throughput).")
     return out

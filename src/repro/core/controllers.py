@@ -292,5 +292,11 @@ def run_search(backend: Backend, scfg: SearchConfig,
 
     # unfinished leaves at exhaustion count as failures (no answer)
     ans = weighted_majority(completed)
+    kv_summary = tree.kv_summary()
+    # measured attention-IO (engine backends): pages streamed per decode
+    # step and the realized sharing ratio, next to the tree-level counts
+    io_fn = getattr(backend, "io_summary", None)
+    if io_fn is not None:
+        kv_summary = {**kv_summary, **io_fn()}
     return SearchResult(answer=ans, completed=completed, tree=tree,
-                        kv_summary=tree.kv_summary(), steps=steps)
+                        kv_summary=kv_summary, steps=steps)

@@ -9,4 +9,5 @@ ops.py holds the jit wrappers (auto interpret off-TPU); ref.py the pure-jnp
 oracles.
 """
 from . import ops  # noqa: F401
-from .ops import flash_prefill, paged_attention, tree_attention  # noqa: F401
+from .ops import (TreeMetadata, build_tree_metadata,  # noqa: F401
+                  flash_prefill, paged_attention, tree_attention)

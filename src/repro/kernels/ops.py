@@ -11,6 +11,8 @@ import jax
 
 from .flash_prefill import flash_prefill as _flash_prefill
 from .paged_attention import paged_attention as _paged_attention
+from .tree_attention import (TreeMetadata,  # noqa: F401  (re-export)
+                             build_tree_metadata)
 from .tree_attention import tree_attention as _tree_attention
 
 

@@ -23,6 +23,11 @@ def tree_attention_ref(q, k_pool, v_pool, page_list, page_mask, page_lens,
     q (B,H,hd); k/v_pool (P,S,K,hd); page_list (N,); page_mask (N,B);
     page_lens (N,).  Leaf b attends to all valid slots of pages with
     page_mask[n, b] — softmax over the union.
+
+    Matches the kernel's padding contract: zero-length (dump) page
+    entries contribute nothing, and a fully-masked batch row yields an
+    all-zero output (masked normalization, not a softmax over an empty
+    set — which would return garbage for padded rows).
     """
     B, H, hd = q.shape
     P, S, K, _ = k_pool.shape
@@ -41,8 +46,12 @@ def tree_attention_ref(q, k_pool, v_pool, page_list, page_mask, page_lens,
 
     qg = q.reshape(B, K, G, hd).astype(jnp.float32)
     s = jnp.einsum("bkgh,ckh->bkgc", qg, kk.astype(jnp.float32)) * scale
-    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    okb = ok[:, None, None, :]
+    s = jnp.where(okb, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(okb, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(l, 1e-30)
     out = jnp.einsum("bkgc,ckh->bkgh", p, vv.astype(jnp.float32))
     return out.reshape(B, H, hd).astype(q.dtype)
 

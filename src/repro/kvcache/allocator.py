@@ -15,12 +15,19 @@ Accounting properties used by tests and the Fig. 2 reproduction:
   * ``used_pages``  — unique physical pages alive (shared counted once).
   * ``logical_pages`` — sum over sequences of their table lengths
     (what per-sequence contiguous caches would cost).
+
+``tree_metadata`` derives the tree-attention operands for a decode step
+(unique live page list, per-page descendant bitmap over the padded
+batch, per-page valid lengths) from the live block tables.  Every
+mutating op bumps ``version``, and the derivation is memoized on
+(version, row layout), so the per-step cost is paid once per step — the
+engine's per-layer attention calls reuse the same arrays.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 @dataclass
@@ -55,6 +62,9 @@ class PageAllocator:
         self.refcount: List[int] = [0] * n_pages
         self.seqs: Dict[int, SequenceHandle] = {}
         self._next_seq = 0
+        # bumped on every mutation; keys the tree-metadata memo
+        self.version = 0
+        self._meta_cache: Optional[Tuple[tuple, object]] = None
 
     # -- stats -----------------------------------------------------------
     @property
@@ -83,17 +93,24 @@ class PageAllocator:
             self.free.append(pg)
 
     # -- public API --------------------------------------------------------
-    def new_seq(self, prompt_tokens: int = 0) -> Tuple[SequenceHandle, List[CopyOp]]:
-        """Create an empty sequence with room for `prompt_tokens`."""
+    def new_seq(self, prompt_tokens: int = 0) -> SequenceHandle:
+        """Create an empty sequence with room for `prompt_tokens`.
+
+        Never produces device copies: prompt KV is written by prefill
+        into freshly-allocated (unshared) pages, so unlike
+        ``append_tokens`` there is no CoW to report.
+        """
+        self.version += 1
         n_pages = -(-prompt_tokens // self.page_size) if prompt_tokens else 0
         table = [self._alloc_page() for _ in range(n_pages)]
         h = SequenceHandle(self._next_seq, table, prompt_tokens)
         self._next_seq += 1
         self.seqs[h.seq_id] = h
-        return h, []
+        return h
 
     def append_tokens(self, seq_id: int, n: int) -> List[CopyOp]:
         """Reserve slots for n new tokens; may CoW the shared last page."""
+        self.version += 1
         h = self.seqs[seq_id]
         ops: List[CopyOp] = []
         # CoW: if the last page is shared and not full, privatize it first
@@ -115,6 +132,7 @@ class PageAllocator:
 
     def branch(self, seq_id: int, n_branches: int = 1) -> List[SequenceHandle]:
         """Fork a sequence into n additional branches sharing its pages."""
+        self.version += 1
         h = self.seqs[seq_id]
         out = []
         for _ in range(n_branches):
@@ -127,9 +145,42 @@ class PageAllocator:
         return out
 
     def free_seq(self, seq_id: int) -> None:
+        self.version += 1
         h = self.seqs.pop(seq_id)
         for pg in h.block_table:
             self._release_page(pg)
+
+    # -- tree-attention metadata -------------------------------------------
+    def tree_metadata(self, seq_ids_by_row: Sequence[Optional[int]], *,
+                      pad_page: int = 0, min_pages: int = 8,
+                      check: bool = False):
+        """Tree-attention operands for one decode step.
+
+        ``seq_ids_by_row`` maps padded batch rows to live sequences
+        (None = inactive row -> all-zero mask column).  Returns a
+        ``repro.kernels.TreeMetadata``; memoized on (allocator version,
+        row layout) so repeated derivation within a step is free.
+        """
+        key = (self.version, tuple(seq_ids_by_row), pad_page, min_pages,
+               check)
+        if self._meta_cache is not None and self._meta_cache[0] == key:
+            return self._meta_cache[1]
+        from repro.kernels.tree_attention import build_tree_metadata
+        tables: List[List[int]] = []
+        lengths: List[int] = []
+        for sid in seq_ids_by_row:
+            if sid is None:
+                tables.append([])
+                lengths.append(0)
+            else:
+                h = self.seqs[sid]
+                tables.append(h.block_table)
+                lengths.append(h.length)
+        meta = build_tree_metadata(tables, lengths, self.page_size,
+                                   pad_page=pad_page, min_pages=min_pages,
+                                   check=check)
+        self._meta_cache = (key, meta)
+        return meta
 
     # -- invariants (tests) ------------------------------------------------
     def check_invariants(self) -> None:

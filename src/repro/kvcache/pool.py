@@ -87,6 +87,11 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
     block_tables : (B, T) int32     padded with -1
     lengths      : (B,) int32       context length per sequence
     Returns (B, H, hd).
+
+    Padding contract (same as the tree oracle in kernels/ref.py): a row
+    with no valid slots (all-(-1) table / zero length — an inactive
+    batch row) returns zeros via masked normalization rather than a
+    softmax over an empty set.
     """
     B, H, hd = q.shape
     P, S, K, _ = k_pool.shape
@@ -107,7 +112,11 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
     qg = q.reshape(B, K, G, hd)
     scores = jnp.einsum("bkgh,bckh->bkgc", qg.astype(jnp.float32),
                         kk.astype(jnp.float32)) * scale
-    scores = jnp.where(valid[:, None, None], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
+    vb = valid[:, None, None]
+    scores = jnp.where(vb, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.where(vb, jnp.exp(scores - m), 0.0)
+    probs = probs / jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True),
+                                1e-30)
     out = jnp.einsum("bkgc,bckh->bkgh", probs, vv.astype(jnp.float32))
     return out.reshape(B, H, hd).astype(q.dtype)

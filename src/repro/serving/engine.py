@@ -12,9 +12,24 @@ what PRM tree search actually needs (step-level expand -> score -> prune):
     engine-level measurement behind Table 1's KV reduction).
 
 The decode step pads the live set to ``max_batch`` so the jit signature is
-stable.  Attention runs through the paged-attention path: the pure-jnp
-reference everywhere, or the Pallas kernel (interpret on CPU, Mosaic on
-TPU) when ``use_kernel=True``.
+stable.  Two attention modes (``EngineConfig.attention``):
+
+  * ``"paged"`` — per-sequence paged attention over block tables; a page
+    shared by k descendant leaves is streamed k times per step.
+  * ``"tree"``  — tree attention over the step's unique live pages
+    (DeFT-style): each shared prefix page is streamed once for *all*
+    descendant leaves, masked by a per-page descendant bitmap.  The page
+    axis is padded to a power of two, so the jitted step compiles
+    O(log n_pages) signatures across a whole search run.
+
+Both modes share RoPE positions, KV writes and sampling, and agree to
+fp32 tolerance on logits (bit-identical sampled streams in practice).
+The engine counts ``unique_pages_streamed`` vs ``logical_pages_streamed``
+per decode step — the measured IO sharing ratio that the paper's
+Table 2 throughput claims rest on.
+
+Within a mode, attention runs the pure-jnp reference everywhere, or the
+Pallas kernel (interpret on CPU, Mosaic on TPU) when ``use_kernel=True``.
 
 Supports the dense/GQA families (the search LM + PRM of the paper are
 dense llama-style models); MoE/SSM serving goes through the unified
@@ -33,6 +48,7 @@ import numpy as np
 
 from repro.kvcache import KVPool, PageAllocator
 from repro.kvcache.pool import paged_attention_ref
+from repro.kernels.ref import tree_attention_ref
 from repro.models.layers import mlp_apply, rms_norm
 from repro.models.layers import apply_rope, rope_angles
 
@@ -43,7 +59,12 @@ class EngineConfig:
     page_size: int = 16
     max_batch: int = 64
     max_seq_len: int = 512
-    use_kernel: bool = False       # True: Pallas paged_attention
+    use_kernel: bool = False       # True: Pallas kernels
+    attention: str = "paged"       # "paged" | "tree" (see module doc)
+    trace_logits: bool = False     # keep per-step logits (tests only)
+
+    def __post_init__(self):
+        assert self.attention in ("paged", "tree"), self.attention
 
 
 class PagedEngine:
@@ -70,7 +91,18 @@ class PagedEngine:
         self.n_decode_calls = 0
         self.n_decode_steps = 0
         self.n_decoded_tokens = 0
+        # per-step attention IO accounting: pages the attention actually
+        # streams (unique — tree mode dedups shared prefixes) vs the
+        # per-leaf total a paged read pattern costs.  logical/unique is
+        # the measured sharing ratio.
+        self.unique_pages_streamed = 0
+        self.logical_pages_streamed = 0
+        # trace-time counter: +1 per compiled decode-step signature
+        # (tests assert the tree step stays O(log n_pages))
+        self.decode_traces = 0
+        self.logits_trace: List[np.ndarray] = []   # if ecfg.trace_logits
         self._decode_fn = self._build_decode_fn()
+        self._tree_decode_fn = self._build_tree_decode_fn()
         self._prefill_fn = self._build_prefill_fn()
 
     # ------------------------------------------------------------------
@@ -81,6 +113,10 @@ class PagedEngine:
             "physical_pages": self.alloc.used_pages,
             "logical_pages": self.alloc.logical_pages,
             "shared_pages": self.alloc.shared_pages(),
+            # cumulative attention-IO counters (callers diff successive
+            # samples for per-step deltas)
+            "unique_pages_streamed": self.unique_pages_streamed,
+            "logical_pages_streamed": self.logical_pages_streamed,
         }
 
     # ------------------------------------------------------------------
@@ -111,55 +147,95 @@ class PagedEngine:
 
         return jax.jit(prefill, donate_argnums=(4, 5))
 
-    def _build_decode_fn(self):
+    def _decode_body(self, params, tokens, lengths, pages, slots, active,
+                     pool_k, pool_v, attend):
+        """Shared transformer body of one lock-step decode.
+
+        tokens (B,) previous tokens; lengths (B,) context length
+        (position of the new token); pages/slots (B,) write targets.
+        ``attend(layer, q, pool_k, pool_v) -> (B, H, hd)`` is the only
+        thing the two attention modes disagree on — per-row RoPE and KV
+        writes are identical, which is what makes them interchangeable.
+        """
         cfg, model = self.cfg, self.model
+        B = tokens.shape[0]
+        cdt = jnp.float32
+        x = params["embed"].astype(cdt)[tokens][:, None]   # (B,1,d)
+        gp = params["groups"][0]
+        for l in range(cfg.n_layers):
+            blk = jax.tree.map(lambda a: a[l], gp)
+            h = rms_norm(blk["ln1"], x, cfg.norm_eps)
+            ap = blk["attn"]
+            hd = cfg.head_dim
+            q = (h @ ap["wq"]).reshape(B, 1, cfg.n_heads, hd)
+            k = (h @ ap["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+            v = (h @ ap["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+            if cfg.qk_norm:
+                q = rms_norm(ap["q_norm"], q, cfg.norm_eps)
+                k = rms_norm(ap["k_norm"], k, cfg.norm_eps)
+            ang = rope_angles(lengths[:, None], hd, cfg.rope_theta, ())
+            q = apply_rope(q, ang)
+            k = apply_rope(k, ang)
+            pool_k = pool_k.at[l, pages, slots].set(k[:, 0])
+            pool_v = pool_v.at[l, pages, slots].set(v[:, 0])
+            y = attend(l, q[:, 0], pool_k, pool_v)
+            x = x + (y.reshape(B, 1, -1) @ ap["wo"])
+            h = rms_norm(blk["ln2"], x, cfg.norm_eps)
+            x = x + mlp_apply(blk["mlp"], h, cfg.act)
+        logits = model.logits(params, x[:, 0])
+        logits = jnp.where(active[:, None], logits, 0.0)
+        return logits, pool_k, pool_v
+
+    def _build_decode_fn(self):
         use_kernel = self.ecfg.use_kernel
+        scale = self.cfg.head_dim ** -0.5
 
         def step(params, tokens, block_tables, lengths, pages, slots,
                  active, pool_k, pool_v):
-            """One lock-step decode for the padded batch.
+            """Paged lock-step decode: each row attends over its own
+            block table, so shared pages are streamed once per leaf."""
+            self.decode_traces += 1        # trace-time side effect
 
-            tokens (B,) previous tokens; lengths (B,) context length
-            (position of the new token); pages/slots (B,) write targets.
-            """
-            B = tokens.shape[0]
-            cdt = jnp.float32
-            x = params["embed"].astype(cdt)[tokens][:, None]   # (B,1,d)
-            gp = params["groups"][0]
-            scale = cfg.head_dim ** -0.5
-            for l in range(cfg.n_layers):
-                blk = jax.tree.map(lambda a: a[l], gp)
-                h = rms_norm(blk["ln1"], x, cfg.norm_eps)
-                ap = blk["attn"]
-                hd = cfg.head_dim
-                q = (h @ ap["wq"]).reshape(B, 1, cfg.n_heads, hd)
-                k = (h @ ap["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
-                v = (h @ ap["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
-                if cfg.qk_norm:
-                    q = rms_norm(ap["q_norm"], q, cfg.norm_eps)
-                    k = rms_norm(ap["k_norm"], k, cfg.norm_eps)
-                ang = rope_angles(lengths[:, None], hd, cfg.rope_theta, ())
-                q = apply_rope(q, ang)
-                k = apply_rope(k, ang)
-                pool_k = pool_k.at[l, pages, slots].set(k[:, 0])
-                pool_v = pool_v.at[l, pages, slots].set(v[:, 0])
+            def attend(l, q, pk, pv):
                 if use_kernel:
                     from repro.kernels import ops
-                    y = ops.paged_attention(
-                        q[:, 0], pool_k[l], pool_v[l], block_tables,
-                        lengths + 1, scale=scale)
-                else:
-                    y = paged_attention_ref(
-                        q[:, 0], pool_k[l], pool_v[l], block_tables,
-                        lengths + 1, scale=scale)
-                x = x + (y.reshape(B, 1, -1) @ ap["wo"])
-                h = rms_norm(blk["ln2"], x, cfg.norm_eps)
-                x = x + mlp_apply(blk["mlp"], h, cfg.act)
-            logits = model.logits(params, x[:, 0])
-            logits = jnp.where(active[:, None], logits, 0.0)
-            return logits, pool_k, pool_v
+                    return ops.paged_attention(q, pk[l], pv[l],
+                                               block_tables, lengths + 1,
+                                               scale=scale)
+                return paged_attention_ref(q, pk[l], pv[l], block_tables,
+                                           lengths + 1, scale=scale)
+
+            return self._decode_body(params, tokens, lengths, pages, slots,
+                                     active, pool_k, pool_v, attend)
 
         return jax.jit(step, donate_argnums=(7, 8))
+
+    def _build_tree_decode_fn(self):
+        use_kernel = self.ecfg.use_kernel
+        scale = self.cfg.head_dim ** -0.5
+
+        def step(params, tokens, lengths, pages, slots, active,
+                 page_list, page_mask, page_lens, pool_k, pool_v):
+            """Tree lock-step decode: attention walks the unique live
+            pages of the whole tree (page_list padded to a power of two,
+            zero-length entries inert), so a shared prefix page is
+            streamed once for all descendant rows."""
+            self.decode_traces += 1        # trace-time side effect
+
+            def attend(l, q, pk, pv):
+                if use_kernel:
+                    from repro.kernels import ops
+                    return ops.tree_attention(q, pk[l], pv[l], page_list,
+                                              page_mask, page_lens,
+                                              scale=scale)
+                return tree_attention_ref(q, pk[l], pv[l], page_list,
+                                          page_mask, page_lens,
+                                          scale=scale)
+
+            return self._decode_body(params, tokens, lengths, pages, slots,
+                                     active, pool_k, pool_v, attend)
+
+        return jax.jit(step, donate_argnums=(9, 10))
 
     # ------------------------------------------------------------------
     # Public host API
@@ -176,7 +252,7 @@ class PagedEngine:
         toks = list(int(t) for t in tokens)
         assert toks, "empty prompt"
         ctx = toks[:-1]
-        h, _ = self.alloc.new_seq(len(ctx))
+        h = self.alloc.new_seq(len(ctx))
         self.tokens[h.seq_id] = toks
         if ctx:
             ps = self.ecfg.page_size
@@ -202,9 +278,21 @@ class PagedEngine:
         """Free every live sequence; keeps the pool and compiled steps.
 
         Lets one engine serve a stream of independent search problems
-        without re-jitting prefill/decode (benchmarks, serving loops)."""
+        without re-jitting prefill/decode (benchmarks, serving loops).
+        Cumulative throughput/IO counters are kept (callers zero them
+        explicitly when they delimit a measurement window)."""
         for sid in list(self.alloc.seqs):
             self.free(sid)
+        self.logits_trace.clear()
+
+    def reset_counters(self) -> None:
+        """Zero the throughput and attention-IO counters (measurement
+        window delimiter for benchmarks and traces)."""
+        self.n_decode_calls = 0
+        self.n_decode_steps = 0
+        self.n_decoded_tokens = 0
+        self.unique_pages_streamed = 0
+        self.logical_pages_streamed = 0
 
     # ------------------------------------------------------------------
     def decode(self, seq_ids: Sequence[int], n_tokens: int,
@@ -218,6 +306,7 @@ class PagedEngine:
         """
         from .sampler import sample_tokens
         ecfg = self.ecfg
+        tree_mode = ecfg.attention == "tree"
         ids = list(seq_ids)
         assert len(ids) <= ecfg.max_batch, (len(ids), ecfg.max_batch)
         out: Dict[int, List[int]] = {i: [] for i in ids}
@@ -239,29 +328,49 @@ class PagedEngine:
             B = ecfg.max_batch
             T = self.max_pages_per_seq
             tok = np.zeros(B, np.int32)
-            bt = np.full((B, T), -1, np.int32)
+            bt = None if tree_mode else np.full((B, T), -1, np.int32)
             lens = np.zeros(B, np.int32)
             pages = np.full(B, self.dump_page, np.int32)  # inactive -> dump
             slots = np.zeros(B, np.int32)
             act = np.zeros(B, bool)
+            rows: List[Optional[int]] = [None] * B
             for j, i in enumerate(ids):
                 if done[i]:
                     continue
                 h = self.alloc.seqs[i]
                 hist = self.tokens[i]
                 tok[j] = hist[-1]
-                n_t = len(h.block_table)
-                bt[j, :n_t] = h.block_table
+                if not tree_mode:
+                    bt[j, :len(h.block_table)] = h.block_table
                 pos = h.length - 1          # slot reserved for the new token
                 lens[j] = pos
                 pages[j] = h.block_table[pos // ecfg.page_size]
                 slots[j] = pos % ecfg.page_size
                 act[j] = True
+                rows[j] = i
 
-            logits, self.pool.k, self.pool.v = self._decode_fn(
-                self.params, jnp.asarray(tok), jnp.asarray(bt),
-                jnp.asarray(lens), jnp.asarray(pages), jnp.asarray(slots),
-                jnp.asarray(act), self.pool.k, self.pool.v)
+            if tree_mode:
+                meta = self.alloc.tree_metadata(rows,
+                                                pad_page=self.dump_page)
+                self.unique_pages_streamed += meta.n_unique
+                self.logical_pages_streamed += meta.n_logical
+                logits, self.pool.k, self.pool.v = self._tree_decode_fn(
+                    self.params, jnp.asarray(tok), jnp.asarray(lens),
+                    jnp.asarray(pages), jnp.asarray(slots), jnp.asarray(act),
+                    jnp.asarray(meta.page_list), jnp.asarray(meta.page_mask),
+                    jnp.asarray(meta.page_lens), self.pool.k, self.pool.v)
+            else:
+                # paged reads stream every page of every live row
+                n_logical = sum(len(self.alloc.seqs[i].block_table)
+                                for i in live)
+                self.unique_pages_streamed += n_logical
+                self.logical_pages_streamed += n_logical
+                logits, self.pool.k, self.pool.v = self._decode_fn(
+                    self.params, jnp.asarray(tok), jnp.asarray(bt),
+                    jnp.asarray(lens), jnp.asarray(pages), jnp.asarray(slots),
+                    jnp.asarray(act), self.pool.k, self.pool.v)
+            if ecfg.trace_logits:
+                self.logits_trace.append(np.asarray(logits))
             key, sub = jax.random.split(key)
             new = np.asarray(sample_tokens(sub, logits, temperature))
             for j, i in enumerate(ids):

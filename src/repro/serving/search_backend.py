@@ -40,7 +40,11 @@ the bucketed functions so tests can assert the recompilation bound.
 sequences of pruned leaves — this is where ETS's ILP decisions become
 physical page releases, and where ``kv_stats`` is sampled for the
 engine-level KV trace (the measured counterpart of the tree-level
-accounting in repro.core.tree).
+accounting in repro.core.tree).  Each trace entry also carries the
+step's attention-IO deltas (``unique_pages_streamed`` vs
+``logical_pages_streamed``); ``io_summary`` reduces them to the measured
+sharing ratio, which run_search merges into ``SearchResult.kv_summary``
+so ETS-vs-REBASE reports show measured IO next to page counts.
 """
 from __future__ import annotations
 
@@ -109,8 +113,12 @@ class LMBackend:
         self.embed_params = embed_params
         self.bcfg = bcfg
         self.answer_fn = answer_fn
+        self.seed = seed
         self.key = jax.random.key(seed)
         self.kv_trace: List[Dict[str, int]] = []
+        # last sampled cumulative IO counters (kv_trace stores deltas)
+        self._last_io = (getattr(engine, "unique_pages_streamed", 0),
+                         getattr(engine, "logical_pages_streamed", 0))
         self._score_fn = jax.jit(
             lambda p, toks: prm_model.reward(p, {"tokens": toks}))
         self._embed_fn = jax.jit(
@@ -261,4 +269,44 @@ class LMBackend:
         for sid in list(self.engine.alloc.seqs):
             if sid not in keep:
                 self.engine.free(sid)
-        self.kv_trace.append(self.engine.kv_stats())
+        stats = dict(self.engine.kv_stats())
+        # convert the engine's cumulative IO counters to per-step deltas
+        # (what this search step's decode actually streamed)
+        uniq = stats.pop("unique_pages_streamed", 0)
+        logical = stats.pop("logical_pages_streamed", 0)
+        stats["unique_pages_streamed"] = uniq - self._last_io[0]
+        stats["logical_pages_streamed"] = logical - self._last_io[1]
+        self._last_io = (uniq, logical)
+        self.kv_trace.append(stats)
+
+    def io_summary(self) -> Dict[str, float]:
+        """Measured attention-IO over the recorded steps: pages streamed
+        per decode step and the realized sharing ratio (>1 whenever
+        branches share prefix pages and the engine runs tree attention).
+        Merged into ``SearchResult.kv_summary`` by run_search."""
+        uniq = sum(t.get("unique_pages_streamed", 0) for t in self.kv_trace)
+        logical = sum(t.get("logical_pages_streamed", 0)
+                      for t in self.kv_trace)
+        steps = max(len(self.kv_trace), 1)
+        return {
+            "unique_pages_streamed": uniq,
+            "logical_pages_streamed": logical,
+            "pages_streamed_per_step": uniq / steps,
+            "io_sharing_ratio": logical / max(uniq, 1),
+        }
+
+    def reset(self) -> None:
+        """Reset for an independent search problem on the same backend:
+        frees every engine sequence, clears the KV/IO trace, zeroes the
+        engine throughput/IO counters, and re-seeds the sampling key —
+        so successive problems neither mix KV traces nor leak RNG state.
+        Jit caches (decode/prefill/bucketed PRM + embedder) and the
+        jit-trace counters (``score_traces`` etc., which track cache
+        lifetime, not per-problem state) survive untouched."""
+        self.engine.reset()
+        if hasattr(self.engine, "reset_counters"):
+            self.engine.reset_counters()
+        self.kv_trace.clear()
+        self.key = jax.random.key(self.seed)
+        self._last_io = (getattr(self.engine, "unique_pages_streamed", 0),
+                         getattr(self.engine, "logical_pages_streamed", 0))

@@ -95,6 +95,29 @@ def test_tree_attention_matches_ref(case):
                                rtol=3e-5, atol=3e-5)
 
 
+def test_tree_attention_padded_metadata_inert():
+    """Padding contract: zero-length dump entries and fully-masked batch
+    rows contribute nothing, in the kernel and the oracle alike."""
+    from repro.kernels import build_tree_metadata
+    P, S, K, H, hd, B = 16, 8, 2, 4, 32, 6
+    kp, vp = _rand((P, S, K, hd)), _rand((P, S, K, hd))
+    q = _rand((B, H, hd))
+    # rows 0-2 share prefix page 3; rows 3-5 are inactive padding
+    meta = build_tree_metadata([[3, 4], [3, 5], [3, 6, 7], [], [], []],
+                               [14, 12, 19, 0, 0, 0], S,
+                               pad_page=P - 1, check=True)
+    assert meta.page_list.shape[0] == 8 and meta.n_unique == 5
+    args = (q, kp, vp, jnp.asarray(meta.page_list),
+            jnp.asarray(meta.page_mask), jnp.asarray(meta.page_lens))
+    out = tree_attention(*args, scale=hd ** -0.5, interpret=True)
+    ref = tree_attention_ref(*args, scale=hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+    # inactive rows come out exactly zero (no NaNs from empty softmax)
+    assert np.all(np.asarray(out)[3:] == 0)
+    assert np.all(np.asarray(ref)[3:] == 0)
+
+
 def test_tree_attention_equals_paged_for_disjoint_paths():
     """With no sharing, tree attention == per-sequence paged attention."""
     B, H, K, hd, S = 3, 4, 2, 32, 8

@@ -33,7 +33,7 @@ def test_allocator_invariants_random_ops(ops):
     for op, arg in ops:
         try:
             if op == "new":
-                h, _ = a.new_seq(arg)
+                h = a.new_seq(arg)
                 live.append(h.seq_id)
             elif op == "append" and live:
                 a.append_tokens(live[int(rng.integers(len(live)))], arg)
@@ -54,7 +54,7 @@ def test_allocator_invariants_random_ops(ops):
 
 def test_branch_shares_pages_and_cow_splits():
     a = PageAllocator(64, 16)
-    h, _ = a.new_seq(40)           # 3 pages, last partially full (8 slots)
+    h = a.new_seq(40)              # 3 pages, last partially full (8 slots)
     (b,) = a.branch(h.seq_id, 1)
     assert a.used_pages == 3
     assert a.logical_pages == 6
@@ -69,7 +69,7 @@ def test_branch_shares_pages_and_cow_splits():
 
 def test_full_page_branch_no_cow():
     a = PageAllocator(64, 16)
-    h, _ = a.new_seq(32)           # exactly 2 full pages
+    h = a.new_seq(32)              # exactly 2 full pages
     (b,) = a.branch(h.seq_id, 1)
     ops = a.append_tokens(b.seq_id, 1)
     assert ops == []               # new page allocated, nothing copied

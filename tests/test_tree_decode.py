@@ -1,0 +1,218 @@
+"""Tree-attention decode stack: metadata invariants (property-tested),
+tree==paged decode equivalence over a full ETS search, measured IO
+sharing, and the tree-step recompilation bound."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import HealthCheck, given, settings, st
+
+from repro.configs import get_config
+from repro.core import ETSConfig, SearchConfig, run_search
+from repro.kernels import build_tree_metadata
+from repro.kvcache import PageAllocator
+from repro.kvcache.allocator import OutOfPages
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, PagedEngine
+from repro.serving.search_backend import BackendConfig, LMBackend
+
+
+# ---------------------------------------------------------------------------
+# build_tree_metadata invariants over random allocator histories
+# ---------------------------------------------------------------------------
+
+def _assert_metadata_invariants(a: PageAllocator, min_pages: int = 8):
+    rows = list(a.seqs)
+    meta = a.tree_metadata(rows, pad_page=0, min_pages=min_pages,
+                           check=True)
+    S = a.page_size
+    # unique live pages == allocator accounting (shared counted once)
+    assert meta.n_unique == a.used_pages
+    assert meta.n_logical == a.logical_pages
+    # power-of-two padding, padded entries inert
+    N = meta.page_list.shape[0]
+    assert N >= min_pages and N & (N - 1) == 0
+    assert np.all(meta.page_lens[meta.n_unique:] == 0)
+    assert np.all(meta.page_mask[meta.n_unique:] == 0)
+    # every live (row, table position) covered exactly once by the bitmap
+    covered = {}
+    for n in range(meta.n_unique):
+        for j in np.nonzero(meta.page_mask[n])[0]:
+            pg = int(meta.page_list[n])
+            h = a.seqs[rows[j]]
+            assert pg in h.block_table
+            p = h.block_table.index(pg)
+            assert (rows[j], p) not in covered
+            covered[(rows[j], p)] = pg
+            # per-page valid length matches the owning row's fill
+            assert meta.page_lens[n] == min(S, h.length - p * S)
+    n_positions = sum(len(a.seqs[r].block_table) for r in rows)
+    assert len(covered) == n_positions
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(
+    st.one_of(
+        st.tuples(st.just("new"), st.integers(0, 40)),
+        st.tuples(st.just("append"), st.integers(1, 30)),
+        st.tuples(st.just("branch"), st.integers(1, 3)),
+        st.tuples(st.just("free"), st.integers(0, 10)),
+    ), min_size=1, max_size=30))
+def test_tree_metadata_invariants_random_ops(ops):
+    a = PageAllocator(n_pages=256, page_size=16)
+    live = []
+    rng = np.random.default_rng(1)
+    for op, arg in ops:
+        try:
+            if op == "new":
+                live.append(a.new_seq(arg).seq_id)
+            elif op == "append" and live:
+                a.append_tokens(live[int(rng.integers(len(live)))], arg)
+            elif op == "branch" and live:
+                bs = a.branch(live[int(rng.integers(len(live)))], arg)
+                live.extend(b.seq_id for b in bs)
+            elif op == "free" and live:
+                a.free_seq(live.pop(int(rng.integers(len(live)))))
+        except OutOfPages:
+            pass
+        _assert_metadata_invariants(a)
+
+
+def test_tree_metadata_inactive_rows_and_memo():
+    a = PageAllocator(64, 8)
+    h = a.new_seq(20)               # 3 pages (last fill 4)
+    (b,) = a.branch(h.seq_id, 1)
+    rows = [h.seq_id, None, b.seq_id, None]
+    meta = a.tree_metadata(rows, pad_page=5)
+    assert meta.n_unique == 3 and meta.n_logical == 6
+    # inactive rows have all-zero mask columns
+    assert np.all(meta.page_mask[:, 1] == 0)
+    assert np.all(meta.page_mask[:, 3] == 0)
+    # shared pages cover both live rows
+    assert np.all(meta.page_mask[:3, 0] == 1)
+    assert np.all(meta.page_mask[:3, 2] == 1)
+    assert list(meta.page_lens[:3]) == [8, 8, 4]
+    # memoized until the allocator mutates
+    assert a.tree_metadata(rows, pad_page=5) is meta
+    a.append_tokens(b.seq_id, 1)    # CoW privatizes the partial page
+    meta2 = a.tree_metadata(rows, pad_page=5)
+    assert meta2 is not meta
+    assert meta2.n_unique == 4
+
+
+def test_build_tree_metadata_rejects_divergent_shared_fill():
+    # same physical page with two different implied fills must trip the
+    # invariant check — the tree contract the kernel depends on
+    with pytest.raises(AssertionError):
+        build_tree_metadata([[3], [3]], [5, 7], 8, check=True)
+
+
+# ---------------------------------------------------------------------------
+# tree decode == paged decode over a full multi-step ETS search
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_models():
+    lm_cfg = dataclasses.replace(get_config("tiny-lm"), n_layers=2,
+                                 d_model=64, n_heads=4, n_kv_heads=2,
+                                 d_ff=128)
+    lm = build_model(lm_cfg, remat=False)
+    lm_params = lm.init(jax.random.key(0))
+    prm = build_model(dataclasses.replace(lm_cfg, n_layers=1),
+                      with_value_head=True, remat=False)
+    prm_params = prm.init(jax.random.key(1))
+    emb_cfg = dataclasses.replace(get_config("tiny-embedder"), n_layers=1,
+                                  d_model=64, n_heads=2, n_kv_heads=2,
+                                  d_ff=128)
+    emb = build_model(emb_cfg, remat=False)
+    emb_params = emb.init(jax.random.key(2))
+    return (lm, lm_params), (prm, prm_params), (emb, emb_params)
+
+
+def _search_backend(tiny_models, attention, trace_logits=True):
+    (lm, lm_params), (prm, prm_params), (emb, emb_params) = tiny_models
+    engine = PagedEngine(lm, lm_params, EngineConfig(
+        n_pages=256, page_size=8, max_batch=16, max_seq_len=128,
+        attention=attention, trace_logits=trace_logits))
+    backend = LMBackend(engine, prm, prm_params, emb, emb_params,
+                        BackendConfig(step_token=2, eos_token=3,
+                                      max_step_tokens=6, max_depth=4),
+                        answer_fn=lambda full: None, seed=13)
+    return engine, backend
+
+
+def _run_ets(backend, width=6, max_steps=3):
+    tree = backend.start(list(range(4, 21)))
+    return run_search(backend, SearchConfig(
+        method="ets", width=width, max_steps=max_steps,
+        ets=ETSConfig(lambda_b=1.0, lambda_d=1.0,
+                      cluster_threshold=0.2)), tree=tree)
+
+
+def test_tree_decode_matches_paged_over_full_search(tiny_models):
+    eng_p, be_p = _search_backend(tiny_models, "paged")
+    eng_t, be_t = _search_backend(tiny_models, "tree")
+    res_p = _run_ets(be_p)
+    res_t = _run_ets(be_t)
+    assert res_p.steps == res_t.steps >= 2
+
+    # bit-identical sampled token streams under the shared key
+    assert len(res_p.tree.nodes) == len(res_t.tree.nodes)
+    for np_, nt in zip(res_p.tree.nodes, res_t.tree.nodes):
+        assert np_.payload["tokens"] == nt.payload["tokens"]
+        assert np_.reward == nt.reward
+
+    # decode logits allclose at fp32 every micro-step (inactive rows are
+    # zeroed by the active mask in both modes, so full-array compare)
+    assert len(eng_p.logits_trace) == len(eng_t.logits_trace) > 0
+    for lp, lt in zip(eng_p.logits_trace, eng_t.logits_trace):
+        np.testing.assert_allclose(lp, lt, rtol=1e-5, atol=1e-5)
+
+    # the tree step streamed strictly fewer pages (branches share the
+    # 17-token prompt prefix), the paged step streamed one copy per leaf
+    assert eng_t.unique_pages_streamed < eng_t.logical_pages_streamed
+    assert eng_p.unique_pages_streamed == eng_p.logical_pages_streamed
+    assert eng_t.logical_pages_streamed == eng_p.logical_pages_streamed
+
+    # measured IO sharing lands in kv_trace and kv_summary
+    assert res_t.kv_summary["io_sharing_ratio"] > 1.0
+    assert res_p.kv_summary["io_sharing_ratio"] == 1.0
+    per_step = [t["unique_pages_streamed"] for t in be_t.kv_trace]
+    assert sum(per_step) == eng_t.unique_pages_streamed
+    assert all(u <= l for u, l in zip(
+        per_step, (t["logical_pages_streamed"] for t in be_t.kv_trace)))
+
+
+def test_tree_decode_recompile_bound(tiny_models):
+    """The tree step's jit signature count stays O(log n_pages): the
+    page axis is bucketed to powers of two, so a whole search compiles
+    at most one signature per bucket."""
+    eng, be = _search_backend(tiny_models, "tree", trace_logits=False)
+    _run_ets(be)
+    first = eng.decode_traces
+    n_buckets = int(math.log2(eng.ecfg.n_pages)) + 1
+    assert first <= n_buckets
+    # a second problem on the same backend re-traces nothing new unless
+    # it visits a new page bucket
+    be.reset()
+    _run_ets(be)
+    assert eng.decode_traces <= n_buckets
+
+
+def test_backend_reset_isolates_problems(tiny_models):
+    eng, be = _search_backend(tiny_models, "tree", trace_logits=False)
+    res1 = _run_ets(be)
+    trace1 = [dict(t) for t in be.kv_trace]
+    be.reset()
+    assert be.kv_trace == [] and eng.alloc.used_pages == 0
+    assert eng.n_decoded_tokens == 0 and eng.unique_pages_streamed == 0
+    # same seed + clean state => the next problem reproduces exactly
+    res2 = _run_ets(be)
+    assert [n.payload["tokens"] for n in res1.tree.nodes] == \
+        [n.payload["tokens"] for n in res2.tree.nodes]
+    assert [dict(t) for t in be.kv_trace] == trace1
+    assert res1.kv_summary == res2.kv_summary
