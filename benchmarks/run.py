@@ -6,9 +6,12 @@ Each module's run() prints a human-readable table and returns a dict that
 is archived under experiments/bench/.  The table2 rows are additionally
 written to ``BENCH_table2.json`` (repo root by default) — the
 machine-readable perf record (tokens/s, decode calls/step, pages
-streamed per decode step for serial / batched-paged / batched-tree)
-that tracks the serving trajectory across PRs; CI uploads it as an
-artifact from the smoke invocation.
+streamed per decode step for serial / batched-paged / batched-tree,
+plus the prefill-ingestion section: serial-dense vs batched-flash
+prompt tok/s) that tracks the serving trajectory across PRs; CI uploads
+it as an artifact from the smoke invocation and
+``benchmarks/trend_check.py`` fails the smoke job on a >2x tok/s
+regression against the committed copy.
 
 ``--smoke`` shrinks everything to a tiny 2-step configuration that
 finishes in a couple of minutes on CPU — a liveness check for the whole
@@ -74,7 +77,9 @@ def main() -> None:
         if name == "table2":
             with open(args.bench_json, "w") as f:
                 json.dump({"smoke": args.smoke, "fast": args.fast,
-                           "rows": res["rows"]}, f, indent=1, default=str)
+                           "rows": res["rows"],
+                           "prefill": res.get("prefill", [])},
+                          f, indent=1, default=str)
             print(f"[table2] rows -> {args.bench_json}")
         print(f"[{name}] done in {res['wall_s']}s\n")
 

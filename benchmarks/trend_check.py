@@ -1,0 +1,87 @@
+"""Bench trend check: fail CI on a large tokens/s regression.
+
+    python -m benchmarks.trend_check \
+        --committed /tmp/bench_committed.json --fresh BENCH_table2.json
+
+Compares a fresh ``BENCH_table2.json`` (written by
+``benchmarks/run.py --only table2 --smoke``) against the committed copy
+snapshotted before the run.  Every decode row is matched on
+(method, path) and every prefill row on (path); the check fails when a
+fresh ``tok_per_s`` drops below ``committed / max_ratio`` (default 2x —
+generous because CI machines are noisy; the point is catching
+order-of-magnitude orchestration regressions, not 10% jitter).  Smoke
+rows are tiny and the serial ones especially jittery, so the check runs
+in the non-blocking slow job: a red trend is a prompt to look at the
+uploaded artifact, not a merge gate.
+
+Rows present on only one side are reported but don't fail the check, so
+adding a new mode in a PR doesn't require regenerating history first.
+"""
+import argparse
+import json
+import sys
+
+
+def _index(rows, keys):
+    return {tuple(r[k] for k in keys): r for r in rows}
+
+
+def _compare(section, committed_rows, fresh_rows, keys, max_ratio):
+    """Returns a list of failure strings for one section."""
+    base = _index(committed_rows, keys)
+    cur = _index(fresh_rows, keys)
+    failures = []
+    for key, old in sorted(base.items()):
+        new = cur.get(key)
+        label = f"{section} {'/'.join(str(k) for k in key)}"
+        if new is None:
+            print(f"[trend] {label}: missing from fresh run (skipped)")
+            continue
+        ratio = old["tok_per_s"] / max(new["tok_per_s"], 1e-9)
+        status = "FAIL" if ratio > max_ratio else "ok"
+        print(f"[trend] {label}: {old['tok_per_s']:.1f} -> "
+              f"{new['tok_per_s']:.1f} tok/s ({ratio:.2f}x slower) "
+              f"[{status}]")
+        if ratio > max_ratio:
+            failures.append(label)
+    for key in sorted(set(cur) - set(base)):
+        print(f"[trend] {section} {'/'.join(str(k) for k in key)}: "
+              f"new row (no baseline)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--committed", required=True,
+                    help="BENCH_table2.json snapshotted before the run")
+    ap.add_argument("--fresh", required=True,
+                    help="BENCH_table2.json written by the fresh run")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when committed/fresh tok_per_s exceeds this")
+    args = ap.parse_args()
+    with open(args.committed) as f:
+        committed = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    if committed.get("smoke") != fresh.get("smoke") \
+            or committed.get("fast") != fresh.get("fast"):
+        print("[trend] WARNING: comparing runs of different sizes "
+              f"(committed smoke={committed.get('smoke')} "
+              f"fast={committed.get('fast')}, fresh "
+              f"smoke={fresh.get('smoke')} fast={fresh.get('fast')})")
+    failures = _compare("decode", committed.get("rows", []),
+                        fresh.get("rows", []), ("method", "path"),
+                        args.max_ratio)
+    failures += _compare("prefill", committed.get("prefill", []),
+                         fresh.get("prefill", []), ("path",),
+                         args.max_ratio)
+    if failures:
+        print(f"[trend] FAILED: >{args.max_ratio}x tok/s regression in "
+              f"{len(failures)} row(s): {', '.join(failures)}")
+        sys.exit(1)
+    print("[trend] ok: no row regressed beyond "
+          f"{args.max_ratio}x tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Markdown link check (stdlib-only) — the CI docs lint step.
+
+Scans every tracked ``*.md`` file for inline links ``[text](target)``
+and verifies that each relative target resolves to an existing file or
+directory (anchors are stripped; absolute http(s)/mailto links are
+skipped — this is a repo-consistency check, not a web crawler).
+
+    python scripts/check_md_links.py [root]
+
+Exits non-zero listing every dangling link, so renaming a file without
+updating README.md / docs/ fails CI instead of silently rotting.
+"""
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "experiments",
+             "node_modules", ".venv"}
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for name in filenames:
+            if name.endswith(".md"):
+                yield os.path.join(dirpath, name)
+
+
+def check_file(path: str, root: str):
+    """Yields (link, resolved_path) for every dangling link in `path`."""
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    # fenced code blocks routinely contain example "[x](y)" syntax
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in LINK_RE.findall(text):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:
+            continue
+        base = root if target.startswith("/") else os.path.dirname(path)
+        resolved = os.path.normpath(os.path.join(base, target.lstrip("/")))
+        if not os.path.exists(resolved):
+            yield target, resolved
+
+
+def main() -> None:
+    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1 else ".")
+    n_files = n_links = 0
+    dangling = []
+    for path in sorted(md_files(root)):
+        n_files += 1
+        for target, resolved in check_file(path, root):
+            dangling.append((os.path.relpath(path, root), target))
+        with open(path, encoding="utf-8") as f:
+            n_links += len(LINK_RE.findall(f.read()))
+    for src, target in dangling:
+        print(f"DANGLING  {src}: ({target})")
+    print(f"checked {n_files} markdown files, {n_links} links, "
+          f"{len(dangling)} dangling")
+    sys.exit(1 if dangling else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,12 +5,13 @@ Public API:
   rebase_weights / rebase_reweight   — Eq. (1) / Eq. (3)
   ETSConfig, ets_prune               — Eq. (2)/(4) ILP pruning step
   SearchConfig, run_search           — unified beam/DVTS/REBASE/ETS loop
+  run_search_many                    — sweep driver (one batched prefill)
   SyntheticTaskConfig, SyntheticProblem, evaluate_method — oracle task
   HardwareModel, simulate_search_cost — §3 memory-op cost model (Fig. 2)
 """
 from .clustering import cluster_embeddings  # noqa: F401
 from .controllers import (Backend, SearchConfig, SearchResult,  # noqa: F401
-                          run_search, weighted_majority)
+                          run_search, run_search_many, weighted_majority)
 from .costsim import HardwareModel, simulate_search_cost  # noqa: F401
 from .ets import ETSConfig, ETSStep, ets_prune  # noqa: F401
 from .ilp import (SelectionProblem, SelectionResult, greedy_select,  # noqa: F401

@@ -300,3 +300,32 @@ def run_search(backend: Backend, scfg: SearchConfig,
         kv_summary = {**kv_summary, **io_fn()}
     return SearchResult(answer=ans, completed=completed, tree=tree,
                         kv_summary=kv_summary, steps=steps)
+
+
+def run_search_many(backend, scfg: SearchConfig,
+                    prompts: Sequence[Sequence[int]]) -> List[SearchResult]:
+    """Multi-problem sweep: one batched prefill stream, then the searches.
+
+    Uses the backend's ``start_many`` when present — the LM backend
+    routes it through ``engine.prefill_many``, so every prompt of the
+    sweep is ingested in a single lock-step, length-bucketed
+    flash-prefill stream instead of one serial dense prefill per
+    problem (the serving bottleneck the ROADMAP flags).  Backends
+    without ``start_many`` fall back to per-prompt ``start``.  The
+    searches themselves still run one problem at a time on the shared
+    engine; a backend-level ``io_summary`` therefore covers the sweep
+    cumulatively, not per problem.
+
+    Capacity: every prompt's pages stay pinned until its own search
+    branches its root, so the KV pool must hold all of the sweep's
+    prompts *plus* one search's working set at once — chunk the prompt
+    list for sweeps that would exceed ``n_pages`` (a per-problem
+    start/run/reset loop has no such cliff, at the cost of serial
+    prefill).
+    """
+    starter = getattr(backend, "start_many", None)
+    if starter is not None:
+        trees = list(starter(prompts))
+    else:
+        trees = [backend.start(p) for p in prompts]
+    return [run_search(backend, scfg, tree=t) for t in trees]

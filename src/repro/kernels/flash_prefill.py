@@ -9,6 +9,16 @@ SWA archs (mixtral, zamba2-long) rely on.
 
 Block sizes default to (128, 128): MXU-aligned for hd in {64, 128} and a
 VMEM footprint of ~3 tiles * 128*128*4B.
+
+Padding contract (how the paged engine batches prompts through this
+kernel without a length operand): prompts are RIGHT-padded to the
+power-of-two token bucket, so with ``causal=True`` every padded KV
+position lies strictly in the future of every valid query and is
+masked by causality alone — no per-row length masking is needed.
+Padded query rows produce garbage that the caller discards (the engine
+gathers logits at each row's true last position and zeroes inactive
+rows).  The contract only holds for causal use; non-causal callers must
+mask padding themselves.
 """
 from __future__ import annotations
 

@@ -37,6 +37,14 @@ def tree_attention(q, k_pool, v_pool, page_list, page_mask, page_lens, *,
 def flash_prefill(q, k, v, *, scale: float, causal: bool = True,
                   window: int = 0, block_q: int = 128, block_k: int = 128,
                   interpret=None):
+    """Causal flash attention over a right-padded prompt bucket.
+
+    The serving prefill path (serving/engine.py) calls this with S the
+    power-of-two token bucket; right-padding + causal masking keeps
+    padded positions out of valid rows' scores (see flash_prefill.py's
+    padding contract).  S must be divisible by the block sizes — bucket
+    sizes are powers of two, so the defaults always are.
+    """
     interpret = _auto_interpret() if interpret is None else interpret
     return _flash_prefill(q, k, v, scale=scale, causal=causal, window=window,
                           block_q=block_q, block_k=block_k,

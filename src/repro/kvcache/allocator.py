@@ -11,6 +11,23 @@ The allocator is pure host bookkeeping: it never touches device memory.
 Device-side copies required by CoW are returned as (src_page, dst_page,
 n_valid) descriptors for the engine to execute in one batched jit op.
 
+Pending-token invariant (the engine contract this bookkeeping serves):
+a sequence created by prefill holds pages for ``tokens[:-1]`` — the
+handle's ``length`` counts exactly the tokens whose KV is in the pool,
+and the prompt's last token stays *pending* until the first decode step
+writes its KV into the slot ``append_tokens`` reserves.  Every token's
+KV is written exactly once, by whichever jitted step consumes it as
+input; ``check_invariants``/tests verify the bookkeeping half, and
+tests/test_prefill.py property-tests the pool contents against a dense
+oracle under random prefill/branch/free interleavings.
+
+Bucket/recompile discipline: the allocator itself is shape-oblivious,
+but everything it feeds to the device is padded to power-of-two buckets
+first — ``new_seqs`` allocates a whole prefill batch in one pass so the
+engine can bucket the (rows, tokens) axes, and ``tree_metadata`` pads
+the unique-page axis — keeping the jit-signature count of the consuming
+steps O(log size) across a serving run (see serving/engine.py).
+
 Accounting properties used by tests and the Fig. 2 reproduction:
   * ``used_pages``  — unique physical pages alive (shared counted once).
   * ``logical_pages`` — sum over sequences of their table lengths
@@ -107,6 +124,21 @@ class PageAllocator:
         self._next_seq += 1
         self.seqs[h.seq_id] = h
         return h
+
+    def new_seqs(self, prompt_token_counts: Sequence[int]
+                 ) -> List[SequenceHandle]:
+        """Allocate a whole prefill batch in one pass (all-or-nothing).
+
+        Capacity for every sequence is checked up front, so a mid-batch
+        ``OutOfPages`` can never leave a half-allocated batch behind —
+        the batched prefill either owns pages for all its prompts or
+        touches nothing.
+        """
+        need = sum(-(-n // self.page_size) for n in prompt_token_counts)
+        if need > len(self.free):
+            raise OutOfPages(
+                f"prefill batch needs {need} pages, {len(self.free)} free")
+        return [self.new_seq(n) for n in prompt_token_counts]
 
     def append_tokens(self, seq_id: int, n: int) -> List[CopyOp]:
         """Reserve slots for n new tokens; may CoW the shared last page."""

@@ -4,15 +4,49 @@ The TPU-native stand-in for SGLang's continuous-batching server, scoped to
 what PRM tree search actually needs (step-level expand -> score -> prune):
 
   * a static paged KV pool (repro.kvcache) shared by every live branch;
-  * ``prefill(tokens)``   — run the prompt, build its pages;
+  * ``prefill_many(prompts)`` — flash-prefill a whole batch of prompts in
+    one lock-step stream, writing KV straight into the pool's pages
+    (``prefill(tokens)`` is the single-prompt convenience wrapper);
   * ``branch(seq, n)``    — fork block tables (refcount++, CoW last page);
   * ``decode(seq_ids, …)``— ONE jitted step decodes all live branches in
     lock-step against the pool via block tables;
   * free / stats          — physical vs logical page accounting (the
     engine-level measurement behind Table 1's KV reduction).
 
-The decode step pads the live set to ``max_batch`` so the jit signature is
-stable.  Two attention modes (``EngineConfig.attention``):
+Pending-token invariant (the contract between prefill, branch and
+decode): after ``prefill(tokens)`` the pool holds KV for
+``tokens[:-1]`` and the *last* token is pending — the next decode step
+computes its KV (at its reserved slot) together with the next-token
+logits.  Every token's KV is therefore written exactly once, by
+whichever jitted step consumes it as input, and branching at any point
+forks a consistent cache.
+
+Prefill path (``EngineConfig.prefill``):
+
+  * ``"flash"`` (default) — online-softmax flash attention per layer
+    (the ``kernels/flash_prefill`` Pallas kernel when ``use_kernel``,
+    its pure-jnp blocked formulation otherwise), with each layer's K/V
+    scattered *directly* into the pool's pages — no intermediate dense
+    cache + copy.  Prompts are right-padded into power-of-two
+    (rows, tokens) buckets, so a whole serving run compiles
+    O(log max_batch * log max_seq_len) prefill signatures
+    (``prefill_traces`` counts them; tests assert the bound).  Padded
+    token slots carry position -1 and write to the dump page, so they
+    never contaminate real pages and — prompts being right-padded under
+    causal masking — never leak into real attention scores.
+  * ``"dense"``  — the legacy per-layer ``attn_prefill``-style dense
+    attention, kept as the equivalence oracle: both paths agree to fp32
+    tolerance on logits and produce bit-identical sampled streams over
+    full searches in practice (asserted in tests/test_prefill.py).
+
+Bucket/recompile discipline (shared with the decode and PRM paths): any
+host-built operand axis that varies across calls is padded to a power
+of two (``pow2_bucket``) before it reaches a jitted step, so the jit
+signature count over a run is logarithmic in the largest size seen, not
+linear in the number of distinct sizes.  The decode step instead pads
+the live set to the static ``max_batch``, so its signature is constant.
+
+Two attention modes for decode (``EngineConfig.attention``):
 
   * ``"paged"`` — per-sequence paged attention over block tables; a page
     shared by k descendant leaves is streamed k times per step.
@@ -38,7 +72,6 @@ dense llama-style models); MoE/SSM serving goes through the unified
 from __future__ import annotations
 
 import dataclasses
-import functools
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -53,6 +86,21 @@ from repro.models.layers import mlp_apply, rms_norm
 from repro.models.layers import apply_rope, rope_angles
 
 
+def pow2_bucket(n: int, lo: int = 8) -> int:
+    """Smallest power-of-two >= n (at least ``lo``) — the padding bucket.
+
+    The serving-wide recompile discipline: every host-built axis that
+    varies across calls (prefill token/row counts, PRM batch/length,
+    tree-step page counts) is padded to one of these buckets before it
+    reaches a jitted function, bounding the jit-signature count at
+    O(log max_size) instead of O(distinct sizes).
+    """
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
 @dataclass
 class EngineConfig:
     n_pages: int = 512
@@ -61,10 +109,12 @@ class EngineConfig:
     max_seq_len: int = 512
     use_kernel: bool = False       # True: Pallas kernels
     attention: str = "paged"       # "paged" | "tree" (see module doc)
+    prefill: str = "flash"         # "flash" | "dense" (dense = oracle)
     trace_logits: bool = False     # keep per-step logits (tests only)
 
     def __post_init__(self):
         assert self.attention in ("paged", "tree"), self.attention
+        assert self.prefill in ("flash", "dense"), self.prefill
 
 
 class PagedEngine:
@@ -91,15 +141,21 @@ class PagedEngine:
         self.n_decode_calls = 0
         self.n_decode_steps = 0
         self.n_decoded_tokens = 0
+        # prefill accounting: jitted prefill streams launched and prompt
+        # tokens ingested by them (benchmarks/table2 prefill tok/s)
+        self.n_prefill_calls = 0
+        self.n_prefill_tokens = 0
         # per-step attention IO accounting: pages the attention actually
         # streams (unique — tree mode dedups shared prefixes) vs the
         # per-leaf total a paged read pattern costs.  logical/unique is
         # the measured sharing ratio.
         self.unique_pages_streamed = 0
         self.logical_pages_streamed = 0
-        # trace-time counter: +1 per compiled decode-step signature
-        # (tests assert the tree step stays O(log n_pages))
+        # trace-time counters: +1 per compiled decode-step / prefill
+        # signature (tests assert the tree step stays O(log n_pages) and
+        # prefill stays O(log max_batch * log max_seq_len))
         self.decode_traces = 0
+        self.prefill_traces = 0
         self.logits_trace: List[np.ndarray] = []   # if ecfg.trace_logits
         self._decode_fn = self._build_decode_fn()
         self._tree_decode_fn = self._build_tree_decode_fn()
@@ -124,28 +180,65 @@ class PagedEngine:
     # ------------------------------------------------------------------
     def _build_prefill_fn(self):
         cfg, model = self.cfg, self.model
+        use_kernel = self.ecfg.use_kernel
+        dense = self.ecfg.prefill == "dense"
+        scale = cfg.head_dim ** -0.5
+        from repro.models import attention as A
 
-        def prefill(params, tokens, pages, slots, pool_k, pool_v):
-            """tokens (1,S); pages/slots (S,) physical targets."""
-            x, positions = model.embed_inputs(params, {"tokens": tokens})
+        def prefill(params, tokens, positions, pages, slots, lengths,
+                    pool_k, pool_v):
+            """One lock-step prefill over a right-padded prompt bucket.
+
+            tokens/pages/slots (B,T); positions (B,T), -1 at padded
+            slots; lengths (B,) valid context tokens per row (0 =
+            inactive padding row).  Each layer's K/V is written straight
+            into the pool pages before attention runs — padded slots
+            target the dump page, and right-padding under the causal
+            mask keeps them out of every valid query's score set, so
+            the flash path needs no extra length masking.
+            """
+            self.prefill_traces += 1       # trace-time side effect
+            B, T = tokens.shape
+            if cfg.mrope_sections:
+                pos = jnp.broadcast_to(positions[None],
+                                       (3,) + positions.shape)
+            else:
+                pos = positions
+            x, pos = model.embed_inputs(params, {"tokens": tokens,
+                                                 "positions": pos})
             gp = params["groups"][0]
-            L = cfg.n_layers
-            from repro.models import attention as A
-            for l in range(L):
+            for l in range(cfg.n_layers):
                 blk = jax.tree.map(lambda a: a[l], gp)
                 h = rms_norm(blk["ln1"], x, cfg.norm_eps)
-                y, cache = A.attn_prefill(blk["attn"], h, cfg, positions,
-                                          cache_len=tokens.shape[1],
-                                          cache_dtype=pool_k.dtype)
-                pool_k = pool_k.at[l, pages, slots].set(cache["k"][0])
-                pool_v = pool_v.at[l, pages, slots].set(cache["v"][0])
-                x = x + y
+                q, k, v = A._project_qkv(blk["attn"], h, cfg, pos)
+                pool_k = pool_k.at[l, pages, slots].set(
+                    k.astype(pool_k.dtype))
+                pool_v = pool_v.at[l, pages, slots].set(
+                    v.astype(pool_v.dtype))
+                if dense:
+                    mask = A.make_mask(positions, positions,
+                                       causal=cfg.causal,
+                                       window=cfg.sliding_window)
+                    y = A.masked_attention(q, k, v, mask, scale=scale)
+                elif use_kernel:
+                    from repro.kernels import ops
+                    y = ops.flash_prefill(q, k, v, scale=scale,
+                                          causal=cfg.causal,
+                                          window=cfg.sliding_window)
+                else:
+                    y = A.blocked_attention(q, k, v, positions, positions,
+                                            causal=cfg.causal,
+                                            window=cfg.sliding_window,
+                                            scale=scale)
+                x = x + y.reshape(B, T, -1) @ blk["attn"]["wo"]
                 h = rms_norm(blk["ln2"], x, cfg.norm_eps)
                 x = x + mlp_apply(blk["mlp"], h, cfg.act)
-            logits = model.logits(params, x[:, -1])
+            idx = jnp.clip(lengths - 1, 0, T - 1)
+            logits = model.logits(params, x[jnp.arange(B), idx])
+            logits = jnp.where((lengths > 0)[:, None], logits, 0.0)
             return logits, pool_k, pool_v
 
-        return jax.jit(prefill, donate_argnums=(4, 5))
+        return jax.jit(prefill, donate_argnums=(6, 7))
 
     def _decode_body(self, params, tokens, lengths, pages, slots, active,
                      pool_k, pool_v, attend):
@@ -241,28 +334,74 @@ class PagedEngine:
     # Public host API
     # ------------------------------------------------------------------
     def prefill(self, tokens: Sequence[int]) -> int:
-        """Run a prompt; returns seq_id.
+        """Run one prompt; returns seq_id.  See ``prefill_many``."""
+        return self.prefill_many([tokens])[0]
 
-        Invariant: the pool holds KV for ``tokens[:-1]``; the last token is
-        *pending* — the next decode step computes its KV (at its reserved
-        slot) together with the next-token logits.  This keeps prefill,
-        branching and decode consistent: every token's KV is written
-        exactly once, by whichever step consumes it as input.
+    def prefill_many(self, prompts: Sequence[Sequence[int]]) -> List[int]:
+        """Ingest a batch of prompts in one lock-step prefill stream.
+
+        Pages for *all* prompts are allocated in a single
+        ``PageAllocator.new_seqs`` pass (all-or-nothing, so a mid-batch
+        ``OutOfPages`` can't leave stragglers), then the whole batch is
+        right-padded into a power-of-two (rows, tokens) bucket and runs
+        through the jitted flash-prefill step, which writes each layer's
+        KV directly into the pool pages.  Prompt batches larger than
+        ``max_batch`` are chunked (the only case with more than one
+        prefill stream per call).  Returns seq_ids in prompt order.
+        All returned sequences hold their pages until freed, so the
+        pool must have room for the whole batch at once (the up-front
+        ``new_seqs`` check raises ``OutOfPages`` before anything is
+        allocated otherwise).
+
+        Invariant: the pool holds KV for each prompt's ``tokens[:-1]``;
+        the last token is *pending* — the next decode step computes its
+        KV (at its reserved slot) together with the next-token logits.
+        This keeps prefill, branching and decode consistent: every
+        token's KV is written exactly once, by whichever step consumes
+        it as input.
         """
-        toks = list(int(t) for t in tokens)
-        assert toks, "empty prompt"
-        ctx = toks[:-1]
-        h = self.alloc.new_seq(len(ctx))
-        self.tokens[h.seq_id] = toks
-        if ctx:
-            ps = self.ecfg.page_size
-            pages = np.repeat(h.block_table, ps)[: len(ctx)]
-            slots = np.tile(np.arange(ps), len(h.block_table))[: len(ctx)]
-            _, self.pool.k, self.pool.v = self._prefill_fn(
-                self.params, jnp.asarray([ctx], jnp.int32),
-                jnp.asarray(pages, jnp.int32), jnp.asarray(slots, jnp.int32),
-                self.pool.k, self.pool.v)
-        return h.seq_id
+        all_toks = [[int(t) for t in p] for p in prompts]
+        assert all(all_toks), "empty prompt"
+        assert all(len(t) <= self.ecfg.max_seq_len for t in all_toks), \
+            "prompt exceeds max_seq_len"
+        ctxs = [t[:-1] for t in all_toks]
+        handles = self.alloc.new_seqs([len(c) for c in ctxs])
+        for h, t in zip(handles, all_toks):
+            self.tokens[h.seq_id] = t
+        mb = self.ecfg.max_batch
+        for i in range(0, len(handles), mb):
+            self._prefill_chunk(handles[i:i + mb], ctxs[i:i + mb])
+        return [h.seq_id for h in handles]
+
+    def _prefill_chunk(self, handles, ctxs) -> None:
+        """One jitted prefill stream over <= max_batch prompts."""
+        if not any(ctxs):
+            return                 # single-token prompts: nothing to write
+        self.n_prefill_calls += 1
+        ps = self.ecfg.page_size
+        T = pow2_bucket(max(len(c) for c in ctxs))
+        Bp = pow2_bucket(len(ctxs), lo=1)
+        tok = np.zeros((Bp, T), np.int32)
+        pos = np.full((Bp, T), -1, np.int32)
+        pages = np.full((Bp, T), self.dump_page, np.int32)
+        slots = np.zeros((Bp, T), np.int32)
+        lens = np.zeros(Bp, np.int32)
+        for r, (h, ctx) in enumerate(zip(handles, ctxs)):
+            n = len(ctx)
+            if not n:
+                continue
+            tok[r, :n] = ctx
+            pos[r, :n] = np.arange(n)
+            pages[r, :n] = np.repeat(h.block_table, ps)[:n]
+            slots[r, :n] = np.tile(np.arange(ps), len(h.block_table))[:n]
+            lens[r] = n
+            self.n_prefill_tokens += n
+        logits, self.pool.k, self.pool.v = self._prefill_fn(
+            self.params, jnp.asarray(tok), jnp.asarray(pos),
+            jnp.asarray(pages), jnp.asarray(slots), jnp.asarray(lens),
+            self.pool.k, self.pool.v)
+        if self.ecfg.trace_logits:
+            self.logits_trace.append(np.asarray(logits))
 
     def branch(self, seq_id: int, n: int) -> List[int]:
         handles = self.alloc.branch(seq_id, n)
@@ -291,6 +430,8 @@ class PagedEngine:
         self.n_decode_calls = 0
         self.n_decode_steps = 0
         self.n_decoded_tokens = 0
+        self.n_prefill_calls = 0
+        self.n_prefill_tokens = 0
         self.unique_pages_streamed = 0
         self.logical_pages_streamed = 0
 

@@ -14,6 +14,11 @@ Batched step protocol (the serving idiom the paper's throughput numbers
 depend on — one search step costs one decode stream and O(1) jit
 signatures):
 
+  start_many  — prefill every prompt of a multi-problem sweep in one
+      batched, length-bucketed flash-prefill stream
+      (``engine.prefill_many``); pending roots are protected from
+      ``on_step``'s sweep-free until their own search branches them.
+      ``run_search_many`` (core/controllers.py) is the driver.
   expand_many — branch *all* live leaves up front, then decode every new
       branch in a single lock-step batched ``engine.decode`` call;
       when the total branch count exceeds ``engine.ecfg.max_batch`` the
@@ -58,7 +63,7 @@ import numpy as np
 
 from repro.core.tree import SearchTree
 
-from .engine import PagedEngine
+from .engine import PagedEngine, pow2_bucket as _bucket
 
 
 @dataclass
@@ -68,14 +73,6 @@ class BackendConfig:
     max_step_tokens: int = 48
     max_depth: int = 16
     temperature: float = 1.0
-
-
-def _bucket(n: int, lo: int = 8) -> int:
-    """Smallest power-of-two >= n (at least `lo`) — the padding bucket."""
-    b = lo
-    while b < n:
-        b *= 2
-    return b
 
 
 def _pad_bucket(seqs: Sequence[Sequence[int]]):
@@ -116,6 +113,9 @@ class LMBackend:
         self.seed = seed
         self.key = jax.random.key(seed)
         self.kv_trace: List[Dict[str, int]] = []
+        # roots prefilled ahead of their search (start_many sweeps):
+        # on_step must not free them while another problem runs
+        self._protected: set = set()
         # last sampled cumulative IO counters (kv_trace stores deltas)
         self._last_io = (getattr(engine, "unique_pages_streamed", 0),
                          getattr(engine, "logical_pages_streamed", 0))
@@ -148,9 +148,28 @@ class LMBackend:
 
     # ------------------------------------------------------------------
     def start(self, prompt_tokens: Sequence[int]) -> SearchTree:
-        sid = self.engine.prefill(prompt_tokens)
-        return SearchTree(root_tokens=len(prompt_tokens),
-                          root_payload={"seq_id": sid, "tokens": []})
+        return self.start_many([prompt_tokens])[0]
+
+    def start_many(self, prompts: Sequence[Sequence[int]]
+                   ) -> List[SearchTree]:
+        """Prefill a whole problem sweep in one batched flash stream.
+
+        All prompts go through ``engine.prefill_many`` — one lock-step,
+        length-bucketed prefill for the sweep instead of one serial
+        dense prefill per problem.  The pending roots are protected from
+        ``on_step``'s sweep-free until their own search branches them
+        (an unstarted problem has no live leaf in any tree yet, so the
+        keep-set would otherwise free its pages).
+        """
+        batch_fn = getattr(self.engine, "prefill_many", None)
+        if batch_fn is not None:
+            sids = batch_fn(prompts)
+        else:           # minimal engine doubles: per-prompt fallback
+            sids = [self.engine.prefill(p) for p in prompts]
+        self._protected.update(sids)
+        return [SearchTree(root_tokens=len(p),
+                           root_payload={"seq_id": sid, "tokens": []})
+                for p, sid in zip(prompts, sids)]
 
     def _next_key(self):
         self.key, sub = jax.random.split(self.key)
@@ -190,6 +209,9 @@ class LMBackend:
             if node.depth >= self.bcfg.max_depth or n <= 0:
                 continue
             bids = self.engine.branch(node.payload["seq_id"], n)
+            # once branched, the root's pages live on through its
+            # children's refcounts — drop the sweep protection
+            self._protected.discard(node.payload["seq_id"])
             plan.append((leaf, bids))
             all_branches.extend(bids)
         if not all_branches:
@@ -261,7 +283,8 @@ class LMBackend:
         """Free engine sequences of pruned/finished leaves; sample stats."""
         # Only live leaves need engine sequences: interior nodes' pages
         # stay alive through their descendants' block-table refcounts.
-        keep = set()
+        # Pending roots of a start_many sweep are kept until branched.
+        keep = set(self._protected)
         for leaf in live:
             pl = tree.node(leaf).payload
             if pl and "seq_id" in pl:
@@ -306,6 +329,7 @@ class LMBackend:
         self.engine.reset()
         if hasattr(self.engine, "reset_counters"):
             self.engine.reset_counters()
+        self._protected.clear()
         self.kv_trace.clear()
         self.key = jax.random.key(self.seed)
         self._last_io = (getattr(self.engine, "unique_pages_streamed", 0),

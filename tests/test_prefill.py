@@ -1,0 +1,320 @@
+"""Flash prefill into the paged pool: equivalence vs the dense oracle
+(pool KV, prefill logits, bit-identical sampled streams over a full ETS
+search in both attention modes), batched==serial prefill_many, the
+O(log S) prefill recompile bound, and the pending-token invariant under
+random prefill_many/branch/free interleavings."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import HealthCheck, given, settings, st
+
+from repro.configs import get_config
+from repro.core import ETSConfig, SearchConfig, run_search, run_search_many
+from repro.kvcache.allocator import OutOfPages
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, PagedEngine, pow2_bucket
+from repro.serving.search_backend import BackendConfig, LMBackend
+
+
+@pytest.fixture(scope="module")
+def tiny_models():
+    lm_cfg = dataclasses.replace(get_config("tiny-lm"), n_layers=2,
+                                 d_model=64, n_heads=4, n_kv_heads=2,
+                                 d_ff=128)
+    lm = build_model(lm_cfg, remat=False)
+    lm_params = lm.init(jax.random.key(0))
+    prm = build_model(dataclasses.replace(lm_cfg, n_layers=1),
+                      with_value_head=True, remat=False)
+    prm_params = prm.init(jax.random.key(1))
+    emb_cfg = dataclasses.replace(get_config("tiny-embedder"), n_layers=1,
+                                  d_model=64, n_heads=2, n_kv_heads=2,
+                                  d_ff=128)
+    emb = build_model(emb_cfg, remat=False)
+    emb_params = emb.init(jax.random.key(2))
+    return (lm, lm_params), (prm, prm_params), (emb, emb_params)
+
+
+def _engine(tiny_models, prefill="flash", attention="paged",
+            use_kernel=False, trace_logits=False, **kw):
+    (lm, lm_params), _, _ = tiny_models
+    return PagedEngine(lm, lm_params, EngineConfig(
+        n_pages=256, page_size=8, max_batch=16, max_seq_len=128,
+        prefill=prefill, attention=attention, use_kernel=use_kernel,
+        trace_logits=trace_logits, **kw))
+
+
+def _gather(eng, sid, layer):
+    h = eng.alloc.seqs[sid]
+    k, v = eng.pool.gather_kv(layer, h.block_table, h.length)
+    return np.asarray(k), np.asarray(v)
+
+
+# ---------------------------------------------------------------------------
+# Flash prefill == dense attn_prefill oracle
+# ---------------------------------------------------------------------------
+
+def test_flash_prefill_matches_dense_oracle(tiny_models):
+    """Pool KV allclose, last-position logits allclose, and the sampled
+    downstream stream bit-identical between the flash path and the dense
+    per-layer oracle."""
+    e_f = _engine(tiny_models, "flash", trace_logits=True)
+    e_d = _engine(tiny_models, "dense", trace_logits=True)
+    prompt = list(range(4, 41))
+    sf, sd = e_f.prefill(prompt), e_d.prefill(prompt)
+    for l in range(e_f.cfg.n_layers):
+        kf, vf = _gather(e_f, sf, l)
+        kd, vd = _gather(e_d, sd, l)
+        np.testing.assert_allclose(kf, kd, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(vf, vd, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(e_f.logits_trace[0], e_d.logits_trace[0],
+                               rtol=1e-4, atol=1e-4)
+    out_f = e_f.decode([sf], 10, jax.random.key(7), temperature=1.0)
+    out_d = e_d.decode([sd], 10, jax.random.key(7), temperature=1.0)
+    assert out_f[sf] == out_d[sd]
+
+
+def test_flash_prefill_kernel_matches_dense_oracle(tiny_models):
+    """The Pallas kernel path (interpret on CPU) agrees with the dense
+    oracle through the full layer stack."""
+    e_k = _engine(tiny_models, "flash", use_kernel=True, trace_logits=True)
+    e_d = _engine(tiny_models, "dense", trace_logits=True)
+    prompt = list(range(4, 30))
+    sk, sd = e_k.prefill(prompt), e_d.prefill(prompt)
+    for l in range(e_k.cfg.n_layers):
+        kk, _ = _gather(e_k, sk, l)
+        kd, _ = _gather(e_d, sd, l)
+        np.testing.assert_allclose(kk, kd, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(e_k.logits_trace[0], e_d.logits_trace[0],
+                               rtol=1e-4, atol=1e-4)
+
+
+def _search_backend(tiny_models, prefill, attention):
+    (lm, lm_params), (prm, prm_params), (emb, emb_params) = tiny_models
+    engine = PagedEngine(lm, lm_params, EngineConfig(
+        n_pages=256, page_size=8, max_batch=16, max_seq_len=128,
+        prefill=prefill, attention=attention, trace_logits=True))
+    backend = LMBackend(engine, prm, prm_params, emb, emb_params,
+                        BackendConfig(step_token=2, eos_token=3,
+                                      max_step_tokens=6, max_depth=4),
+                        answer_fn=lambda full: None, seed=13)
+    return engine, backend
+
+
+def _run_ets(backend, width=6, max_steps=3):
+    tree = backend.start(list(range(4, 21)))
+    return run_search(backend, SearchConfig(
+        method="ets", width=width, max_steps=max_steps,
+        ets=ETSConfig(lambda_b=1.0, lambda_d=1.0,
+                      cluster_threshold=0.2)), tree=tree)
+
+
+@pytest.mark.parametrize("attention", ["paged", "tree"])
+def test_flash_prefill_full_search_equivalence(tiny_models, attention):
+    """Over a full ETS search, flash prefill and the dense oracle give
+    bit-identical sampled token streams and fp32-allclose logits at
+    every traced step — in both decode attention modes."""
+    eng_f, be_f = _search_backend(tiny_models, "flash", attention)
+    eng_d, be_d = _search_backend(tiny_models, "dense", attention)
+    res_f, res_d = _run_ets(be_f), _run_ets(be_d)
+    assert res_f.steps == res_d.steps >= 2
+    assert len(res_f.tree.nodes) == len(res_d.tree.nodes)
+    for nf, nd in zip(res_f.tree.nodes, res_d.tree.nodes):
+        assert nf.payload["tokens"] == nd.payload["tokens"]
+        assert nf.reward == nd.reward
+    # logits_trace[0] is the prefill bucket's last-position logits; the
+    # rest are lock-step decode logits — compare the full trace
+    assert len(eng_f.logits_trace) == len(eng_d.logits_trace) > 1
+    for lf, ld in zip(eng_f.logits_trace, eng_d.logits_trace):
+        np.testing.assert_allclose(lf, ld, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Batched prefill_many == serial prefill
+# ---------------------------------------------------------------------------
+
+def test_prefill_many_matches_serial(tiny_models):
+    e_b = _engine(tiny_models, "flash")
+    e_s = _engine(tiny_models, "flash")
+    prompts = [list(range(4, 4 + n)) for n in (3, 17, 29, 1, 9)]
+    sids_b = e_b.prefill_many(prompts)
+    sids_s = [e_s.prefill(p) for p in prompts]
+    assert e_b.n_prefill_calls == 1 and e_s.n_prefill_calls == 4
+    for sb, ss, p in zip(sids_b, sids_s, prompts):
+        hb, hs = e_b.alloc.seqs[sb], e_s.alloc.seqs[ss]
+        assert hb.length == hs.length == len(p) - 1
+        for l in range(e_b.cfg.n_layers):
+            if hb.length:
+                kb, vb = _gather(e_b, sb, l)
+                ks, vs = _gather(e_s, ss, l)
+                np.testing.assert_allclose(kb, ks, rtol=1e-5, atol=1e-5)
+                np.testing.assert_allclose(vb, vs, rtol=1e-5, atol=1e-5)
+    out_b = e_b.decode(sids_b, 6, jax.random.key(3), temperature=1.0)
+    out_s = e_s.decode(sids_s, 6, jax.random.key(3), temperature=1.0)
+    assert [out_b[s] for s in sids_b] == [out_s[s] for s in sids_s]
+
+
+def test_prefill_many_chunks_above_max_batch(tiny_models):
+    eng = _engine(tiny_models, "flash")
+    n = 2 * eng.ecfg.max_batch + 3
+    sids = eng.prefill_many([list(range(4, 14)) for _ in range(n)])
+    assert len(sids) == n
+    assert eng.n_prefill_calls == 3          # ceil(35 / max_batch=16)
+    eng.alloc.check_invariants()
+
+
+def test_single_token_prompt_writes_nothing(tiny_models):
+    """A one-token prompt has an empty context: no pages, no device
+    call; the token stays pending and the first decode step serves it."""
+    eng = _engine(tiny_models, "flash")
+    sid, = eng.prefill_many([[5]])
+    assert eng.alloc.seqs[sid].length == 0
+    assert eng.n_prefill_calls == 0
+    out = eng.decode([sid], 3, jax.random.key(0), temperature=0.0)
+    assert len(out[sid]) == 3
+    eng.alloc.check_invariants()
+
+
+def test_prefill_many_all_or_nothing_on_out_of_pages(tiny_models):
+    (lm, lm_params), _, _ = tiny_models
+    eng = PagedEngine(lm, lm_params, EngineConfig(
+        n_pages=8, page_size=8, max_batch=8, max_seq_len=128))
+    used_before = eng.alloc.used_pages
+    with pytest.raises(OutOfPages):
+        eng.prefill_many([list(range(40)), list(range(40))])
+    assert eng.alloc.used_pages == used_before
+    eng.alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Recompile bound
+# ---------------------------------------------------------------------------
+
+def test_prefill_recompile_bound(tiny_models):
+    """Bucketing both prefill axes bounds the jit-signature count at
+    O(log max_batch * log max_seq_len), independent of how many distinct
+    (batch, length) shapes the serving run actually sees."""
+    eng = _engine(tiny_models, "flash")
+    ecfg = eng.ecfg
+    rng = np.random.default_rng(0)
+    for _ in range(12):
+        n = int(rng.integers(1, 10))
+        prompts = [list(rng.integers(4, 60, int(rng.integers(2, 80))))
+                   for _ in range(n)]
+        eng.prefill_many(prompts)
+        eng.reset()
+    n_len_buckets = int(math.log2(pow2_bucket(ecfg.max_seq_len) // 8)) + 1
+    n_row_buckets = int(math.log2(pow2_bucket(ecfg.max_batch, lo=1))) + 1
+    assert eng.prefill_traces <= n_len_buckets * n_row_buckets
+    # a repeat of the same shapes re-traces nothing
+    before = eng.prefill_traces
+    eng.prefill_many([list(range(4, 20)), list(range(4, 40))])
+    eng.prefill_many([list(range(4, 20)), list(range(4, 40))])
+    assert eng.prefill_traces == before
+
+
+# ---------------------------------------------------------------------------
+# Sweep driver: one prefill stream for many problems
+# ---------------------------------------------------------------------------
+
+def test_run_search_many_single_prefill_stream(tiny_models):
+    _, backend = _search_backend(tiny_models, "flash", "tree")
+    eng = backend.engine
+    scfg = SearchConfig(method="ets", width=5, max_steps=3,
+                        ets=ETSConfig(lambda_b=1.0, lambda_d=1.0,
+                                      cluster_threshold=0.2))
+    prompts = [list(range(4, 4 + n)) for n in (17, 23, 9)]
+    results = run_search_many(backend, scfg, prompts)
+    assert len(results) == 3 and all(r.steps >= 1 for r in results)
+    # the sweep's prompts were ingested by ONE lock-step prefill stream
+    assert eng.n_prefill_calls == 1
+    # pending roots survived the earlier problems' on_step sweeps and
+    # were released once branched: nothing is protected or leaked now
+    assert backend._protected == set()
+    eng.alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Pending-token invariant under random interleavings (property test)
+# ---------------------------------------------------------------------------
+
+_PROP_STATE = {}
+
+
+def _prop_engine(tiny_models):
+    """One engine reused across examples so the jitted prefill compiles
+    once per bucket, not once per hypothesis example."""
+    if "eng" not in _PROP_STATE:
+        _PROP_STATE["eng"] = _engine(tiny_models, "flash")
+    eng = _PROP_STATE["eng"]
+    eng.reset()
+    return eng
+
+
+def _reference_ctx_kv(tiny_models, ctx):
+    """Per-layer KV of ``ctx`` from the model's own dense prefill —
+    the semantic ground truth for what the pool must hold."""
+    key = tuple(ctx)
+    cache = _PROP_STATE.setdefault("ref", {})
+    if key not in cache:
+        (lm, lm_params), _, _ = tiny_models
+        _, c = lm.prefill(lm_params,
+                          {"tokens": jnp.asarray([ctx], jnp.int32)},
+                          cache_len=len(ctx))
+        kv = c["groups"][0]
+        cache[key] = (np.asarray(kv["k"][:, 0]), np.asarray(kv["v"][:, 0]))
+    return cache[key]
+
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(
+    st.one_of(
+        st.tuples(st.just("prefill"), st.integers(1, 3)),
+        st.tuples(st.just("branch"), st.integers(1, 2)),
+        st.tuples(st.just("free"), st.integers(0, 5)),
+    ), min_size=1, max_size=6))
+def test_prefill_invariant_random_interleavings(tiny_models, ops):
+    """After any interleaving of prefill_many / branch / free, every
+    live sequence's pool KV equals the dense reference of its
+    ``tokens[:-1]`` and its last token is still pending."""
+    eng = _prop_engine(tiny_models)
+    rng = np.random.default_rng(zlib_seed(ops))
+    live = []
+    for op, arg in ops:
+        if op == "prefill":
+            prompts = [list(rng.integers(4, 60, int(rng.integers(2, 40))))
+                       for _ in range(arg)]
+            live += eng.prefill_many(prompts)
+        elif op == "branch" and live:
+            sid = live[int(rng.integers(len(live)))]
+            live += eng.branch(sid, arg)
+        elif op == "free" and live:
+            eng.free(live.pop(int(rng.integers(len(live)))))
+        eng.alloc.check_invariants()
+        check = [live[int(rng.integers(len(live)))]
+                 for _ in range(min(2, len(live)))]
+        for sid in check:
+            toks = eng.tokens[sid]
+            h = eng.alloc.seqs[sid]
+            assert h.length == len(toks) - 1      # last token pending
+            if h.length == 0:
+                continue
+            ref_k, ref_v = _reference_ctx_kv(tiny_models, toks[:-1])
+            for l in range(eng.cfg.n_layers):
+                k, v = _gather(eng, sid, l)
+                np.testing.assert_allclose(k, ref_k[l], rtol=1e-5,
+                                           atol=1e-5)
+                np.testing.assert_allclose(v, ref_v[l], rtol=1e-5,
+                                           atol=1e-5)
+    for sid in live:
+        eng.free(sid)
+    assert eng.alloc.used_pages == 0
+
+
+def zlib_seed(ops) -> int:
+    import zlib
+    return zlib.crc32(repr(ops).encode()) & 0xFFFF
