@@ -7,8 +7,10 @@ is archived under experiments/bench/.  The table2 rows are additionally
 written to ``BENCH_table2.json`` (repo root by default) — the
 machine-readable perf record (tokens/s, decode calls/step, pages
 streamed per decode step for serial / batched-paged / batched-tree,
-plus the prefill-ingestion section: serial-dense vs batched-flash
-prompt tok/s) that tracks the serving trajectory across PRs; CI uploads
+the prefill-ingestion section: serial-dense vs batched-flash prompt
+tok/s, and the sweep section: one-at-a-time vs continuous
+cross-problem problems/s + mean batch occupancy) that tracks the
+serving trajectory across PRs; CI uploads
 it as an artifact from the smoke invocation and
 ``benchmarks/trend_check.py`` fails the smoke job on a >2x tok/s
 regression against the committed copy.
@@ -78,7 +80,8 @@ def main() -> None:
             with open(args.bench_json, "w") as f:
                 json.dump({"smoke": args.smoke, "fast": args.fast,
                            "rows": res["rows"],
-                           "prefill": res.get("prefill", [])},
+                           "prefill": res.get("prefill", []),
+                           "sweep": res.get("sweep", [])},
                           f, indent=1, default=str)
             print(f"[table2] rows -> {args.bench_json}")
         print(f"[{name}] done in {res['wall_s']}s\n")

@@ -18,7 +18,12 @@ refcounted tree sharing, lock-step batched decode — and measures
     per-prompt prefill (the pre-flash orchestration, kept as the
     ``EngineConfig(prefill="dense")`` oracle) vs ONE batched,
     length-bucketed flash-prefill stream writing straight into the pool
-    pages (``engine.prefill_many``).
+    pages (``engine.prefill_many``),
+  * sweep orchestration (the ``sweep`` section): the same problem set
+    run one-at-a-time vs through the continuous cross-problem
+    ``SweepScheduler`` — problems/s, tok/s and mean decode-batch
+    occupancy (sequences in flight per lock-step iteration), the
+    utilization the scheduler exists to recover.
 
 Three decode modes per method:
 
@@ -57,6 +62,75 @@ PREFILL_MODES = [
     ("serial-dense", "dense", False),
     ("batched-flash", "flash", True),
 ]
+
+# (label, run_search_many continuous flag)
+SWEEP_MODES = [
+    ("one-at-a-time", False),
+    ("continuous", True),
+]
+
+
+def measure_sweep(lm, lm_params, prm, prm_params, emb, emb_params,
+                  prompts, width: int, max_steps: int, reps: int = 2):
+    """Multi-problem sweep throughput: one problem at a time vs the
+    continuous cross-problem scheduler, on identical engines.
+
+    Both paths prefill the sweep in one batched flash stream; the
+    difference is the search phase.  One-at-a-time drains the batch
+    axis as each search narrows and finishes (``run_search_many``'s
+    legacy orchestration); continuous keeps it full by merging every
+    live problem's branches into each decode stream and admitting /
+    retiring problems on the fly.  Decode pads to the static
+    ``max_batch`` either way, so a fuller batch is (nearly) free —
+    problems/s and mean batch occupancy are the headline numbers.
+    """
+    from repro.core import ETSConfig, SearchConfig, run_search_many
+    from repro.serving.engine import EngineConfig, PagedEngine
+    from repro.serving.search_backend import BackendConfig, LMBackend
+    from repro.training.task import ArithmeticTask, EOS, NEWLINE
+
+    rows = []
+    for label, continuous in SWEEP_MODES:
+        engine = PagedEngine(lm, lm_params, EngineConfig(
+            n_pages=2048, page_size=8,
+            max_batch=max(width * len(prompts), 32), max_seq_len=200,
+            attention="tree"))
+        backend = LMBackend(
+            engine, prm, prm_params, emb, emb_params,
+            BackendConfig(step_token=NEWLINE, eos_token=EOS,
+                          max_step_tokens=12, max_depth=8),
+            answer_fn=ArithmeticTask.extract_answer, seed=500)
+        scfg = SearchConfig(
+            method="ets", width=width, max_steps=max_steps,
+            ets=ETSConfig(lambda_b=2.0, lambda_d=1.0,
+                          cluster_threshold=0.15))
+
+        def sweep():
+            backend.reset()
+            return run_search_many(backend, scfg, prompts,
+                                   continuous=continuous)
+
+        sweep()                    # warmup: compile every bucket
+        toks = dec_steps = calls = 0
+        t0 = time.time()
+        for _ in range(reps):
+            sweep()
+            toks += engine.n_decoded_tokens
+            dec_steps += engine.n_decode_steps
+            calls += engine.n_decode_calls
+        wall = time.time() - t0
+        rows.append({
+            "path": label,
+            "n_problems": len(prompts),
+            "problems_per_s": reps * len(prompts) / wall,
+            "tok_per_s": toks / wall,
+            "decode_streams": calls / reps,
+            "mean_batch_occupancy": toks / max(dec_steps, 1),
+            "wall_s": wall,
+        })
+    rows[1]["speedup_vs_one_at_a_time"] = \
+        rows[1]["problems_per_s"] / rows[0]["problems_per_s"]
+    return rows
 
 
 def measure_prefill(lm, lm_params, prompts, reps: int = 3):
@@ -225,6 +299,25 @@ def run(train_steps: int = 150, n_problems: int = 6, width: int = 12,
     print(f"-> batched flash prefill "
           f"{pre[1]['speedup_vs_serial_dense']:.2f}x serial dense tok/s "
           f"(one length-bucketed stream writing into the pool pages)")
+
+    # -- sweep: one-at-a-time vs continuous cross-problem batching ------
+    n_sweep = max(2 * n_problems, 4)
+    sweep_prompts = [encode(task.sample_problem(rng)[0])
+                     for _ in range(n_sweep)]
+    sw = measure_sweep(lm, lm_params, prm, prm_params, emb, emb_params,
+                       sweep_prompts, width=width, max_steps=max_steps)
+    out["sweep"] = sw
+    print(f"\n== sweep orchestration ({n_sweep} problems, "
+          f"width={width}, tree attention) ==")
+    for r in sw:
+        print(f"{r['path']:14s} {r['problems_per_s']:8.2f} problems/s "
+              f"{r['tok_per_s']:8.1f} tok/s "
+              f"({r['decode_streams']:.0f} decode streams, "
+              f"{r['mean_batch_occupancy']:.1f} seqs/decode-step)")
+    print(f"-> continuous batching {sw[1]['speedup_vs_one_at_a_time']:.2f}x "
+          f"problems/s of one-at-a-time (batch occupancy "
+          f"{sw[0]['mean_batch_occupancy']:.1f} -> "
+          f"{sw[1]['mean_batch_occupancy']:.1f})")
 
     sp = {(r["method"], r["path"]): r for r in out["rows"]}
     for method in ["rebase", "ets"]:

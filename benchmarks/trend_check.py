@@ -6,7 +6,8 @@
 Compares a fresh ``BENCH_table2.json`` (written by
 ``benchmarks/run.py --only table2 --smoke``) against the committed copy
 snapshotted before the run.  Every decode row is matched on
-(method, path) and every prefill row on (path); the check fails when a
+(method, path) and every prefill/sweep row on (path); the check fails
+when a
 fresh ``tok_per_s`` drops below ``committed / max_ratio`` (default 2x —
 generous because CI machines are noisy; the point is catching
 order-of-magnitude orchestration regressions, not 10% jitter).  Smoke
@@ -74,6 +75,9 @@ def main() -> None:
                         args.max_ratio)
     failures += _compare("prefill", committed.get("prefill", []),
                          fresh.get("prefill", []), ("path",),
+                         args.max_ratio)
+    failures += _compare("sweep", committed.get("sweep", []),
+                         fresh.get("sweep", []), ("path",),
                          args.max_ratio)
     if failures:
         print(f"[trend] FAILED: >{args.max_ratio}x tok/s regression in "

@@ -5,18 +5,21 @@ Public API:
   rebase_weights / rebase_reweight   — Eq. (1) / Eq. (3)
   ETSConfig, ets_prune               — Eq. (2)/(4) ILP pruning step
   SearchConfig, run_search           — unified beam/DVTS/REBASE/ETS loop
-  run_search_many                    — sweep driver (one batched prefill)
+  SearchState                        — the loop as a resumable step machine
+  SweepScheduler, run_search_many    — continuous cross-problem batching
   SyntheticTaskConfig, SyntheticProblem, evaluate_method — oracle task
+  SyntheticSweep                     — multi-problem synthetic backend
   HardwareModel, simulate_search_cost — §3 memory-op cost model (Fig. 2)
 """
 from .clustering import cluster_embeddings  # noqa: F401
 from .controllers import (Backend, SearchConfig, SearchResult,  # noqa: F401
-                          run_search, run_search_many, weighted_majority)
+                          SearchState, SweepScheduler, run_search,
+                          run_search_many, weighted_majority)
 from .costsim import HardwareModel, simulate_search_cost  # noqa: F401
 from .ets import ETSConfig, ETSStep, ets_prune  # noqa: F401
 from .ilp import (SelectionProblem, SelectionResult, greedy_select,  # noqa: F401
                   milp_select, solve)
 from .rebase import rebase_reweight, rebase_weights  # noqa: F401
-from .synthetic import (SyntheticProblem, SyntheticTaskConfig,  # noqa: F401
-                        evaluate_method)
+from .synthetic import (SyntheticProblem, SyntheticSweep,  # noqa: F401
+                        SyntheticTaskConfig, evaluate_method)
 from .tree import Node, SearchTree  # noqa: F401

@@ -15,6 +15,20 @@ score them with a PRM, and embed last steps.  Backends include the
 synthetic oracle task (search-dynamics experiments; core/synthetic.py) and
 the real LM engine (serving/search_backend.py).
 
+Step machine
+------------
+``SearchState`` is the search loop opened up at its backend-call
+boundaries — a resumable state machine instead of a closed loop:
+
+    demand() -> leaf_counts        what this problem wants expanded next
+    note_children(kids) -> nodes   to be PRM-scored
+    note_scores(scores) -> nodes   to be embedded (may be empty)
+    complete_step(embs)            retention policy, prune, bookkeeping
+
+``run_search`` drives one state to completion and is bit-identical to
+the historical closed loop; ``SweepScheduler`` drives *many* states in
+lock-step so the expensive stages batch across problems (below).
+
 Batched step protocol
 ---------------------
 One search step makes O(1) backend calls, not O(leaves):
@@ -41,6 +55,22 @@ is identical to the legacy serial loop, so for a deterministic backend
 ``run_search(..., batched=True)`` and ``batched=False`` produce
 bit-identical trees.
 
+Cross-problem batching (the sweep protocol)
+-------------------------------------------
+``SweepScheduler`` interleaves many problems' search steps so the decode
+batch stays full as individual searches narrow and finish.  Each global
+step it gathers every live problem's ``(leaf, count)`` demand and issues
+ONE ``expand_multi`` / ``score_multi`` / ``embed_multi`` call over the
+union; backends without the ``*_multi`` methods fall back to a
+per-problem loop of the ``*_many`` protocol (same per-problem call
+order, so deterministic backends produce bit-identical per-problem
+results either way).  Queued problems are admitted in batches (one
+``start_many`` flash-prefill stream per admission wave) as live problems
+finish and release pool pages; completed problems retire immediately —
+``finish_problem`` releases their engine state — without stalling the
+rest.  ``run_search_many`` routes sweeps through the scheduler by
+default.
+
 Per the paper (§5.1): the search width shrinks as trajectories complete,
 and the final answer is selected by weighted majority voting with the
 final PRM score as weight.
@@ -48,6 +78,7 @@ final PRM score as weight.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import math
 from collections import defaultdict
 from dataclasses import dataclass, field
@@ -151,14 +182,33 @@ class SearchResult:
     steps: int
 
 
+def _majority_tie_key(ans: Any) -> Tuple[str, str]:
+    """Total order over answer values for tie-breaking."""
+    return (type(ans).__name__, repr(ans))
+
+
 def weighted_majority(pairs: Sequence[Tuple[Any, float]]) -> Any:
-    """Answer with the largest summed reward weight."""
+    """Answer with the largest summed reward weight.
+
+    Order-independent end to end: per-answer weights are reduced with
+    ``math.fsum`` (exactly rounded, so the total is a function of the
+    weight *multiset*, not the accumulation order), and among the
+    answers with the maximal total the smallest by ``(type name,
+    repr)`` sort key wins — never the accumulator's insertion order.
+    Permuting ``pairs`` therefore cannot change the result.  The
+    tie-break is additionally deterministic across runs for value-typed
+    answers (str/int/tuple — everything the tasks here produce);
+    objects whose ``repr`` embeds their identity sort by that identity.
+    """
     if not pairs:
         return None
-    acc: Dict[Any, float] = defaultdict(float)
+    groups: Dict[Any, List[float]] = defaultdict(list)
     for ans, w in pairs:
-        acc[ans] += max(w, 0.0)
-    return max(acc.items(), key=lambda kv: kv[1])[0]
+        groups[ans].append(max(w, 0.0))
+    acc = {ans: math.fsum(ws) for ans, ws in groups.items()}
+    top = max(acc.values())
+    return min((a for a, w in acc.items() if w == top),
+               key=_majority_tie_key)
 
 
 # ---------------------------------------------------------------------------
@@ -191,68 +241,177 @@ def _embed_many(backend, tree: SearchTree,
 
 
 # ---------------------------------------------------------------------------
-# The unified loop
+# Cross-problem dispatch: one call covering many problems' stages when
+# the backend supports it (the LM backend batches the union into one
+# decode / PRM / embedder stream), else a per-problem loop of the
+# single-problem protocol — per-problem call order is identical, so
+# deterministic backends are bit-identical either way.
 # ---------------------------------------------------------------------------
 
-def run_search(backend: Backend, scfg: SearchConfig,
-               tree: Optional[SearchTree] = None) -> SearchResult:
-    tree = tree if tree is not None else SearchTree()
-    N = scfg.width
-    completed: List[Tuple[Any, float]] = []
-    method = scfg.method
-    batched = scfg.batched
+def _expand_multi(backend, reqs: Sequence[Tuple[SearchTree,
+                                                Sequence[Tuple[int, int]]]]
+                  ) -> List[List[int]]:
+    fn = getattr(backend, "expand_multi", None)
+    if fn is not None:
+        return [list(kids) for kids in fn(reqs)]
+    return [_expand_many(backend, tree, lc) for tree, lc in reqs]
 
-    # subtree id for DVTS (assigned at the first expansion)
-    subtree_of: Dict[int, int] = {}
 
-    # --- step 0: expand the root -------------------------------------
-    live = {0: N}  # leaf id -> continuation count
-    steps = 0
-    while steps < scfg.max_steps and N > 0 and live:
-        steps += 1
-        # 1. expand: one batched call over every live leaf
-        leaf_counts = [(leaf, n) for leaf, n in live.items() if n > 0]
-        if batched:
-            candidates = _expand_many(backend, tree, leaf_counts)
-        else:
-            candidates = _serial_expand(backend, tree, leaf_counts)
+def _score_multi(backend, reqs: Sequence[Tuple[SearchTree, Sequence[int]]]
+                 ) -> List[List[float]]:
+    fn = getattr(backend, "score_multi", None)
+    if fn is not None:
+        return [list(s) for s in fn(reqs)]
+    return [_score_many(backend, tree, nodes) for tree, nodes in reqs]
+
+
+def _embed_multi(backend, reqs: Sequence[Tuple[SearchTree, Sequence[int]]]
+                 ) -> List[np.ndarray]:
+    fn = getattr(backend, "embed_multi", None)
+    if fn is not None:
+        return [np.asarray(e) for e in fn(reqs)]
+    return [_embed_many(backend, tree, nodes) for tree, nodes in reqs]
+
+
+def _tree_ns(tree: SearchTree):
+    """Problem namespace of a tree (None for backends without one)."""
+    pl = tree.node(0).payload
+    return pl.get("ns") if isinstance(pl, dict) else None
+
+
+# ---------------------------------------------------------------------------
+# The step machine
+# ---------------------------------------------------------------------------
+
+class SearchState:
+    """One problem's search as a resumable step machine.
+
+    The historical ``run_search`` loop, split at the backend-call
+    boundaries so an external driver decides *when* (and batched with
+    *whom*) each expensive stage runs:
+
+        st = SearchState(backend, scfg, tree)
+        while (lc := st.demand()) is not None:
+            kids = backend.expand_many(st.tree, lc)
+            to_score = st.note_children(kids)
+            if st.finished: break
+            to_embed = st.note_scores(backend.score_many(st.tree, to_score))
+            if st.finished: break
+            st.complete_step(backend.embed_many(st.tree, to_embed)
+                             if to_embed else None)
+        result = st.result()
+
+    Driven to completion solo (``run_search``) the visible behavior —
+    backend call order, tree contents, RNG consumption, recorded
+    traces — is bit-identical to the closed loop this replaced; the
+    ``SweepScheduler`` interleaves many states' phases without touching
+    any per-problem logic.
+
+    Phases cycle ``demand -> children -> scores [-> embeds] -> demand``;
+    ``finished`` flips once the search is over and ``result()`` builds
+    the ``SearchResult`` (merging the backend's per-problem
+    ``io_summary`` when it has one).
+    """
+
+    def __init__(self, backend: Backend, scfg: SearchConfig,
+                 tree: Optional[SearchTree] = None):
+        self.backend = backend
+        self.scfg = scfg
+        self.tree = tree if tree is not None else SearchTree()
+        self.N = scfg.width
+        self.completed: List[Tuple[Any, float]] = []
+        self.steps = 0
+        # leaf id -> continuation count (step 0 expands the root)
+        self.live: Dict[int, int] = {0: self.N}
+        # subtree id for DVTS (assigned at the first expansion)
+        self.subtree_of: Dict[int, int] = {}
+        self.finished = False
+        self.phase = "demand"
+        self._leaf_counts: List[Tuple[int, int]] = []
+        self._candidates: List[int] = []
+        self._open: List[int] = []
+        self._rewards: List[float] = []
+
+    # -- phases --------------------------------------------------------
+    def demand(self) -> Optional[List[Tuple[int, int]]]:
+        """Continuation demand for the next step, or None when done."""
+        if self.finished:
+            return None
+        assert self.phase == "demand", self.phase
+        if not (self.steps < self.scfg.max_steps and self.N > 0
+                and self.live):
+            self._finish()
+            return None
+        self.steps += 1
+        self._leaf_counts = [(leaf, n) for leaf, n in self.live.items()
+                             if n > 0]
+        self.phase = "children"
+        return self._leaf_counts
+
+    def note_children(self, candidates: Sequence[int]) -> List[int]:
+        """Record the expansion's children; returns the nodes to score.
+
+        An empty expansion ends the search (no step is recorded — the
+        legacy loop's ``break``).
+        """
+        assert self.phase == "children", self.phase
+        candidates = list(candidates)
         if not candidates:
-            break
+            self._finish()
+            return []
+        tree, scfg = self.tree, self.scfg
         # subtree bookkeeping (children arrive grouped by parent leaf)
         kids_of: Dict[int, List[int]] = defaultdict(list)
         for kid in candidates:
             kids_of[tree.node(kid).parent].append(kid)
-        for leaf, _ in leaf_counts:
+        for leaf, _ in self._leaf_counts:
             kids = kids_of.get(leaf, [])
-            if leaf == 0 and method == "dvts":
+            if leaf == 0 and scfg.method == "dvts":
                 k = scfg.n_keep
                 for j, kid in enumerate(kids):
-                    subtree_of[kid] = j % k
+                    self.subtree_of[kid] = j % k
             else:
                 for kid in kids:
-                    subtree_of[kid] = subtree_of.get(leaf, 0)
-        # 2. score: one batched PRM call over all candidates
-        if batched:
-            scores = _score_many(backend, tree, candidates)
-        else:
-            scores = _serial_score(backend, tree, candidates)
+                    self.subtree_of[kid] = self.subtree_of.get(leaf, 0)
+        self._candidates = candidates
+        self.phase = "scores"
+        return candidates
+
+    def note_scores(self, scores: Sequence[float]) -> List[int]:
+        """Record PRM rewards; returns the nodes to embed (possibly
+        empty — then call ``complete_step(None)`` unless ``finished``)."""
+        assert self.phase == "scores", self.phase
+        tree, scfg = self.tree, self.scfg
+        candidates = self._candidates
         for nid, r in zip(candidates, scores):
             tree.node(nid).reward = float(r)
-        # 3. split off finished trajectories (width shrinks, as in REBASE)
+        # split off finished trajectories (width shrinks, as in REBASE)
         finished = [c for c in candidates if tree.node(c).finished]
         for f in finished:
-            completed.append((backend.answer(tree, f), tree.node(f).reward))
-        N = max(scfg.width - len(completed), 0)
+            self.completed.append((self.backend.answer(tree, f),
+                                   tree.node(f).reward))
+        self.N = max(scfg.width - len(self.completed), 0)
         open_c = [c for c in candidates if not tree.node(c).finished]
-        hook = getattr(backend, "on_step", None)
-        if not open_c or N == 0:
-            tree.record_step([c for c in candidates])
+        if not open_c or self.N == 0:
+            tree.record_step(list(candidates))
+            hook = getattr(self.backend, "on_step", None)
             if hook:
                 hook(tree, [])
-            break
-        rewards = [tree.node(c).reward for c in open_c]
+            self._finish()
+            return []
+        self._open = open_c
+        self._rewards = [tree.node(c).reward for c in open_c]
+        need_embs = (scfg.method in ("ets", "ets-kv")
+                     and scfg.ets.use_clustering and scfg.ets.lambda_d > 0)
+        self.phase = "embeds"
+        return list(open_c) if need_embs else []
 
-        # 4. retention policy
+    def complete_step(self, embs: Optional[np.ndarray] = None) -> None:
+        """Apply the retention policy and close the step."""
+        assert self.phase == "embeds", self.phase
+        tree, scfg = self.tree, self.scfg
+        open_c, rewards = self._open, self._rewards
+        method, N = scfg.method, self.N
         if method == "rebase":
             counts = rebase_weights(rewards, N, scfg.ets.rebase_temperature)
             live = {c: int(w) for c, w in zip(open_c, counts)}
@@ -262,10 +421,9 @@ def run_search(backend: Backend, scfg: SearchConfig,
             per = max(N // k, 1)
             live = {open_c[int(i)]: per for i in order}
         elif method == "dvts":
-            k = scfg.n_keep
             best_per_tree: Dict[int, int] = {}
             for ci, c in enumerate(open_c):
-                st = subtree_of.get(c, 0)
+                st = self.subtree_of.get(c, 0)
                 cur = best_per_tree.get(st)
                 if cur is None or rewards[ci] > tree.node(cur).reward:
                     best_per_tree[st] = c
@@ -273,56 +431,325 @@ def run_search(backend: Backend, scfg: SearchConfig,
             per = max(N // max(len(keepers), 1), 1)
             live = {c: per for c in keepers}
         elif method in ("ets", "ets-kv"):
-            embs = None
-            if scfg.ets.use_clustering and scfg.ets.lambda_d > 0:
-                if batched:
-                    embs = _embed_many(backend, tree, open_c)
-                else:
-                    embs = _serial_embed(backend, tree, open_c)
             step = ets_prune(tree, open_c, rewards, N, scfg.ets, embs)
             live = {open_c[i]: int(n)
                     for i, n in zip(step.selected, step.counts)}
         else:
             raise ValueError(method)
-
-        live = {c: n for c, n in live.items() if n > 0}
-        tree.record_step(list(live.keys()))
+        self.live = {c: n for c, n in live.items() if n > 0}
+        tree.record_step(list(self.live.keys()))
+        hook = getattr(self.backend, "on_step", None)
         if hook:
-            hook(tree, list(live.keys()))
+            hook(tree, list(self.live.keys()))
+        self.phase = "demand"
 
-    # unfinished leaves at exhaustion count as failures (no answer)
-    ans = weighted_majority(completed)
-    kv_summary = tree.kv_summary()
-    # measured attention-IO (engine backends): pages streamed per decode
-    # step and the realized sharing ratio, next to the tree-level counts
-    io_fn = getattr(backend, "io_summary", None)
-    if io_fn is not None:
-        kv_summary = {**kv_summary, **io_fn()}
-    return SearchResult(answer=ans, completed=completed, tree=tree,
-                        kv_summary=kv_summary, steps=steps)
+    # -- terminal ------------------------------------------------------
+    def _finish(self) -> None:
+        self.finished = True
+        self.phase = "done"
+
+    def result(self) -> SearchResult:
+        """Build the SearchResult (valid once ``finished``)."""
+        assert self.finished, "search still in flight"
+        ans = weighted_majority(self.completed)
+        kv_summary = self.tree.kv_summary()
+        # measured attention-IO (engine backends): pages streamed per
+        # decode step and the realized sharing ratio, next to the
+        # tree-level counts.  Backends with problem namespaces report
+        # *this problem's* trace, not the engine-cumulative one.
+        io_fn = getattr(self.backend, "io_summary", None)
+        if io_fn is not None:
+            ns = _tree_ns(self.tree)
+            try:        # third-party io_summary may not take ns
+                accepts_ns = "ns" in inspect.signature(io_fn).parameters
+            except (TypeError, ValueError):
+                accepts_ns = False
+            extra = io_fn(ns=ns) if ns is not None and accepts_ns \
+                else io_fn()
+            kv_summary = {**kv_summary, **extra}
+        return SearchResult(answer=ans, completed=self.completed,
+                            tree=self.tree, kv_summary=kv_summary,
+                            steps=self.steps)
+
+
+# ---------------------------------------------------------------------------
+# The unified loop (one problem, driven to completion)
+# ---------------------------------------------------------------------------
+
+def run_search(backend: Backend, scfg: SearchConfig,
+               tree: Optional[SearchTree] = None) -> SearchResult:
+    st = SearchState(backend, scfg, tree=tree)
+    batched = scfg.batched
+    while True:
+        leaf_counts = st.demand()
+        if leaf_counts is None:
+            break
+        if batched:
+            kids = _expand_many(backend, st.tree, leaf_counts)
+        else:
+            kids = _serial_expand(backend, st.tree, leaf_counts)
+        to_score = st.note_children(kids)
+        if st.finished:
+            break
+        if batched:
+            scores = _score_many(backend, st.tree, to_score)
+        else:
+            scores = _serial_score(backend, st.tree, to_score)
+        to_embed = st.note_scores(scores)
+        if st.finished:
+            break
+        embs = None
+        if to_embed:
+            if batched:
+                embs = _embed_many(backend, st.tree, to_embed)
+            else:
+                embs = _serial_embed(backend, st.tree, to_embed)
+        st.complete_step(embs)
+    result = st.result()
+    # solo runs retire their own problem: the final step's engine
+    # sequences are released (namespaced backends no longer sweep other
+    # problems' leftovers in on_step, so sequential solo use without
+    # reset() must not accumulate them)
+    fin = getattr(backend, "finish_problem", None)
+    if fin is not None:
+        fin(st.tree)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# The sweep scheduler (many problems, continuous cross-problem batching)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SweepStats:
+    """Scheduler-level accounting for occupancy/throughput reporting."""
+    global_steps: int = 0
+    admission_waves: int = 0
+    deferred_admissions: int = 0
+    # per global step: live problems and total branch demand they posted
+    problems_per_step: List[int] = field(default_factory=list)
+    demand_per_step: List[int] = field(default_factory=list)
+
+    def mean_occupancy(self) -> float:
+        """Mean branch demand per global step (the decode batch fill)."""
+        if not self.demand_per_step:
+            return 0.0
+        return sum(self.demand_per_step) / len(self.demand_per_step)
+
+
+class SweepScheduler:
+    """Drive many searches in lock-step on one shared backend.
+
+    Each global step:
+
+      1. admits queued problems (one batched ``start_many`` flash-prefill
+         stream per wave) while the live set has room — and, for engine
+         backends, re-queues the wave when the KV pool is full, retrying
+         as finished problems release pages;
+      2. gathers every live problem's ``demand()`` into ONE
+         ``expand_multi`` call (one lock-step decode stream over the
+         union of branches);
+      3. feeds the children back and issues ONE ``score_multi`` PRM call
+         over every problem's candidates;
+      4. embeds (ONE ``embed_multi`` call) only the problems whose
+         retention policy needs it, then completes each step;
+      5. retires problems the moment they finish — ``result()`` is
+         captured and the backend's ``finish_problem`` releases their
+         engine sequences — without stalling the remaining problems.
+
+    Per-problem behavior is bit-identical to driving each state solo:
+    the scheduler only interleaves *when* stages run, never what any
+    problem sees (per-problem RNG namespaces and composition-independent
+    batching are the backend's side of that contract).
+    """
+
+    def __init__(self, backend, scfg: SearchConfig, *,
+                 prompts: Optional[Sequence[Sequence[int]]] = None,
+                 trees: Optional[Sequence[SearchTree]] = None,
+                 max_live: Optional[int] = None):
+        assert (prompts is None) != (trees is None), \
+            "pass exactly one of prompts / trees"
+        self.backend = backend
+        self.scfg = scfg
+        self._queue: List[Tuple[int, Any]] = []     # (index, prompt|tree)
+        self._from_prompts = prompts is not None
+        items = prompts if self._from_prompts else trees
+        self._n = len(items)
+        for i, item in enumerate(items):
+            self._queue.append((i, item))
+        self.max_live = max_live if max_live is not None \
+            else max(self._n, 1)
+        assert self.max_live >= 1, max_live
+        self.live: Dict[int, SearchState] = {}
+        self.results: Dict[int, SearchResult] = {}
+        self.stats = SweepStats()
+
+    # -- admission -----------------------------------------------------
+    def _start_trees(self, prompts: Sequence[Sequence[int]]
+                     ) -> List[SearchTree]:
+        starter = getattr(self.backend, "start_many", None)
+        if starter is not None:
+            # engine start_many is all-or-nothing (one new_seqs pass),
+            # so a failed wave leaves no pages behind
+            return list(starter(prompts))
+        # per-prompt fallback is not atomic: roll back already-started
+        # problems before re-raising so _admit's retry can't leak or
+        # double-start them
+        trees: List[SearchTree] = []
+        try:
+            for p in prompts:
+                trees.append(self.backend.start(p))
+        except BaseException:
+            fin = getattr(self.backend, "finish_problem", None)
+            if fin is not None:
+                for t in trees:
+                    fin(t)
+            raise
+        return trees
+
+    def _admit(self) -> None:
+        room = self.max_live - len(self.live)
+        if room <= 0 or not self._queue:
+            return
+        wave = self._queue[:room]
+        if self._from_prompts:
+            # engine OutOfPages (pool full): halve the wave until a
+            # prefix fits — start_many is all-or-nothing, so failed
+            # attempts leave no pages behind — and defer entirely when
+            # not even one problem fits (retrying after retirements).
+            trees, err = None, None
+            while wave:
+                try:
+                    trees = self._start_trees([item for _, item in wave])
+                    break
+                except RuntimeError as e:
+                    # only capacity errors are schedulable; matched by
+                    # name so core stays decoupled from repro.kvcache
+                    if type(e).__name__ != "OutOfPages":
+                        raise
+                    err = e
+                    if len(wave) == 1:
+                        break
+                    wave = wave[:len(wave) // 2]
+            if trees is None:
+                if not self.live:
+                    raise err      # nothing in flight can free pages
+                self.stats.deferred_admissions += 1
+                return             # retry after the next retirement
+        else:
+            trees = [item for _, item in wave]
+        del self._queue[:len(wave)]
+        self.stats.admission_waves += 1
+        for (idx, _), tree in zip(wave, trees):
+            self.live[idx] = SearchState(self.backend, self.scfg, tree=tree)
+
+    # -- retirement ----------------------------------------------------
+    def _retire(self, idx: int) -> None:
+        st = self.live.pop(idx)
+        self.results[idx] = st.result()
+        fin = getattr(self.backend, "finish_problem", None)
+        if fin is not None:
+            fin(st.tree)
+
+    # -- one global step -----------------------------------------------
+    def step(self) -> bool:
+        """Advance every live problem by one search step.
+
+        Returns True while there is work left (live or queued)."""
+        self._admit()
+        # 1. demand: retire problems that have nothing left to do
+        reqs: List[Tuple[SearchTree, List[Tuple[int, int]]]] = []
+        states: List[Tuple[int, SearchState]] = []
+        for idx in sorted(self.live):
+            st = self.live[idx]
+            lc = st.demand()
+            if lc is None:
+                self._retire(idx)
+                continue
+            reqs.append((st.tree, lc))
+            states.append((idx, st))
+        if not reqs:
+            return bool(self.live or self._queue)
+        self.stats.global_steps += 1
+        self.stats.problems_per_step.append(len(reqs))
+        self.stats.demand_per_step.append(
+            sum(n for _, lc in reqs for _, n in lc))
+        # 2. ONE expansion stream over every problem's branches
+        kid_groups = _expand_multi(self.backend, reqs)
+        score_reqs, score_states = [], []
+        for (idx, st), kids in zip(states, kid_groups):
+            to_score = st.note_children(kids)
+            if st.finished:
+                self._retire(idx)
+                continue
+            score_reqs.append((st.tree, to_score))
+            score_states.append((idx, st))
+        if not score_reqs:
+            return bool(self.live or self._queue)
+        # 3. ONE padded PRM call over every problem's candidates
+        score_groups = _score_multi(self.backend, score_reqs)
+        embed_reqs, embed_states = [], []
+        for (idx, st), scores in zip(score_states, score_groups):
+            to_embed = st.note_scores(scores)
+            if st.finished:
+                self._retire(idx)
+                continue
+            if to_embed:
+                embed_reqs.append((st.tree, to_embed))
+                embed_states.append((idx, st))
+            else:
+                st.complete_step(None)
+        # 4. ONE embedder call for the problems that cluster
+        if embed_reqs:
+            for (idx, st), embs in zip(embed_states,
+                                       _embed_multi(self.backend,
+                                                    embed_reqs)):
+                st.complete_step(embs)
+        return bool(self.live or self._queue)
+
+    def run(self) -> List[SearchResult]:
+        while self.step():
+            pass
+        return [self.results[i] for i in range(self._n)]
 
 
 def run_search_many(backend, scfg: SearchConfig,
-                    prompts: Sequence[Sequence[int]]) -> List[SearchResult]:
-    """Multi-problem sweep: one batched prefill stream, then the searches.
+                    prompts: Sequence[Sequence[int]], *,
+                    continuous: bool = True,
+                    max_live: Optional[int] = None) -> List[SearchResult]:
+    """Multi-problem sweep on one shared backend.
 
-    Uses the backend's ``start_many`` when present — the LM backend
-    routes it through ``engine.prefill_many``, so every prompt of the
-    sweep is ingested in a single lock-step, length-bucketed
-    flash-prefill stream instead of one serial dense prefill per
-    problem (the serving bottleneck the ROADMAP flags).  Backends
-    without ``start_many`` fall back to per-prompt ``start``.  The
-    searches themselves still run one problem at a time on the shared
-    engine; a backend-level ``io_summary`` therefore covers the sweep
-    cumulatively, not per problem.
+    ``continuous=True`` (default) drives the whole sweep through the
+    ``SweepScheduler``: problems are admitted in batched flash-prefill
+    waves (``start_many``), every global step expands *all* live
+    problems' leaves in one decode stream and scores all their
+    candidates in one padded PRM call, and finished problems retire
+    (releasing their pool pages to the admission queue) without
+    stalling the rest — the decode batch stays full as searches narrow,
+    instead of draining once per problem.  Per-problem results are
+    bit-identical to solo ``run_search`` runs; per-problem ``kv_summary``
+    comes from the backend's namespaced IO attribution.
 
-    Capacity: every prompt's pages stay pinned until its own search
-    branches its root, so the KV pool must hold all of the sweep's
-    prompts *plus* one search's working set at once — chunk the prompt
-    list for sweeps that would exceed ``n_pages`` (a per-problem
-    start/run/reset loop has no such cliff, at the cost of serial
-    prefill).
+    ``continuous=False`` keeps the legacy orchestration — one batched
+    prefill for the sweep, then the searches run one problem at a time —
+    as the one-at-a-time comparison baseline (benchmarks) and for
+    backends that cannot interleave problems.
+
+    Capacity: ``max_live`` bounds how many problems hold pool pages at
+    once (default: all).  Admission is *prefill*-guarded: a wave whose
+    prompts would overflow the pool is deferred and retried as searches
+    finish, so sweeps with more prompts than the pool holds need no
+    manual chunking.  The admitted problems' decode working sets are
+    not reserved, though — a pool too small for ``max_live`` concurrent
+    searches (prompt + ``width`` branches each) can still raise
+    ``OutOfPages`` mid-step; bound ``max_live`` to what the pool can
+    hold (working-set-aware admission is a ROADMAP open item).
     """
+    if not prompts:
+        return []
+    if continuous:
+        return SweepScheduler(backend, scfg, prompts=prompts,
+                              max_live=max_live).run()
     starter = getattr(backend, "start_many", None)
     if starter is not None:
         trees = list(starter(prompts))

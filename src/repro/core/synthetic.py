@@ -187,6 +187,61 @@ class SyntheticProblem(Backend):
                                         "emb": np.zeros(self.cfg.emb_dim)})
 
 
+class SyntheticSweep:
+    """Multi-problem synthetic backend for the sweep scheduler.
+
+    Each tree is owned by exactly one :class:`SyntheticProblem`; every
+    Backend call dispatches to the owner by tree identity, so problems'
+    RNG streams stay fully independent no matter how the scheduler
+    interleaves their steps.  Because dispatch preserves each problem's
+    call order, a cross-problem sweep is bit-identical to running the
+    same problems serially — the property the sweep equivalence tests
+    pin down.  There are no ``*_multi`` overrides: the controller's
+    per-problem fallback loop is the point (the oracle has no batch
+    axis to fill).
+    """
+
+    def __init__(self, problems: List["SyntheticProblem"]):
+        self.problems = list(problems)
+        # id -> (tree, problem): the tree reference keeps every owned
+        # tree alive, so a recycled id() can never alias a stale entry
+        self._owner: Dict[int, Tuple[SearchTree, SyntheticProblem]] = {}
+
+    def make_trees(self) -> List[SearchTree]:
+        trees = []
+        for prob in self.problems:
+            t = prob.make_tree()
+            self._owner[id(t)] = (t, prob)
+            trees.append(t)
+        return trees
+
+    def _prob(self, tree: SearchTree) -> "SyntheticProblem":
+        owned, prob = self._owner[id(tree)]
+        assert owned is tree, "tree not started by this sweep backend"
+        return prob
+
+    def expand(self, tree, leaf, n):
+        return self._prob(tree).expand(tree, leaf, n)
+
+    def score(self, tree, node):
+        return self._prob(tree).score(tree, node)
+
+    def embed(self, tree, node):
+        return self._prob(tree).embed(tree, node)
+
+    def answer(self, tree, leaf):
+        return self._prob(tree).answer(tree, leaf)
+
+    def expand_many(self, tree, leaf_counts):
+        return self._prob(tree).expand_many(tree, leaf_counts)
+
+    def score_many(self, tree, nodes):
+        return self._prob(tree).score_many(tree, nodes)
+
+    def embed_many(self, tree, nodes):
+        return self._prob(tree).embed_many(tree, nodes)
+
+
 # ---------------------------------------------------------------------------
 # Batch evaluation harness
 # ---------------------------------------------------------------------------

@@ -33,6 +33,14 @@ Accounting properties used by tests and the Fig. 2 reproduction:
   * ``logical_pages`` — sum over sequences of their table lengths
     (what per-sequence contiguous caches would cost).
 
+Problem namespaces: every sequence carries an ``ns`` tag (fresh per
+``new_seq``/``new_seqs`` entry unless given; inherited by branches), so
+many independent search problems can share one allocator — a forest of
+roots — with page accounting attributable per problem
+(``ns_page_stats``).  Branching never crosses namespaces, so namespaces
+partition the live pages and the per-ns counters sum to the global
+ones.
+
 ``tree_metadata`` derives the tree-attention operands for a decode step
 (unique live page list, per-page descendant bitmap over the padded
 batch, per-page valid lengths) from the live block tables.  Every
@@ -52,6 +60,7 @@ class SequenceHandle:
     seq_id: int
     block_table: List[int]
     length: int                   # tokens written so far
+    ns: int = 0                   # problem namespace (branch inherits)
 
     def last_page_fill(self, page_size: int) -> int:
         rem = self.length % page_size
@@ -79,6 +88,7 @@ class PageAllocator:
         self.refcount: List[int] = [0] * n_pages
         self.seqs: Dict[int, SequenceHandle] = {}
         self._next_seq = 0
+        self._next_ns = 0
         # bumped on every mutation; keys the tree-metadata memo
         self.version = 0
         self._meta_cache: Optional[Tuple[tuple, object]] = None
@@ -95,6 +105,37 @@ class PageAllocator:
     def shared_pages(self) -> int:
         return sum(1 for rc in self.refcount if rc > 1)
 
+    # -- per-problem (namespace) attribution ------------------------------
+    # A namespace groups the sequences of one search problem.  Branching
+    # never crosses namespaces, so namespaces partition the live pages:
+    # summing these over live namespaces reproduces the global counters
+    # above (the property the per-problem IO tests assert).
+
+    def ns_page_stats(self, ns: int,
+                      seq_ids: Optional[Sequence[int]] = None
+                      ) -> Dict[str, int]:
+        """One-pass per-problem page accounting: unique physical pages,
+        logical pages (sum of the namespace's table lengths — the
+        per-sequence contiguous-cache cost) and shared pages referenced
+        by namespace ``ns``.  Callers that already track the
+        namespace's sequence ids (the search backend does) pass them as
+        ``seq_ids`` to skip the full-allocator scan — O(own sequences)
+        instead of O(all sequences) per call."""
+        if seq_ids is None:
+            handles = [h for h in self.seqs.values() if h.ns == ns]
+        else:
+            handles = [self.seqs[s] for s in seq_ids if s in self.seqs]
+        pages: set = set()
+        logical = 0
+        for h in handles:
+            assert h.ns == ns, (h.seq_id, h.ns, ns)
+            pages.update(h.block_table)
+            logical += len(h.block_table)
+        return {"physical_pages": len(pages),
+                "logical_pages": logical,
+                "shared_pages": sum(1 for pg in pages
+                                    if self.refcount[pg] > 1)}
+
     # -- internals ---------------------------------------------------------
     def _alloc_page(self) -> int:
         if not self.free:
@@ -110,35 +151,47 @@ class PageAllocator:
             self.free.append(pg)
 
     # -- public API --------------------------------------------------------
-    def new_seq(self, prompt_tokens: int = 0) -> SequenceHandle:
+    def new_seq(self, prompt_tokens: int = 0,
+                ns: Optional[int] = None) -> SequenceHandle:
         """Create an empty sequence with room for `prompt_tokens`.
 
         Never produces device copies: prompt KV is written by prefill
         into freshly-allocated (unshared) pages, so unlike
-        ``append_tokens`` there is no CoW to report.
+        ``append_tokens`` there is no CoW to report.  ``ns`` is the
+        problem namespace the sequence (and every branch forked from
+        it) is attributed to; a fresh one is minted when omitted.
         """
         self.version += 1
         n_pages = -(-prompt_tokens // self.page_size) if prompt_tokens else 0
         table = [self._alloc_page() for _ in range(n_pages)]
-        h = SequenceHandle(self._next_seq, table, prompt_tokens)
+        if ns is None:
+            ns = self._next_ns
+            self._next_ns += 1
+        h = SequenceHandle(self._next_seq, table, prompt_tokens, ns=ns)
         self._next_seq += 1
         self.seqs[h.seq_id] = h
         return h
 
-    def new_seqs(self, prompt_token_counts: Sequence[int]
+    def new_seqs(self, prompt_token_counts: Sequence[int],
+                 ns: Optional[Sequence[int]] = None
                  ) -> List[SequenceHandle]:
         """Allocate a whole prefill batch in one pass (all-or-nothing).
 
         Capacity for every sequence is checked up front, so a mid-batch
         ``OutOfPages`` can never leave a half-allocated batch behind —
         the batched prefill either owns pages for all its prompts or
-        touches nothing.
+        touches nothing.  Each prompt starts its own problem namespace
+        unless ``ns`` supplies one per prompt.
         """
         need = sum(-(-n // self.page_size) for n in prompt_token_counts)
         if need > len(self.free):
             raise OutOfPages(
                 f"prefill batch needs {need} pages, {len(self.free)} free")
-        return [self.new_seq(n) for n in prompt_token_counts]
+        if ns is None:
+            ns = [None] * len(prompt_token_counts)
+        assert len(ns) == len(prompt_token_counts)
+        return [self.new_seq(n, ns=s)
+                for n, s in zip(prompt_token_counts, ns)]
 
     def append_tokens(self, seq_id: int, n: int) -> List[CopyOp]:
         """Reserve slots for n new tokens; may CoW the shared last page."""
@@ -170,7 +223,8 @@ class PageAllocator:
         for _ in range(n_branches):
             for pg in h.block_table:
                 self.refcount[pg] += 1
-            b = SequenceHandle(self._next_seq, list(h.block_table), h.length)
+            b = SequenceHandle(self._next_seq, list(h.block_table), h.length,
+                               ns=h.ns)
             self._next_seq += 1
             self.seqs[b.seq_id] = b
             out.append(b)

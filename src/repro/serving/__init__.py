@@ -1,3 +1,3 @@
 """Serving runtime: paged decode engine, sampler, LM search backend."""
 from .engine import EngineConfig, PagedEngine, pow2_bucket  # noqa: F401
-from .sampler import sample_tokens  # noqa: F401
+from .sampler import sample_tokens, sample_tokens_rowwise  # noqa: F401

@@ -60,7 +60,17 @@ Both modes share RoPE positions, KV writes and sampling, and agree to
 fp32 tolerance on logits (bit-identical sampled streams in practice).
 The engine counts ``unique_pages_streamed`` vs ``logical_pages_streamed``
 per decode step — the measured IO sharing ratio that the paper's
-Table 2 throughput claims rest on.
+Table 2 throughput claims rest on — and attributes both to each
+sequence's problem namespace (``*_by_ns``), so a cross-problem sweep
+sharing one decode stream still reports per-problem IO.
+
+Sampling is row-keyed (``sample_tokens_rowwise``): each sequence
+advances its own PRNG key chain, so its token stream depends only on
+its own key and logits — never on batch composition, row order, or
+chunk boundaries.  Together with per-row attention independence this
+makes decode *composition-independent*: merging many problems'
+branches into one stream (the sweep scheduler) reproduces each
+problem's solo stream bit-for-bit.
 
 Within a mode, attention runs the pure-jnp reference everywhere, or the
 Pallas kernel (interpret on CPU, Mosaic on TPU) when ``use_kernel=True``.
@@ -84,6 +94,11 @@ from repro.kvcache.pool import paged_attention_ref
 from repro.kernels.ref import tree_attention_ref
 from repro.models.layers import mlp_apply, rms_norm
 from repro.models.layers import apply_rope, rope_angles
+
+
+# One jitted split per decode iteration advances every row's key chain
+# in lock-step (rows are independent: chain position == live iterations).
+_split_rows = jax.jit(jax.vmap(lambda k: jax.random.split(k, 2)))
 
 
 def pow2_bucket(n: int, lo: int = 8) -> int:
@@ -148,9 +163,15 @@ class PagedEngine:
         # per-step attention IO accounting: pages the attention actually
         # streams (unique — tree mode dedups shared prefixes) vs the
         # per-leaf total a paged read pattern costs.  logical/unique is
-        # the measured sharing ratio.
+        # the measured sharing ratio.  The *_by_ns dicts attribute the
+        # same counters to each sequence's problem namespace, so a
+        # cross-problem sweep sharing one decode stream still reports
+        # per-problem IO (namespaces hold disjoint pages, so the per-ns
+        # counts sum to the globals).
         self.unique_pages_streamed = 0
         self.logical_pages_streamed = 0
+        self.unique_pages_streamed_by_ns: Dict[int, int] = {}
+        self.logical_pages_streamed_by_ns: Dict[int, int] = {}
         # trace-time counters: +1 per compiled decode-step / prefill
         # signature (tests assert the tree step stays O(log n_pages) and
         # prefill stays O(log max_batch * log max_seq_len))
@@ -337,7 +358,8 @@ class PagedEngine:
         """Run one prompt; returns seq_id.  See ``prefill_many``."""
         return self.prefill_many([tokens])[0]
 
-    def prefill_many(self, prompts: Sequence[Sequence[int]]) -> List[int]:
+    def prefill_many(self, prompts: Sequence[Sequence[int]],
+                     ns: Optional[Sequence[int]] = None) -> List[int]:
         """Ingest a batch of prompts in one lock-step prefill stream.
 
         Pages for *all* prompts are allocated in a single
@@ -365,7 +387,7 @@ class PagedEngine:
         assert all(len(t) <= self.ecfg.max_seq_len for t in all_toks), \
             "prompt exceeds max_seq_len"
         ctxs = [t[:-1] for t in all_toks]
-        handles = self.alloc.new_seqs([len(c) for c in ctxs])
+        handles = self.alloc.new_seqs([len(c) for c in ctxs], ns=ns)
         for h, t in zip(handles, all_toks):
             self.tokens[h.seq_id] = t
         mb = self.ecfg.max_batch
@@ -434,22 +456,81 @@ class PagedEngine:
         self.n_prefill_tokens = 0
         self.unique_pages_streamed = 0
         self.logical_pages_streamed = 0
+        self.unique_pages_streamed_by_ns.clear()
+        self.logical_pages_streamed_by_ns.clear()
 
     # ------------------------------------------------------------------
+    def _count_streamed_pages(self, live: Sequence[int],
+                              n_unique: int, n_logical: int) -> None:
+        """Book one decode iteration's attention IO, globally and per
+        problem namespace.  Namespaces hold disjoint pages (branching
+        never crosses them), so per-ns unique counts sum to the global
+        unique count in tree mode too."""
+        self.unique_pages_streamed += n_unique
+        self.logical_pages_streamed += n_logical
+        handles = [self.alloc.seqs.get(i) for i in live]
+        if any(h is None or not hasattr(h, "ns") for h in handles):
+            return            # engine doubles: global accounting only
+        uniq_ns = self.unique_pages_streamed_by_ns
+        log_ns = self.logical_pages_streamed_by_ns
+        ns_tags = {h.ns for h in handles}
+        if len(ns_tags) == 1:
+            # fast path (solo runs, single-problem steps): the global
+            # counts ARE this namespace's — skip the per-ns page unions
+            ns = handles[0].ns
+            uniq_ns[ns] = uniq_ns.get(ns, 0) + n_unique
+            log_ns[ns] = log_ns.get(ns, 0) + n_logical
+            return
+        tree_mode = self.ecfg.attention == "tree"
+        pages_by_ns: Dict[int, set] = {}
+        for h in handles:
+            npg = len(h.block_table)
+            log_ns[h.ns] = log_ns.get(h.ns, 0) + npg
+            if tree_mode:
+                pages_by_ns.setdefault(h.ns, set()).update(h.block_table)
+            else:
+                # paged reads stream every page of every row
+                uniq_ns[h.ns] = uniq_ns.get(h.ns, 0) + npg
+        for ns, pages in pages_by_ns.items():
+            uniq_ns[ns] = uniq_ns.get(ns, 0) + len(pages)
+
     def decode(self, seq_ids: Sequence[int], n_tokens: int,
-               key, temperature: float = 1.0,
-               stop_tokens: Sequence[int] = ()) -> Dict[int, List[int]]:
+               key=None, temperature: float = 1.0,
+               stop_tokens: Sequence[int] = (),
+               row_keys=None) -> Dict[int, List[int]]:
         """Decode up to n_tokens for each sequence, lock-step batched.
 
         Stops a sequence early when a stop token is emitted (the stop
         token is included in the returned step).  Returns new tokens per
         seq_id.
+
+        Sampling is row-keyed: each sequence advances its own PRNG key
+        chain (one split per lock-step iteration it is live for) and
+        samples with :func:`sample_tokens_rowwise`, so its token stream
+        depends only on its own key, logits and stop history — never on
+        which other sequences share the batch, their order, or where
+        chunk boundaries fall.  Callers pass either ``row_keys`` (one
+        key per sequence — the sweep scheduler derives them per problem
+        so cross-problem batches reproduce solo runs bit-for-bit) or a
+        single ``key`` that is split into per-row chains.
         """
-        from .sampler import sample_tokens
+        from .sampler import sample_tokens_rowwise
         ecfg = self.ecfg
         tree_mode = ecfg.attention == "tree"
         ids = list(seq_ids)
         assert len(ids) <= ecfg.max_batch, (len(ids), ecfg.max_batch)
+        if row_keys is None:
+            assert key is not None, "pass key or row_keys"
+            row_keys = jax.random.split(key, len(ids))
+        keys = jnp.asarray(row_keys)
+        assert keys.shape[0] == len(ids), (keys.shape, len(ids))
+        if keys.shape[0] < ecfg.max_batch:   # pad rows get inert dummy keys
+            pad = ecfg.max_batch - keys.shape[0]
+            cache = getattr(self, "_pad_keys", None)
+            if cache is None or cache.shape[0] < pad:
+                cache = jax.random.split(jax.random.key(0), ecfg.max_batch)
+                self._pad_keys = cache
+            keys = jnp.concatenate([keys, cache[:pad]])
         out: Dict[int, List[int]] = {i: [] for i in ids}
         done = {i: False for i in ids}
         stop = set(int(s) for s in stop_tokens)
@@ -493,8 +574,8 @@ class PagedEngine:
             if tree_mode:
                 meta = self.alloc.tree_metadata(rows,
                                                 pad_page=self.dump_page)
-                self.unique_pages_streamed += meta.n_unique
-                self.logical_pages_streamed += meta.n_logical
+                self._count_streamed_pages(live, meta.n_unique,
+                                           meta.n_logical)
                 logits, self.pool.k, self.pool.v = self._tree_decode_fn(
                     self.params, jnp.asarray(tok), jnp.asarray(lens),
                     jnp.asarray(pages), jnp.asarray(slots), jnp.asarray(act),
@@ -504,16 +585,20 @@ class PagedEngine:
                 # paged reads stream every page of every live row
                 n_logical = sum(len(self.alloc.seqs[i].block_table)
                                 for i in live)
-                self.unique_pages_streamed += n_logical
-                self.logical_pages_streamed += n_logical
+                self._count_streamed_pages(live, n_logical, n_logical)
                 logits, self.pool.k, self.pool.v = self._decode_fn(
                     self.params, jnp.asarray(tok), jnp.asarray(bt),
                     jnp.asarray(lens), jnp.asarray(pages), jnp.asarray(slots),
                     jnp.asarray(act), self.pool.k, self.pool.v)
             if ecfg.trace_logits:
                 self.logits_trace.append(np.asarray(logits))
-            key, sub = jax.random.split(key)
-            new = np.asarray(sample_tokens(sub, logits, temperature))
+            # advance every row's own key chain (done rows' keys advance
+            # too, but their samples are never consumed — a row's stream
+            # depends only on how many iterations it was live for)
+            pair = _split_rows(keys)
+            keys, subs = pair[:, 0], pair[:, 1]
+            new = np.asarray(sample_tokens_rowwise(subs, logits,
+                                                   temperature))
             for j, i in enumerate(ids):
                 if done[i] or not act[j]:
                     continue

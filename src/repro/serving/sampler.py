@@ -9,9 +9,35 @@ import jax.numpy as jnp
 
 @functools.partial(jax.jit, static_argnames=("temperature",))
 def sample_tokens(key, logits, temperature: float = 1.0):
-    """logits (B, V) -> (B,) int32.  temperature<=0 means greedy."""
+    """logits (B, V) -> (B,) int32.  temperature<=0 means greedy.
+
+    One key for the whole batch: the noise drawn for row j depends on
+    j's position in the batch, so the sampled stream changes when rows
+    are re-ordered or batches merged.  Lock-step serving paths that mix
+    sequences from different problems use :func:`sample_tokens_rowwise`
+    instead.
+    """
     if temperature <= 0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jax.random.categorical(
         key, logits.astype(jnp.float32) / temperature, axis=-1
     ).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("temperature",))
+def sample_tokens_rowwise(keys, logits, temperature: float = 1.0):
+    """keys (B,) typed PRNG keys, logits (B, V) -> (B,) int32.
+
+    Each row samples from *its own* key, so a sequence's token depends
+    only on its key chain and its logits — never on which other rows
+    share the lock-step batch or where it sits in it.  This
+    composition-independence is what lets the sweep scheduler merge
+    many problems' branches into one decode stream and still reproduce
+    each problem's solo token stream bit-for-bit.
+    """
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.vmap(
+        lambda k, row: jax.random.categorical(
+            k, row.astype(jnp.float32) / temperature)
+    )(keys, logits).astype(jnp.int32)

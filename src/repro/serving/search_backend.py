@@ -17,8 +17,7 @@ signatures):
   start_many  — prefill every prompt of a multi-problem sweep in one
       batched, length-bucketed flash-prefill stream
       (``engine.prefill_many``); pending roots are protected from
-      ``on_step``'s sweep-free until their own search branches them.
-      ``run_search_many`` (core/controllers.py) is the driver.
+      ``on_step``'s free-sweep until their own search branches them.
   expand_many — branch *all* live leaves up front, then decode every new
       branch in a single lock-step batched ``engine.decode`` call;
       when the total branch count exceeds ``engine.ecfg.max_batch`` the
@@ -36,25 +35,45 @@ signatures):
       pool runs over valid positions only, so batched embeddings match
       the single-node path.
 
-Fallback contract: the single-node ``expand``/``score``/``embed`` remain
-fully supported (``run_search(..., batched=False)`` and third-party
-callers use them); ``score_traces``/``embed_traces`` count jit traces of
-the bucketed functions so tests can assert the recompilation bound.
+Cross-problem sweep protocol (``expand_multi`` / ``score_multi`` /
+``embed_multi``, driven by ``repro.core.controllers.SweepScheduler``):
+each takes ``[(tree, request), ...]`` for many problems and batches the
+union into the SAME single stream the ``*_many`` path uses — one decode
+over every problem's branches, one padded PRM/embedder call over every
+problem's candidates.  The single-problem ``*_many`` methods are the
+one-request special case of the multi path, so both share RNG and shape
+discipline.
 
-``on_step`` (called by run_search after pruning) frees the engine
+Problem namespaces replace ``reset()``-based isolation: every problem a
+sweep admits keeps its own
+
+  * engine sequence namespace (``SequenceHandle.ns``; pages and IO are
+    attributed per problem by the allocator/engine),
+  * sampling-key chain, seeded exactly like a fresh ``reset()`` would —
+    and consumed one step-key per expand call, with per-branch row keys
+    (``fold_in(step_key, branch_index)``) fed to the engine's row-keyed
+    sampler.  A branch's token stream therefore depends only on its own
+    problem's RNG and its own logits, never on which other problems
+    share the decode batch or where chunk boundaries fall — which is
+    why a cross-problem sweep is bit-identical to running each problem
+    solo on a freshly reset backend,
+  * KV/IO trace (``kv_trace_by_problem``; ``io_summary(ns=...)``
+    reduces one problem's trace — what ``SearchResult.kv_summary``
+    reports in a sweep).
+
+``on_step`` (called by the controller after pruning) frees the engine
 sequences of pruned leaves — this is where ETS's ILP decisions become
-physical page releases, and where ``kv_stats`` is sampled for the
-engine-level KV trace (the measured counterpart of the tree-level
-accounting in repro.core.tree).  Each trace entry also carries the
-step's attention-IO deltas (``unique_pages_streamed`` vs
-``logical_pages_streamed``); ``io_summary`` reduces them to the measured
-sharing ratio, which run_search merges into ``SearchResult.kv_summary``
-so ETS-vs-REBASE reports show measured IO next to page counts.
+physical page releases.  It only sweeps the *owning problem's*
+namespace, so concurrent problems on the same engine never free each
+other's pages.  ``finish_problem`` (called by the scheduler at
+retirement) releases whatever the final step left behind.  Each trace
+entry carries the step's attention-IO deltas (``unique_pages_streamed``
+vs ``logical_pages_streamed``); ``io_summary`` reduces them to the
+measured sharing ratio.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -64,6 +83,9 @@ import numpy as np
 from repro.core.tree import SearchTree
 
 from .engine import PagedEngine, pow2_bucket as _bucket
+
+# vectorized per-branch key derivation: fold_in(step_key, branch_index)
+_fold_rows = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(None, 0)))
 
 
 @dataclass
@@ -98,6 +120,15 @@ def _pad_bucket(seqs: Sequence[Sequence[int]]):
     return toks, pos, lengths
 
 
+def _split_counts(flat: Sequence, counts: Sequence[int]) -> List[List]:
+    """Un-flatten a per-request concatenation."""
+    out, i = [], 0
+    for n in counts:
+        out.append(list(flat[i:i + n]))
+        i += n
+    return out
+
+
 class LMBackend:
     def __init__(self, engine: PagedEngine, prm_model, prm_params,
                  embed_model, embed_params, bcfg: BackendConfig,
@@ -111,14 +142,20 @@ class LMBackend:
         self.bcfg = bcfg
         self.answer_fn = answer_fn
         self.seed = seed
-        self.key = jax.random.key(seed)
+        # per-problem state, keyed by namespace: sampling-key chain
+        # (seeded like a fresh reset()), live engine sequences, KV/IO
+        # trace, and the last sampled cumulative IO counters (the trace
+        # stores per-step deltas)
+        self._keys: Dict[Any, jax.Array] = {}
+        self._ns_seqs: Dict[Any, set] = {}
+        self.kv_trace_by_problem: Dict[Any, List[Dict[str, int]]] = {}
+        self._last_io_ns: Dict[Any, Tuple[int, int]] = {}
+        # flat trace across problems, in on_step order (solo runs see
+        # exactly the pre-namespace behavior)
         self.kv_trace: List[Dict[str, int]] = []
         # roots prefilled ahead of their search (start_many sweeps):
-        # on_step must not free them while another problem runs
+        # on_step must not free them before their search branches them
         self._protected: set = set()
-        # last sampled cumulative IO counters (kv_trace stores deltas)
-        self._last_io = (getattr(engine, "unique_pages_streamed", 0),
-                         getattr(engine, "logical_pages_streamed", 0))
         self._score_fn = jax.jit(
             lambda p, toks: prm_model.reward(p, {"tokens": toks}))
         self._embed_fn = jax.jit(
@@ -147,6 +184,14 @@ class LMBackend:
         self._embed_batch_fn = jax.jit(embed_batch)
 
     # ------------------------------------------------------------------
+    def _ns_of(self, seq_id: int):
+        """Problem namespace of an engine sequence (engine doubles
+        without an allocator or handle namespaces fall back to the root
+        seq id, which is equally unique per problem)."""
+        alloc = getattr(self.engine, "alloc", None)
+        h = alloc.seqs.get(seq_id) if alloc is not None else None
+        return getattr(h, "ns", seq_id)
+
     def start(self, prompt_tokens: Sequence[int]) -> SearchTree:
         return self.start_many([prompt_tokens])[0]
 
@@ -156,10 +201,12 @@ class LMBackend:
 
         All prompts go through ``engine.prefill_many`` — one lock-step,
         length-bucketed prefill for the sweep instead of one serial
-        dense prefill per problem.  The pending roots are protected from
-        ``on_step``'s sweep-free until their own search branches them
-        (an unstarted problem has no live leaf in any tree yet, so the
-        keep-set would otherwise free its pages).
+        dense prefill per problem.  Each prompt opens its own problem
+        namespace (fresh sampling-key chain, own sequence set and IO
+        trace).  The pending roots are protected from ``on_step``'s
+        free-sweep until their own search branches them (an unstarted
+        problem has no live leaf in any tree yet, so the keep-set would
+        otherwise free its pages).
         """
         batch_fn = getattr(self.engine, "prefill_many", None)
         if batch_fn is not None:
@@ -167,12 +214,19 @@ class LMBackend:
         else:           # minimal engine doubles: per-prompt fallback
             sids = [self.engine.prefill(p) for p in prompts]
         self._protected.update(sids)
-        return [SearchTree(root_tokens=len(p),
-                           root_payload={"seq_id": sid, "tokens": []})
-                for p, sid in zip(prompts, sids)]
+        trees = []
+        for p, sid in zip(prompts, sids):
+            ns = self._ns_of(sid)
+            self._keys[ns] = jax.random.key(self.seed)
+            self._ns_seqs.setdefault(ns, set()).add(sid)
+            trees.append(SearchTree(
+                root_tokens=len(p),
+                root_payload={"seq_id": sid, "tokens": [], "ns": ns}))
+        return trees
 
-    def _next_key(self):
-        self.key, sub = jax.random.split(self.key)
+    def _next_key(self, ns):
+        key = self._keys.setdefault(ns, jax.random.key(self.seed))
+        self._keys[ns], sub = jax.random.split(key)
         return sub
 
     def _add_child(self, tree: SearchTree, leaf: int, bid: int,
@@ -196,39 +250,68 @@ class LMBackend:
 
     def expand_many(self, tree: SearchTree,
                     leaf_counts: Sequence[Tuple[int, int]]) -> List[int]:
-        """Branch every live leaf, then decode all branches lock-step.
+        """Branch every live leaf, then decode all branches lock-step
+        (the one-problem case of ``expand_multi``)."""
+        return self.expand_multi([(tree, leaf_counts)])[0]
 
-        One ``engine.decode`` stream covers the whole step; the branch
-        list is chunked only when it exceeds ``max_batch``.  Children are
-        returned flat, grouped by leaf in ``leaf_counts`` order.
+    def expand_multi(self, reqs: Sequence[Tuple[SearchTree,
+                                                Sequence[Tuple[int, int]]]]
+                     ) -> List[List[int]]:
+        """Branch every problem's live leaves, then decode the union of
+        branches in ONE lock-step stream.
+
+        One ``engine.decode`` call covers every problem's new branches;
+        the combined branch list is chunked only when it exceeds
+        ``max_batch``.  Each problem consumes exactly one step key from
+        its own chain, and each branch samples from
+        ``fold_in(step_key, branch_index)`` — so chunk boundaries and
+        batch composition can't perturb any branch's token stream, and
+        the sweep reproduces solo runs bit-for-bit.  Children are
+        returned per request, grouped by leaf in ``leaf_counts`` order.
         """
-        plan: List[Tuple[int, List[int]]] = []     # (leaf, branch_ids)
+        plans: List[Tuple[SearchTree, List[Tuple[int, List[int]]]]] = []
         all_branches: List[int] = []
-        for leaf, n in leaf_counts:
-            node = tree.node(leaf)
-            if node.depth >= self.bcfg.max_depth or n <= 0:
-                continue
-            bids = self.engine.branch(node.payload["seq_id"], n)
-            # once branched, the root's pages live on through its
-            # children's refcounts — drop the sweep protection
-            self._protected.discard(node.payload["seq_id"])
-            plan.append((leaf, bids))
-            all_branches.extend(bids)
-        if not all_branches:
-            return []
-        mb = self.engine.ecfg.max_batch
+        key_groups: List[jax.Array] = []
+        for tree, leaf_counts in reqs:
+            ns = tree.node(0).payload["ns"]
+            plan: List[Tuple[int, List[int]]] = []
+            branches: List[int] = []
+            for leaf, n in leaf_counts:
+                node = tree.node(leaf)
+                if node.depth >= self.bcfg.max_depth or n <= 0:
+                    continue
+                bids = self.engine.branch(node.payload["seq_id"], n)
+                # once branched, the root's pages live on through its
+                # children's refcounts — drop the sweep protection
+                self._protected.discard(node.payload["seq_id"])
+                self._ns_seqs.setdefault(ns, set()).update(bids)
+                plan.append((leaf, bids))
+                branches.extend(bids)
+            plans.append((tree, plan))
+            if branches:
+                step_key = self._next_key(ns)
+                key_groups.append(_fold_rows(
+                    step_key, jnp.arange(len(branches), dtype=jnp.uint32)))
+                all_branches.extend(branches)
         outs: Dict[int, List[int]] = {}
-        for i in range(0, len(all_branches), mb):
-            chunk = all_branches[i:i + mb]
-            outs.update(self.engine.decode(
-                chunk, self.bcfg.max_step_tokens, self._next_key(),
-                temperature=self.bcfg.temperature,
-                stop_tokens=(self.bcfg.step_token, self.bcfg.eos_token)))
-        kids: List[int] = []
-        for leaf, bids in plan:
-            for bid in bids:
-                kids.append(self._add_child(tree, leaf, bid, outs[bid]))
-        return kids
+        if all_branches:
+            row_keys = key_groups[0] if len(key_groups) == 1 \
+                else jnp.concatenate(key_groups)
+            mb = self.engine.ecfg.max_batch
+            for i in range(0, len(all_branches), mb):
+                outs.update(self.engine.decode(
+                    all_branches[i:i + mb], self.bcfg.max_step_tokens,
+                    temperature=self.bcfg.temperature,
+                    stop_tokens=(self.bcfg.step_token, self.bcfg.eos_token),
+                    row_keys=row_keys[i:i + mb]))
+        results: List[List[int]] = []
+        for tree, plan in plans:
+            kids: List[int] = []
+            for leaf, bids in plan:
+                for bid in bids:
+                    kids.append(self._add_child(tree, leaf, bid, outs[bid]))
+            results.append(kids)
+        return results
 
     def score(self, tree: SearchTree, node: int) -> float:
         sid = tree.node(node).payload["seq_id"]
@@ -239,14 +322,25 @@ class LMBackend:
     def score_many(self, tree: SearchTree,
                    nodes: Sequence[int]) -> List[float]:
         """One padded-bucket PRM call for every candidate of the step."""
-        if not nodes:
-            return []
+        return self.score_multi([(tree, nodes)])[0]
+
+    def score_multi(self, reqs: Sequence[Tuple[SearchTree, Sequence[int]]]
+                    ) -> List[List[float]]:
+        """ONE padded-bucket PRM call covering every problem's
+        candidates; per-row rewards are split back per request.  Rows
+        are independent under the position mask, so each problem's
+        rewards match its solo ``score_many`` bit-for-bit regardless of
+        how the sweep fills the bucket."""
+        counts = [len(nodes) for _, nodes in reqs]
         seqs = [self.engine.tokens[tree.node(n).payload["seq_id"]]
-                for n in nodes]
+                for tree, nodes in reqs for n in nodes]
+        if not seqs:
+            return [[] for _ in reqs]
         toks, pos, lengths = _pad_bucket(seqs)
         r = self._score_batch_fn(self.prm_params, jnp.asarray(toks),
                                  jnp.asarray(pos), jnp.asarray(lengths))
-        return [float(x) for x in np.asarray(r)[:len(seqs)]]
+        flat = [float(x) for x in np.asarray(r)[:len(seqs)]]
+        return _split_counts(flat, counts)
 
     def embed(self, tree: SearchTree, node: int) -> np.ndarray:
         step = tree.node(node).payload["tokens"]
@@ -260,57 +354,91 @@ class LMBackend:
                    nodes: Sequence[int]) -> np.ndarray:
         """Bucketed batch embed; padding is masked out of the encoder's
         attention (positions == -1) and of the mean pool."""
+        return self.embed_multi([(tree, nodes)])[0]
+
+    def embed_multi(self, reqs: Sequence[Tuple[SearchTree, Sequence[int]]]
+                    ) -> List[np.ndarray]:
+        """ONE bucketed encoder call covering every problem's nodes."""
         d = self.embed_model.cfg.d_model
-        steps = [tree.node(n).payload["tokens"] for n in nodes]
-        out = np.zeros((len(nodes), d), np.float32)
+        counts = [len(nodes) for _, nodes in reqs]
+        steps = [tree.node(n).payload["tokens"]
+                 for tree, nodes in reqs for n in nodes]
+        out = np.zeros((len(steps), d), np.float32)
         idx = [i for i, s in enumerate(steps) if s]
-        if not idx:
-            return out
-        seqs = [steps[i] for i in idx]
-        toks, pos, _ = _pad_bucket(seqs)
-        h = self._embed_batch_fn(self.embed_params, jnp.asarray(toks),
-                                 jnp.asarray(pos))
-        h = np.asarray(h, np.float32)
-        for row, i in enumerate(idx):
-            out[i] = h[row]
-        return out
+        if idx:
+            toks, pos, _ = _pad_bucket([steps[i] for i in idx])
+            h = self._embed_batch_fn(self.embed_params, jnp.asarray(toks),
+                                     jnp.asarray(pos))
+            h = np.asarray(h, np.float32)
+            for row, i in enumerate(idx):
+                out[i] = h[row]
+        return np.split(out, np.cumsum(counts)[:-1])
 
     def answer(self, tree: SearchTree, leaf: int) -> Any:
         return tree.node(leaf).payload.get("answer")
 
     # -- lifecycle -----------------------------------------------------
+    def _ns_stats(self, ns) -> Dict[str, int]:
+        """This problem's page accounting (falls back to the engine's
+        global stats on engine doubles without namespace support)."""
+        fn = getattr(getattr(self.engine, "alloc", None),
+                     "ns_page_stats", None)
+        if fn is None:
+            stats = dict(self.engine.kv_stats())
+            stats.pop("unique_pages_streamed", None)
+            stats.pop("logical_pages_streamed", None)
+            return stats
+        # pass our own live-sequence set: O(this problem's sequences),
+        # not O(every sequence in the allocator), per step
+        return fn(ns, seq_ids=sorted(self._ns_seqs.get(ns, ())))
+
     def on_step(self, tree: SearchTree, live: Sequence[int]) -> None:
-        """Free engine sequences of pruned/finished leaves; sample stats."""
-        # Only live leaves need engine sequences: interior nodes' pages
-        # stay alive through their descendants' block-table refcounts.
-        # Pending roots of a start_many sweep are kept until branched.
+        """Free engine sequences of pruned/finished leaves; sample stats.
+
+        Only sweeps the owning problem's namespace: live leaves keep
+        their sequences (interior nodes' pages stay alive through their
+        descendants' block-table refcounts), pending start_many roots
+        stay protected until branched, and other problems sharing the
+        engine are never touched.
+        """
+        ns = tree.node(0).payload["ns"]
         keep = set(self._protected)
         for leaf in live:
             pl = tree.node(leaf).payload
             if pl and "seq_id" in pl:
                 keep.add(pl["seq_id"])
-        for sid in list(self.engine.alloc.seqs):
-            if sid not in keep:
+        pool = self._ns_seqs.get(ns, set())
+        for sid in sorted(pool - keep):
+            if sid in self.engine.alloc.seqs:
                 self.engine.free(sid)
-        stats = dict(self.engine.kv_stats())
-        # convert the engine's cumulative IO counters to per-step deltas
-        # (what this search step's decode actually streamed)
-        uniq = stats.pop("unique_pages_streamed", 0)
-        logical = stats.pop("logical_pages_streamed", 0)
-        stats["unique_pages_streamed"] = uniq - self._last_io[0]
-        stats["logical_pages_streamed"] = logical - self._last_io[1]
-        self._last_io = (uniq, logical)
+            pool.discard(sid)
+        stats = self._ns_stats(ns)
+        # convert the engine's cumulative per-problem IO counters to
+        # per-step deltas (what this step's decode actually streamed
+        # *for this problem*)
+        uniq = getattr(self.engine, "unique_pages_streamed_by_ns",
+                       {}).get(ns, 0)
+        logical = getattr(self.engine, "logical_pages_streamed_by_ns",
+                          {}).get(ns, 0)
+        last = self._last_io_ns.get(ns, (0, 0))
+        stats["unique_pages_streamed"] = uniq - last[0]
+        stats["logical_pages_streamed"] = logical - last[1]
+        self._last_io_ns[ns] = (uniq, logical)
         self.kv_trace.append(stats)
+        self.kv_trace_by_problem.setdefault(ns, []).append(stats)
 
-    def io_summary(self) -> Dict[str, float]:
+    def io_summary(self, ns=None) -> Dict[str, float]:
         """Measured attention-IO over the recorded steps: pages streamed
         per decode step and the realized sharing ratio (>1 whenever
         branches share prefix pages and the engine runs tree attention).
-        Merged into ``SearchResult.kv_summary`` by run_search."""
-        uniq = sum(t.get("unique_pages_streamed", 0) for t in self.kv_trace)
-        logical = sum(t.get("logical_pages_streamed", 0)
-                      for t in self.kv_trace)
-        steps = max(len(self.kv_trace), 1)
+        ``ns`` selects one problem's trace (what ``SearchResult.kv_summary``
+        reports in a sweep); without it the reduction covers every
+        problem recorded since the last reset."""
+        trace = self.kv_trace if ns is None \
+            else self.kv_trace_by_problem.get(ns, [])
+        uniq = sum(t.get("unique_pages_streamed", 0) for t in trace)
+        logical = sum(t.get("logical_pages_streamed", 0) for t in trace)
+        steps = max(len(trace), 1)
         return {
             "unique_pages_streamed": uniq,
             "logical_pages_streamed": logical,
@@ -318,19 +446,47 @@ class LMBackend:
             "io_sharing_ratio": logical / max(uniq, 1),
         }
 
+    def finish_problem(self, tree: SearchTree) -> None:
+        """Retire one problem: free whatever engine sequences its final
+        step left behind (unbranched roots included) and drop its
+        per-problem RNG/sequence bookkeeping plus the engine's per-ns
+        IO counters (no further decode can touch the namespace).  The
+        KV/IO traces (``kv_trace_by_problem``) are deliberately kept —
+        the benchmarks and the fig2 validation read them after
+        retirement; a long-lived server should ``reset()`` between
+        measurement windows to reclaim them.  Called by the sweep
+        scheduler; solo callers may keep using ``reset()`` between
+        problems instead.
+        """
+        pl = tree.node(0).payload
+        ns = pl.get("ns") if isinstance(pl, dict) else None
+        if ns is None:        # not a tree this backend started
+            return
+        for sid in sorted(self._ns_seqs.pop(ns, set())):
+            self._protected.discard(sid)
+            if sid in self.engine.alloc.seqs:
+                self.engine.free(sid)
+        self._keys.pop(ns, None)
+        self._last_io_ns.pop(ns, None)
+        getattr(self.engine, "unique_pages_streamed_by_ns", {}).pop(ns, None)
+        getattr(self.engine, "logical_pages_streamed_by_ns", {}).pop(ns,
+                                                                    None)
+
     def reset(self) -> None:
-        """Reset for an independent search problem on the same backend:
-        frees every engine sequence, clears the KV/IO trace, zeroes the
-        engine throughput/IO counters, and re-seeds the sampling key —
-        so successive problems neither mix KV traces nor leak RNG state.
-        Jit caches (decode/prefill/bucketed PRM + embedder) and the
-        jit-trace counters (``score_traces`` etc., which track cache
-        lifetime, not per-problem state) survive untouched."""
+        """Reset for an independent stream of problems on the same
+        backend: frees every engine sequence, clears every per-problem
+        KV/IO trace and sampling-key chain, and zeroes the engine
+        throughput/IO counters — so successive runs neither mix KV
+        traces nor leak RNG state.  Jit caches (decode/prefill/bucketed
+        PRM + embedder) and the jit-trace counters (``score_traces``
+        etc., which track cache lifetime, not per-problem state) survive
+        untouched."""
         self.engine.reset()
         if hasattr(self.engine, "reset_counters"):
             self.engine.reset_counters()
         self._protected.clear()
         self.kv_trace.clear()
-        self.key = jax.random.key(self.seed)
-        self._last_io = (getattr(self.engine, "unique_pages_streamed", 0),
-                         getattr(self.engine, "logical_pages_streamed", 0))
+        self.kv_trace_by_problem.clear()
+        self._keys.clear()
+        self._ns_seqs.clear()
+        self._last_io_ns.clear()

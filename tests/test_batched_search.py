@@ -116,8 +116,8 @@ class CountingEngine:
     def branch(self, seq_id, n):
         return [self._new(list(self.tokens[seq_id])) for _ in range(n)]
 
-    def decode(self, seq_ids, n_tokens, key, temperature=1.0,
-               stop_tokens=()):
+    def decode(self, seq_ids, n_tokens, key=None, temperature=1.0,
+               stop_tokens=(), row_keys=None):
         ids = list(seq_ids)
         assert len(ids) <= self.ecfg.max_batch
         self.decode_calls += 1

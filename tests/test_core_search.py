@@ -193,6 +193,31 @@ def test_weighted_majority():
     assert weighted_majority([]) is None
 
 
+def test_weighted_majority_tie_break_is_order_independent():
+    """Regression: ties used to fall through to dict insertion order, so
+    permuting the completed list could change the winner.  Ties now
+    break on the answer sort key — the smallest tied answer wins no
+    matter the arrival order."""
+    import itertools
+    pairs = [("b", 0.5), ("a", 0.3), ("c", 0.5), ("a", 0.2)]
+    # a, b and c all sum to 0.5 -> the tie-break picks "a" always
+    for perm in itertools.permutations(pairs):
+        assert weighted_majority(list(perm)) == "a"
+    # 3+ addends: naive left-to-right float accumulation makes both the
+    # totals and tie membership depend on arrival order (0.1+0.2+0.3 !=
+    # 0.3+0.2+0.1 in binary); the exactly-rounded per-answer reduction
+    # keeps every permutation agreeing
+    pairs = [("z", 0.1), ("z", 0.2), ("z", 0.3), ("a", 0.6)]
+    winners = {weighted_majority(list(p))
+               for p in itertools.permutations(pairs)}
+    assert len(winners) == 1
+    # negative weights clamp to zero and cannot break the tie either
+    assert weighted_majority([("z", 0.4), ("y", 0.4), ("z", -1.0)]) == "y"
+    # mixed answer types still order deterministically (by type name)
+    for perm in itertools.permutations([(2, 0.5), ("2", 0.5)]):
+        assert weighted_majority(list(perm)) == 2
+
+
 # ---------------------------------------------------------------------------
 # End-to-end search dynamics (the paper's Table 1/3 qualitative claims)
 # ---------------------------------------------------------------------------

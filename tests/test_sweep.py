@@ -1,0 +1,274 @@
+"""Cross-problem continuous batching: the sweep scheduler's per-problem
+results are bit-identical to serial per-problem runs (property-tested
+over random finish orders and admission interleavings on the synthetic
+backend; end-to-end on the LM backend in both attention modes), the
+sweep shares ONE decode stream per global step, per-problem IO
+attribution partitions the engine counters, and the whole sweep stays
+inside the existing O(log) prefill/decode recompile budgets."""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_shim import HealthCheck, given, settings, st
+
+from repro.configs import get_config
+from repro.core import (ETSConfig, SearchConfig, SweepScheduler, run_search,
+                        run_search_many)
+from repro.core.synthetic import (SyntheticProblem, SyntheticSweep,
+                                  SyntheticTaskConfig)
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, PagedEngine, pow2_bucket
+from repro.serving.search_backend import BackendConfig, LMBackend
+
+
+def _tree_signature(tree):
+    """Backend-independent tree identity: structure, rewards, finish
+    flags, and token payloads (engine seq ids are allocation-order
+    artifacts and excluded on purpose)."""
+    out = []
+    for n in tree.nodes:
+        toks = sem = None
+        if isinstance(n.payload, dict):
+            toks = n.payload.get("tokens")
+            sem = n.payload.get("sem")
+        out.append((n.id, n.parent, n.n_tokens, n.reward, n.finished,
+                    toks if toks is None else list(toks), sem))
+    return out
+
+
+def _assert_results_identical(serial, sweep):
+    assert len(serial) == len(sweep)
+    for rs, rc in zip(serial, sweep):
+        assert _tree_signature(rs.tree) == _tree_signature(rc.tree)
+        assert rs.answer == rc.answer
+        assert rs.completed == rc.completed
+        assert rs.steps == rc.steps
+
+
+# ---------------------------------------------------------------------------
+# Property: sweep == serial over random finish orders and admission
+# interleavings (synthetic backend; per-problem RNG, so any interleaving
+# the scheduler picks must reproduce the solo streams exactly)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.tuples(st.integers(0, 10 ** 6),   # per-problem seed
+                          st.integers(2, 6)),        # per-problem depth
+                min_size=2, max_size=5),
+       st.integers(1, 5))                            # admission cap
+def test_sweep_matches_serial_random_orders(specs, max_live):
+    """Problems of different depths finish at different global steps and
+    ``max_live`` forces queued admission — in every interleaving the
+    sweep's per-problem results are bit-identical to solo runs."""
+    scfg = SearchConfig(method="ets", width=8,
+                        ets=ETSConfig(lambda_b=1.0, lambda_d=1.0))
+
+    def make_problems():
+        return [SyntheticProblem(SyntheticTaskConfig(depth=d), seed=s)
+                for s, d in specs]
+
+    serial = []
+    for prob in make_problems():
+        serial.append(run_search(prob, scfg, tree=prob.make_tree()))
+    backend = SyntheticSweep(make_problems())
+    sched = SweepScheduler(backend, scfg, trees=backend.make_trees(),
+                           max_live=max_live)
+    sweep = sched.run()
+    _assert_results_identical(serial, sweep)
+    # the scheduler interleaves: with a binding cap it admitted in waves
+    if max_live < len(specs):
+        assert sched.stats.admission_waves > 1
+    # occupancy bookkeeping covers every global step
+    assert len(sched.stats.demand_per_step) == sched.stats.global_steps > 0
+
+
+@pytest.mark.parametrize("method", ["beam", "dvts", "rebase", "ets",
+                                    "ets-kv"])
+def test_sweep_matches_serial_all_methods(method):
+    scfg = SearchConfig(method=method, width=8,
+                        ets=ETSConfig(lambda_b=1.0, lambda_d=1.0))
+    seeds = [11, 12, 13]
+    serial = []
+    for s in seeds:
+        prob = SyntheticProblem(SyntheticTaskConfig(), seed=s)
+        serial.append(run_search(prob, scfg, tree=prob.make_tree()))
+    backend = SyntheticSweep(
+        [SyntheticProblem(SyntheticTaskConfig(), seed=s) for s in seeds])
+    sweep = SweepScheduler(backend, scfg,
+                           trees=backend.make_trees()).run()
+    _assert_results_identical(serial, sweep)
+
+
+# ---------------------------------------------------------------------------
+# LM backend: continuous sweep == serial per-problem runs, end to end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_models():
+    lm_cfg = dataclasses.replace(get_config("tiny-lm"), n_layers=2,
+                                 d_model=64, n_heads=4, n_kv_heads=2,
+                                 d_ff=128)
+    lm = build_model(lm_cfg, remat=False)
+    lm_params = lm.init(jax.random.key(0))
+    prm = build_model(dataclasses.replace(lm_cfg, n_layers=1),
+                      with_value_head=True, remat=False)
+    prm_params = prm.init(jax.random.key(1))
+    emb_cfg = dataclasses.replace(get_config("tiny-embedder"), n_layers=1,
+                                  d_model=64, n_heads=2, n_kv_heads=2,
+                                  d_ff=128)
+    emb = build_model(emb_cfg, remat=False)
+    emb_params = emb.init(jax.random.key(2))
+    return (lm, lm_params), (prm, prm_params), (emb, emb_params)
+
+
+def _lm_backend(tiny_models, attention, n_pages=256, max_batch=32):
+    (lm, lm_params), (prm, prm_params), (emb, emb_params) = tiny_models
+    engine = PagedEngine(lm, lm_params, EngineConfig(
+        n_pages=n_pages, page_size=8, max_batch=max_batch, max_seq_len=128,
+        attention=attention))
+    backend = LMBackend(engine, prm, prm_params, emb, emb_params,
+                        BackendConfig(step_token=2, eos_token=3,
+                                      max_step_tokens=6, max_depth=4),
+                        answer_fn=lambda full: None, seed=13)
+    return engine, backend
+
+
+PROMPTS = [list(range(4, 4 + n)) for n in (17, 23, 9, 30)]
+SCFG = SearchConfig(method="ets", width=5, max_steps=3,
+                    ets=ETSConfig(lambda_b=1.0, lambda_d=1.0,
+                                  cluster_threshold=0.2))
+
+
+def _serial_results(tiny_models, attention):
+    """One-problem-at-a-time baseline: fresh reset() per problem, the
+    orchestration the sweep must reproduce bit-for-bit."""
+    _, backend = _lm_backend(tiny_models, attention)
+    out = []
+    for p in PROMPTS:
+        backend.reset()
+        tree = backend.start(p)
+        out.append(run_search(backend, SCFG, tree=tree))
+    return out
+
+
+@pytest.mark.parametrize("attention", ["paged", "tree"])
+def test_lm_sweep_bit_identical_to_serial(tiny_models, attention):
+    """The acceptance bar: cross-problem continuous batching reproduces
+    serial per-problem ``run_search`` exactly — token streams, rewards,
+    completed lists, trees — in both attention modes."""
+    serial = _serial_results(tiny_models, attention)
+    engine, backend = _lm_backend(tiny_models, attention)
+    sweep = run_search_many(backend, SCFG, PROMPTS)
+    _assert_results_identical(serial, sweep)
+    # ONE lock-step decode stream per global step for the whole sweep
+    # (4 problems x 3 steps fits max_batch, so 3 streams total — not 12)
+    assert engine.n_decode_calls <= max(r.steps for r in sweep)
+    # ONE admission wave => one batched flash-prefill stream
+    assert engine.n_prefill_calls == 1
+    # everything retired: no protected roots, no leaked pages
+    assert backend._protected == set()
+    assert engine.alloc.used_pages == 0
+    engine.alloc.check_invariants()
+
+
+def test_lm_sweep_admission_caps(tiny_models):
+    """A binding ``max_live`` admits in waves; results stay
+    bit-identical to serial runs throughout."""
+    serial = _serial_results(tiny_models, "tree")
+    _, backend = _lm_backend(tiny_models, "tree")
+    sched = SweepScheduler(backend, SCFG, prompts=PROMPTS, max_live=2)
+    _assert_results_identical(serial, sched.run())
+    assert sched.stats.admission_waves >= 2
+
+
+def test_lm_sweep_defers_admission_on_full_pool(tiny_models):
+    """Prompts that can't all hold pool pages at once are deferred —
+    the wave retries as retirements free pages instead of raising — and
+    the completed problems are still bit-identical to solo runs."""
+    scfg = SearchConfig(method="rebase", width=2, max_steps=2)
+    prompts = [list(4 + (np.arange(100) + 7 * i) % 60) for i in range(2)]
+    # serial baseline on a roomy pool: results can't depend on pool size
+    _, be_s = _lm_backend(tiny_models, "tree")
+    serial = []
+    for p in prompts:
+        be_s.reset()
+        serial.append(run_search(be_s, scfg, tree=be_s.start(p)))
+    # 100-token prompts hold 13 pages each: a 20-page pool can only
+    # ever host one problem (prompt + working set) at a time
+    engine, backend = _lm_backend(tiny_models, "tree", n_pages=21,
+                                  max_batch=16)
+    sched = SweepScheduler(backend, scfg, prompts=prompts)
+    _assert_results_identical(serial, sched.run())
+    assert sched.stats.admission_waves == 2     # one problem per wave
+    assert sched.stats.deferred_admissions > 0  # waited for a retirement
+    assert engine.alloc.used_pages == 0
+
+
+def test_lm_sweep_per_problem_io_partitions_engine_counters(tiny_models):
+    """Per-problem namespaces hold disjoint pages, so the per-problem
+    IO attribution sums back to the engine's global counters and each
+    result's ``kv_summary`` reports its own problem's trace."""
+    engine, backend = _lm_backend(tiny_models, "tree")
+    sweep = run_search_many(backend, SCFG, PROMPTS)
+    ns_of = [r.tree.node(0).payload["ns"] for r in sweep]
+    assert len(set(ns_of)) == len(sweep)        # one namespace per problem
+    per_uniq = [r.kv_summary["unique_pages_streamed"] for r in sweep]
+    per_log = [r.kv_summary["logical_pages_streamed"] for r in sweep]
+    assert sum(per_uniq) == engine.unique_pages_streamed
+    assert sum(per_log) == engine.logical_pages_streamed
+    assert all(u > 0 for u in per_uniq)
+    # every problem shares prefix pages under tree attention
+    assert all(r.kv_summary["io_sharing_ratio"] > 1.0 for r in sweep)
+    # the per-problem traces are separate time series
+    for r in sweep:
+        trace = backend.kv_trace_by_problem[r.tree.node(0).payload["ns"]]
+        assert sum(t["unique_pages_streamed"] for t in trace) == \
+            r.kv_summary["unique_pages_streamed"]
+    # and the flat trace is their interleaving
+    assert len(backend.kv_trace) == \
+        sum(len(t) for t in backend.kv_trace_by_problem.values())
+
+
+@pytest.mark.parametrize("attention", ["paged", "tree"])
+def test_sweep_stays_in_recompile_budget(tiny_models, attention):
+    """Continuous batching must not reopen the jit-signature cliff: the
+    sweep's prefill stays O(log max_batch * log max_seq_len) and its
+    decode O(log n_pages) (tree) / one static signature (paged)."""
+    engine, backend = _lm_backend(tiny_models, attention)
+    run_search_many(backend, SCFG, PROMPTS)
+    ecfg = engine.ecfg
+    n_len = int(math.log2(pow2_bucket(ecfg.max_seq_len) // 8)) + 1
+    n_row = int(math.log2(pow2_bucket(ecfg.max_batch, lo=1))) + 1
+    assert engine.prefill_traces <= n_len * n_row
+    if attention == "tree":
+        assert engine.decode_traces <= int(math.log2(ecfg.n_pages)) + 1
+    else:
+        assert engine.decode_traces == 1    # static max_batch signature
+    # bucketed PRM/embedder budgets hold across the whole sweep too
+    assert backend.score_traces <= n_len * n_row
+    assert backend.embed_traces <= n_len * n_row
+
+
+def test_sweep_keeps_batch_fuller_than_one_at_a_time(tiny_models):
+    """The utilization claim behind the refactor: per decode iteration
+    the continuous sweep has more sequences in flight than the same
+    problems run one at a time."""
+    eng_1, be_1 = _lm_backend(tiny_models, "tree")
+    toks = steps = calls = 0
+    for p in PROMPTS:
+        be_1.reset()               # zeroes counters: accumulate per problem
+        run_search(be_1, SCFG, tree=be_1.start(p))
+        toks += eng_1.n_decoded_tokens
+        steps += eng_1.n_decode_steps
+        calls += eng_1.n_decode_calls
+    occ_serial = toks / max(steps, 1)
+
+    eng_c, be_c = _lm_backend(tiny_models, "tree")
+    run_search_many(be_c, SCFG, PROMPTS)
+    occ_sweep = eng_c.n_decoded_tokens / max(eng_c.n_decode_steps, 1)
+    assert occ_sweep > occ_serial
+    # and it does so with strictly fewer decode streams
+    assert eng_c.n_decode_calls < calls
