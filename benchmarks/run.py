@@ -8,8 +8,9 @@ written to ``BENCH_table2.json`` (repo root by default) — the
 machine-readable perf record (tokens/s, decode calls/step, pages
 streamed per decode step for serial / batched-paged / batched-tree,
 the prefill-ingestion section: serial-dense vs batched-flash prompt
-tok/s, and the sweep section: one-at-a-time vs continuous
-cross-problem problems/s + mean batch occupancy) that tracks the
+tok/s, the sweep section: one-at-a-time vs continuous cross-problem
+problems/s + mean batch occupancy, and the pressure section:
+serialized vs demotion-enabled small-pool problems/s) that tracks the
 serving trajectory across PRs; CI uploads
 it as an artifact from the smoke invocation and
 ``benchmarks/trend_check.py`` fails the smoke job on a >2x tok/s
@@ -81,7 +82,8 @@ def main() -> None:
                 json.dump({"smoke": args.smoke, "fast": args.fast,
                            "rows": res["rows"],
                            "prefill": res.get("prefill", []),
-                           "sweep": res.get("sweep", [])},
+                           "sweep": res.get("sweep", []),
+                           "pressure": res.get("pressure", [])},
                           f, indent=1, default=str)
             print(f"[table2] rows -> {args.bench_json}")
         print(f"[{name}] done in {res['wall_s']}s\n")

@@ -23,7 +23,13 @@ refcounted tree sharing, lock-step batched decode — and measures
     run one-at-a-time vs through the continuous cross-problem
     ``SweepScheduler`` — problems/s, tok/s and mean decode-batch
     occupancy (sequences in flight per lock-step iteration), the
-    utilization the scheduler exists to recover.
+    utilization the scheduler exists to recover,
+  * memory pressure (the ``pressure`` section): the sweep on a pool too
+    small for every problem's working set at once — fully serialized
+    admission (the only safe pre-demotion orchestration) vs the
+    admission-reserved scheduler demoting victim problems to the host
+    spill buffer under pressure; problems/s plus the realized
+    demotion/resume counts.
 
 Three decode modes per method:
 
@@ -68,6 +74,97 @@ SWEEP_MODES = [
     ("one-at-a-time", False),
     ("continuous", True),
 ]
+
+# (label, max_live override) — pressure section: on a pool too small for
+# every problem's working set at once, "serialized" (max_live=1) is the
+# only safe orchestration without demotion; "demotion" lets the
+# admission-reserved scheduler run the sweep concurrently and swap
+# victims out under pressure instead of erroring.
+PRESSURE_MODES = [
+    ("serialized", 1),
+    ("demotion", None),
+]
+
+
+def measure_pressure(lm, lm_params, prm, prm_params, emb, emb_params,
+                     prompts, width: int, max_steps: int, reps: int = 2):
+    """Small-pool sweep throughput: serialized admission vs demotion.
+
+    The pool is sized to hold ~2.5 conservative per-problem working
+    sets — room for a couple of problems, far too small for the whole
+    sweep at once.  Before working-set admission control, running the
+    sweep concurrently on such a pool raised ``OutOfPages`` mid-decode,
+    so the honest baseline is full serialization (``max_live=1``).
+    With reservations + page demotion the scheduler keeps several
+    problems in flight (parking the lowest-scoring victim under
+    pressure), which is where the problems/s delta comes from.
+    """
+    from repro.core import ETSConfig, SearchConfig, SweepScheduler
+    from repro.serving.engine import EngineConfig, PagedEngine
+    from repro.serving.search_backend import BackendConfig, LMBackend
+    from repro.training.task import ArithmeticTask, EOS, NEWLINE
+
+    page_size = 8
+    max_step_tokens = 12
+    # conservative per-problem working set: prompt pages + width branches
+    # each allocating (CoW + step tokens) pages in one step
+    per_branch = 1 + -(-max_step_tokens // page_size)
+    worst = max(-(-len(p) // page_size) for p in prompts) \
+        + width * per_branch
+    n_pages = int(worst * 2.5) + 1          # +1: the engine's dump page
+    rows = []
+    for label, max_live in PRESSURE_MODES:
+        engine = PagedEngine(lm, lm_params, EngineConfig(
+            n_pages=n_pages, page_size=page_size,
+            max_batch=max(width * 2, 32), max_seq_len=200,
+            attention="tree"))
+        backend = LMBackend(
+            engine, prm, prm_params, emb, emb_params,
+            BackendConfig(step_token=NEWLINE, eos_token=EOS,
+                          max_step_tokens=max_step_tokens, max_depth=8),
+            answer_fn=ArithmeticTask.extract_answer, seed=500)
+        scfg = SearchConfig(
+            method="ets", width=width, max_steps=max_steps,
+            ets=ETSConfig(lambda_b=2.0, lambda_d=1.0,
+                          cluster_threshold=0.15))
+        # the pool was sized with the same page math the scheduler
+        # reserves with; guard against the two silently diverging
+        assert per_branch == backend.step_pages_per_branch(), \
+            (per_branch, backend.step_pages_per_branch())
+
+        def sweep():
+            backend.reset()
+            sched = SweepScheduler(backend, scfg, prompts=prompts,
+                                   max_live=max_live)
+            sched.run()
+            return sched
+
+        sweep()                    # warmup: compile every bucket
+        toks = dec_steps = demotions = resumes = swapped = 0
+        t0 = time.time()
+        for _ in range(reps):
+            sched = sweep()        # reset() zeroes counters per sweep
+            toks += engine.n_decoded_tokens
+            dec_steps += engine.n_decode_steps
+            demotions += sched.stats.demotions
+            resumes += sched.stats.resumes
+            swapped += engine.swapped_out_pages
+        wall = time.time() - t0
+        rows.append({
+            "path": label,
+            "n_problems": len(prompts),
+            "n_pages": n_pages,
+            "problems_per_s": reps * len(prompts) / wall,
+            "tok_per_s": toks / wall,
+            "mean_batch_occupancy": toks / max(dec_steps, 1),
+            "demotions": demotions / reps,
+            "resumes": resumes / reps,
+            "swapped_pages_per_sweep": swapped / reps,
+            "wall_s": wall,
+        })
+    rows[1]["speedup_vs_serialized"] = \
+        rows[1]["problems_per_s"] / rows[0]["problems_per_s"]
+    return rows
 
 
 def measure_sweep(lm, lm_params, prm, prm_params, emb, emb_params,
@@ -318,6 +415,22 @@ def run(train_steps: int = 150, n_problems: int = 6, width: int = 12,
           f"problems/s of one-at-a-time (batch occupancy "
           f"{sw[0]['mean_batch_occupancy']:.1f} -> "
           f"{sw[1]['mean_batch_occupancy']:.1f})")
+
+    # -- memory pressure: serialized vs demotion-enabled small pool -----
+    pr = measure_pressure(lm, lm_params, prm, prm_params, emb, emb_params,
+                          sweep_prompts, width=width, max_steps=max_steps)
+    out["pressure"] = pr
+    print(f"\n== memory pressure ({n_sweep} problems on a "
+          f"{pr[0]['n_pages']}-page pool) ==")
+    for r in pr:
+        print(f"{r['path']:14s} {r['problems_per_s']:8.2f} problems/s "
+              f"{r['tok_per_s']:8.1f} tok/s "
+              f"({r['mean_batch_occupancy']:.1f} seqs/decode-step, "
+              f"{r['demotions']:.1f} demotions, "
+              f"{r['swapped_pages_per_sweep']:.0f} pages swapped/sweep)")
+    print(f"-> demotion {pr[1]['speedup_vs_serialized']:.2f}x problems/s "
+          f"of serialized admission on the same pool (working-set "
+          f"reservations + victim swap-out instead of OutOfPages)")
 
     sp = {(r["method"], r["path"]): r for r in out["rows"]}
     for method in ["rebase", "ets"]:

@@ -6,14 +6,20 @@
 Compares a fresh ``BENCH_table2.json`` (written by
 ``benchmarks/run.py --only table2 --smoke``) against the committed copy
 snapshotted before the run.  Every decode row is matched on
-(method, path) and every prefill/sweep row on (path); the check fails
-when a
+(method, path) and every prefill/sweep/pressure row on (path); the
+check fails when a
 fresh ``tok_per_s`` drops below ``committed / max_ratio`` (default 2x —
 generous because CI machines are noisy; the point is catching
 order-of-magnitude orchestration regressions, not 10% jitter).  Smoke
 rows are tiny and the serial ones especially jittery, so the check runs
 in the non-blocking slow job: a red trend is a prompt to look at the
 uploaded artifact, not a merge gate.
+
+Large *improvements* (fresh > committed x max_ratio) are flagged too —
+as non-failing baseline-staleness warnings: a faster runner or an
+orchestration win that big means the committed ``BENCH_table2.json``
+no longer describes the stack and should be regenerated, or every
+future comparison runs against a stale floor.
 
 Rows present on only one side are reported but don't fail the check, so
 adding a new mode in a PR doesn't require regenerating history first.
@@ -28,10 +34,10 @@ def _index(rows, keys):
 
 
 def _compare(section, committed_rows, fresh_rows, keys, max_ratio):
-    """Returns a list of failure strings for one section."""
+    """Returns (failures, stale) label lists for one section."""
     base = _index(committed_rows, keys)
     cur = _index(fresh_rows, keys)
-    failures = []
+    failures, stale = [], []
     for key, old in sorted(base.items()):
         new = cur.get(key)
         label = f"{section} {'/'.join(str(k) for k in key)}"
@@ -40,6 +46,9 @@ def _compare(section, committed_rows, fresh_rows, keys, max_ratio):
             continue
         ratio = old["tok_per_s"] / max(new["tok_per_s"], 1e-9)
         status = "FAIL" if ratio > max_ratio else "ok"
+        if ratio < 1 / max_ratio:
+            status = "STALE?"
+            stale.append(label)
         print(f"[trend] {label}: {old['tok_per_s']:.1f} -> "
               f"{new['tok_per_s']:.1f} tok/s ({ratio:.2f}x slower) "
               f"[{status}]")
@@ -48,7 +57,7 @@ def _compare(section, committed_rows, fresh_rows, keys, max_ratio):
     for key in sorted(set(cur) - set(base)):
         print(f"[trend] {section} {'/'.join(str(k) for k in key)}: "
               f"new row (no baseline)")
-    return failures
+    return failures, stale
 
 
 def main() -> None:
@@ -70,15 +79,24 @@ def main() -> None:
               f"(committed smoke={committed.get('smoke')} "
               f"fast={committed.get('fast')}, fresh "
               f"smoke={fresh.get('smoke')} fast={fresh.get('fast')})")
-    failures = _compare("decode", committed.get("rows", []),
-                        fresh.get("rows", []), ("method", "path"),
+    failures, stale = [], []
+    for section, keys in (("decode", ("method", "path")),
+                          ("prefill", ("path",)),
+                          ("sweep", ("path",)),
+                          ("pressure", ("path",))):
+        committed_rows = committed.get("rows" if section == "decode"
+                                       else section, [])
+        fresh_rows = fresh.get("rows" if section == "decode"
+                               else section, [])
+        f, s = _compare(section, committed_rows, fresh_rows, keys,
                         args.max_ratio)
-    failures += _compare("prefill", committed.get("prefill", []),
-                         fresh.get("prefill", []), ("path",),
-                         args.max_ratio)
-    failures += _compare("sweep", committed.get("sweep", []),
-                         fresh.get("sweep", []), ("path",),
-                         args.max_ratio)
+        failures += f
+        stale += s
+    if stale:
+        print(f"[trend] WARNING: {len(stale)} row(s) improved beyond "
+              f"{args.max_ratio}x — the committed baseline looks stale; "
+              f"regenerate BENCH_table2.json "
+              f"({', '.join(stale)})")
     if failures:
         print(f"[trend] FAILED: >{args.max_ratio}x tok/s regression in "
               f"{len(failures)} row(s): {', '.join(failures)}")

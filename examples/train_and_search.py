@@ -23,8 +23,8 @@ from repro.models.model import build_model
 from repro.serving.engine import EngineConfig, PagedEngine
 from repro.serving.search_backend import BackendConfig, LMBackend
 from repro.training import TrainConfig, train_lm, train_prm
-from repro.training.task import (ArithmeticTask, CHAR_TO_ID, EOS, NEWLINE,
-                                 VOCAB_SIZE, decode, encode)
+from repro.training.task import (ArithmeticTask, EOS, NEWLINE, VOCAB_SIZE,
+                                 encode)
 
 
 def build_models(train_steps: int, batch: int):

@@ -7,9 +7,7 @@ importing them never touches device state.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------

@@ -332,14 +332,22 @@ class SearchState:
         self._open: List[int] = []
         self._rewards: List[float] = []
 
+    @property
+    def exhausted(self) -> bool:
+        """True when the next ``demand()`` will end the search (no step
+        budget, no width, or no live leaves left).  Lets a scheduler
+        retire the problem instead of, say, paying swap traffic for
+        pages that retirement frees outright."""
+        return self.finished or not (self.steps < self.scfg.max_steps
+                                     and self.N > 0 and self.live)
+
     # -- phases --------------------------------------------------------
     def demand(self) -> Optional[List[Tuple[int, int]]]:
         """Continuation demand for the next step, or None when done."""
         if self.finished:
             return None
         assert self.phase == "demand", self.phase
-        if not (self.steps < self.scfg.max_steps and self.N > 0
-                and self.live):
+        if self.exhausted:
             self._finish()
             return None
         self.steps += 1
@@ -526,6 +534,13 @@ class SweepStats:
     global_steps: int = 0
     admission_waves: int = 0
     deferred_admissions: int = 0
+    # memory-pressure accounting (engine backends with swap support):
+    # problems demoted to the host spill buffer / resumed from it, and
+    # the largest page sum ever reserved by concurrently-admitted
+    # problems (the admission-control invariant: never exceeds the pool)
+    demotions: int = 0
+    resumes: int = 0
+    max_reserved_pages: int = 0
     # per global step: live problems and total branch demand they posted
     problems_per_step: List[int] = field(default_factory=list)
     demand_per_step: List[int] = field(default_factory=list)
@@ -537,11 +552,50 @@ class SweepStats:
         return sum(self.demand_per_step) / len(self.demand_per_step)
 
 
+class WorkingSetEstimator:
+    """Online per-problem KV working-set estimate, in pages.
+
+    A problem's reservation at admission is ``prompt pages + expected
+    search growth``.  A priori the growth bound is ``width x worst-case
+    step pages`` (every branch of a full-width step allocating its
+    maximum); that is safe but pessimistic — ETS's whole point is that
+    pruning keeps the retained set far smaller.  Every retired problem
+    feeds its *realized* peak growth back here, and subsequent
+    admissions reserve the observed mean plus a safety margin instead,
+    clamped to ``[one step's pages, the a-priori bound]``.  Admission
+    can therefore tighten over a sweep while demotion (the scheduler's
+    pressure valve) guards the tail where a problem outgrows its
+    refined estimate.
+    """
+
+    def __init__(self, margin: float = 1.25):
+        self.margin = margin
+        self._growths: List[int] = []
+
+    def note(self, growth_pages: int) -> None:
+        """Record one retired problem's realized peak growth (pages
+        beyond its prompt)."""
+        self._growths.append(max(int(growth_pages), 0))
+
+    def growth(self, width: int, step_pages: int) -> int:
+        """Expected search growth (pages beyond the prompt) for a new
+        problem of the given width."""
+        cap = max(width, 1) * step_pages
+        if not self._growths:
+            return cap
+        obs = math.ceil(sum(self._growths) / len(self._growths)
+                        * self.margin)
+        return max(step_pages, min(cap, obs))
+
+
 class SweepScheduler:
     """Drive many searches in lock-step on one shared backend.
 
     Each global step:
 
+      0. (engine backends) resumes demoted problems whose pages fit
+         again, and demotes fresh victims when the live set's next step
+         would overflow the KV pool (memory pressure, below);
       1. admits queued problems (one batched ``start_many`` flash-prefill
          stream per wave) while the live set has room — and, for engine
          backends, re-queues the wave when the KV pool is full, retrying
@@ -556,6 +610,21 @@ class SweepScheduler:
       5. retires problems the moment they finish — ``result()`` is
          captured and the backend's ``finish_problem`` releases their
          engine sequences — without stalling the remaining problems.
+
+    Memory pressure (backends implementing the page-accounting/swap
+    protocol — see ``serving/search_backend.py``): admission reserves a
+    per-problem working set (prompt pages + expected search growth,
+    refined online by :class:`WorkingSetEstimator` from retired
+    problems' realized page traces) and only admits waves whose
+    reservations fit the unreserved pool.  When the live set's next
+    step would still overflow (a problem outgrew its estimate), the
+    scheduler *demotes* a victim — lowest best-leaf PRM score, ties
+    toward most pages held — swapping its pages out to the engine's
+    host spill buffer and parking its state; parked problems swap back
+    in bit-identically once retirements free room.  Demotion only
+    delays *when* a problem steps, which per-problem RNG chains make
+    invisible, so a pressured sweep still reproduces unpressured serial
+    runs exactly.
 
     Per-problem behavior is bit-identical to driving each state solo:
     the scheduler only interleaves *when* stages run, never what any
@@ -581,8 +650,27 @@ class SweepScheduler:
             else max(self._n, 1)
         assert self.max_live >= 1, max_live
         self.live: Dict[int, SearchState] = {}
+        # demoted problems: swapped out of the pool, posting no demand
+        # until pressure relents and they swap back in
+        self.parked: Dict[int, SearchState] = {}
         self.results: Dict[int, SearchResult] = {}
         self.stats = SweepStats()
+        # memory-pressure management is on when the backend implements
+        # the page-accounting/swap protocol (LMBackend with a real
+        # engine); capacity() returning None (engine doubles) or a
+        # trees-based sweep (no prompts to estimate) turns it off.
+        self._mem = False
+        if self._from_prompts:
+            cap_fn = getattr(backend, "capacity", None)
+            self._mem = (cap_fn is not None and cap_fn() is not None
+                         and all(hasattr(backend, m) for m in (
+                             "prompt_pages", "step_pages_per_branch",
+                             "problem_pages", "problem_swapped_pages",
+                             "swap_out_problem", "swap_in_problem")))
+        self.estimator = WorkingSetEstimator()
+        self._reserved: Dict[int, int] = {}      # idx -> admission pages
+        self._prompt_pages: Dict[int, int] = {}
+        self._peak: Dict[int, int] = {}          # idx -> peak phys pages
 
     # -- admission -----------------------------------------------------
     def _start_trees(self, prompts: Sequence[Sequence[int]]
@@ -607,11 +695,164 @@ class SweepScheduler:
             raise
         return trees
 
+    # -- memory pressure ----------------------------------------------
+    def _held_pages(self, st: SearchState) -> int:
+        """Pages a problem currently occupies (live + spilled)."""
+        return (self.backend.problem_pages(st.tree)
+                + self.backend.problem_swapped_pages(st.tree))
+
+    def _committed_pages(self) -> int:
+        """Pages the admitted problems are entitled to: each counts at
+        its admission reservation, or its current holding when it has
+        outgrown the (online-refined) estimate."""
+        total = 0
+        for idx, st in list(self.live.items()) + list(self.parked.items()):
+            total += max(self._reserved.get(idx, 0), self._held_pages(st))
+        return total
+
+    def _step_need(self, st: SearchState) -> int:
+        """Worst-case pages one problem's next step allocates."""
+        per_branch = self.backend.step_pages_per_branch()
+        return sum(n for n in st.live.values() if n > 0) * per_branch
+
+    def _best_reward(self, st: SearchState) -> float:
+        """Demotion priority: the problem's best live-leaf PRM score."""
+        rewards = [st.tree.node(leaf).reward for leaf in st.live]
+        return max(rewards) if rewards else 0.0
+
+    def _update_peaks(self) -> None:
+        for idx, st in self.live.items():
+            held = self.backend.problem_pages(st.tree)
+            if held > self._peak.get(idx, 0):
+                self._peak[idx] = held
+
+    def _park(self, idx: int) -> None:
+        """Demote one problem: spill its pages and stop stepping it.
+
+        Parking is invisible to the search itself — the problem simply
+        posts no demand for a few global steps, and per-problem RNG
+        chains make step timing irrelevant to its sampled streams — so
+        the sweep stays bit-identical to unpressured serial runs.
+        """
+        st = self.live.pop(idx)
+        self.backend.swap_out_problem(st.tree)
+        self.parked[idx] = st
+        self.stats.demotions += 1
+
+    def _handle_pressure(self) -> None:
+        """Demote victims until the live set's next step fits the pool.
+
+        Victim policy: lowest best-leaf PRM score first (the trajectory
+        the cost model values least), breaking ties toward the problem
+        holding the most pages (frees the most room per demotion).  At
+        least one problem always stays live, so the sweep makes
+        progress and parked problems eventually resume.
+        """
+        while len(self.live) > 1:
+            free = self.backend.capacity()["free_pages"]
+            need = sum(self._step_need(st) for st in self.live.values())
+            if need <= free:
+                return
+            # retire exhausted problems before picking a swap victim:
+            # their pages free outright, no spill traffic needed (the
+            # demand phase would retire them this same global step)
+            done = [i for i in self.live if self.live[i].exhausted]
+            if done:
+                for i in done:
+                    lc = self.live[i].demand()   # flips the state to
+                    assert lc is None            # finished; never a step
+                    self._retire(i)
+                continue
+            victim = min(self.live, key=lambda i: (
+                self._best_reward(self.live[i]),
+                -self._held_pages(self.live[i]), i))
+            self._park(victim)
+
+    def _resume_parked(self) -> None:
+        """Swap parked problems back in as pages free up.
+
+        A problem resumes only when its spilled pages plus one step's
+        growth fit the free pool *on top of* the live set's own step
+        need — the same feasibility metric admission and the pressure
+        check use, so a freshly resumed problem is never immediately
+        re-parked (no swap thrash).  When nothing is live the first
+        parked problem is forced back in regardless (its spill can
+        always be re-seated in an otherwise-empty pool), so the sweep
+        can never wedge with every problem parked.
+        """
+        for idx in sorted(self.parked):
+            st = self.parked[idx]
+            free = self.backend.capacity()["free_pages"]
+            live_need = sum(self._step_need(s)
+                            for s in self.live.values())
+            need = (self.backend.problem_swapped_pages(st.tree)
+                    + self._step_need(st) + live_need)
+            if need > free and self.live:
+                continue
+            try:
+                self.backend.swap_in_problem(st.tree)
+            except RuntimeError as e:
+                if type(e).__name__ != "OutOfPages":
+                    raise
+                if not self.live:
+                    raise       # nothing in flight can free pages
+                continue
+            del self.parked[idx]
+            self.live[idx] = st
+            self.stats.resumes += 1
+
+    # -- admission -----------------------------------------------------
+    def _reserve_wave(self, wave: List[Tuple[int, Any]]
+                      ) -> List[Tuple[int, int, int]]:
+        """Working-set admission control: trim ``wave`` to the longest
+        prefix whose reservations fit the unreserved pool.
+
+        Each problem reserves ``prompt pages + expected search growth``
+        (the estimator refines the growth term online from retired
+        problems' realized page traces).  A candidate must ALSO fit the
+        immediate-step budget — its prompt plus a worst-case first step
+        (``width x step pages``) on top of the live set's own step
+        need — the same metric the pressure check enforces, so a wave
+        is never admitted just to be demoted in the same global step.
+        Returns ``(idx, prompt_pages, reservation)`` per admitted
+        problem; an empty list defers the wave.  When nothing is live
+        or parked the first problem is admitted even if its estimate
+        exceeds the pool — a genuinely oversized problem then surfaces
+        the allocator error exactly as a solo run would, instead of
+        deadlocking the queue.
+        """
+        cap = self.backend.capacity()
+        avail = cap["total_pages"] - self._committed_pages()
+        step_pages = self.backend.step_pages_per_branch()
+        first_need = max(self.scfg.width, 1) * step_pages
+        budget = cap["free_pages"] - sum(self._step_need(st)
+                                         for st in self.live.values())
+        out: List[Tuple[int, int, int]] = []
+        for idx, item in wave:
+            pp = self.backend.prompt_pages(item)
+            est = min(pp + self.estimator.growth(self.scfg.width,
+                                                 step_pages),
+                      cap["total_pages"])
+            if (est > avail or pp + first_need > budget) \
+                    and (out or self.live or self.parked):
+                break
+            out.append((idx, pp, est))
+            avail -= est
+            budget -= pp + first_need
+        return out
+
     def _admit(self) -> None:
-        room = self.max_live - len(self.live)
+        room = self.max_live - len(self.live) - len(self.parked)
         if room <= 0 or not self._queue:
             return
         wave = self._queue[:room]
+        reservations: List[Tuple[int, int, int]] = []
+        if self._mem:
+            reservations = self._reserve_wave(wave)
+            if not reservations:
+                self.stats.deferred_admissions += 1
+                return             # retry after the next retirement
+            wave = wave[:len(reservations)]
         if self._from_prompts:
             # engine OutOfPages (pool full): halve the wave until a
             # prefix fits — start_many is all-or-nothing, so failed
@@ -632,7 +873,7 @@ class SweepScheduler:
                         break
                     wave = wave[:len(wave) // 2]
             if trees is None:
-                if not self.live:
+                if not self.live and not self.parked:
                     raise err      # nothing in flight can free pages
                 self.stats.deferred_admissions += 1
                 return             # retry after the next retirement
@@ -642,11 +883,28 @@ class SweepScheduler:
         self.stats.admission_waves += 1
         for (idx, _), tree in zip(wave, trees):
             self.live[idx] = SearchState(self.backend, self.scfg, tree=tree)
+        # book the admitted problems' reservations (the halving loop may
+        # have admitted a shorter prefix than _reserve_wave cleared)
+        for idx, pp, est in reservations[:len(wave)]:
+            self._reserved[idx] = est
+            self._prompt_pages[idx] = pp
+            self._peak[idx] = pp
+        if self._mem:
+            self.stats.max_reserved_pages = max(
+                self.stats.max_reserved_pages,
+                sum(self._reserved.values()))
 
     # -- retirement ----------------------------------------------------
     def _retire(self, idx: int) -> None:
         st = self.live.pop(idx)
         self.results[idx] = st.result()
+        if self._mem and idx in self._peak:
+            # feed the realized page trace back into admission control
+            self.estimator.note(self._peak[idx]
+                                - self._prompt_pages.get(idx, 0))
+        self._reserved.pop(idx, None)
+        self._prompt_pages.pop(idx, None)
+        self._peak.pop(idx, None)
         fin = getattr(self.backend, "finish_problem", None)
         if fin is not None:
             fin(st.tree)
@@ -655,8 +913,14 @@ class SweepScheduler:
     def step(self) -> bool:
         """Advance every live problem by one search step.
 
-        Returns True while there is work left (live or queued)."""
+        Returns True while there is work left (live, parked or
+        queued)."""
+        if self._mem:
+            self._resume_parked()
         self._admit()
+        if self._mem:
+            self._update_peaks()
+            self._handle_pressure()
         # 1. demand: retire problems that have nothing left to do
         reqs: List[Tuple[SearchTree, List[Tuple[int, int]]]] = []
         states: List[Tuple[int, SearchState]] = []
@@ -669,13 +933,19 @@ class SweepScheduler:
             reqs.append((st.tree, lc))
             states.append((idx, st))
         if not reqs:
-            return bool(self.live or self._queue)
+            return bool(self.live or self.parked or self._queue)
         self.stats.global_steps += 1
         self.stats.problems_per_step.append(len(reqs))
         self.stats.demand_per_step.append(
             sum(n for _, lc in reqs for _, n in lc))
         # 2. ONE expansion stream over every problem's branches
         kid_groups = _expand_multi(self.backend, reqs)
+        if self._mem:
+            # sample the *post-expand* page usage: this is the step's
+            # true peak (every new branch still holds its pages; the
+            # retention policy only frees at complete_step), and it is
+            # what the admission estimator must learn from
+            self._update_peaks()
         score_reqs, score_states = [], []
         for (idx, st), kids in zip(states, kid_groups):
             to_score = st.note_children(kids)
@@ -685,7 +955,7 @@ class SweepScheduler:
             score_reqs.append((st.tree, to_score))
             score_states.append((idx, st))
         if not score_reqs:
-            return bool(self.live or self._queue)
+            return bool(self.live or self.parked or self._queue)
         # 3. ONE padded PRM call over every problem's candidates
         score_groups = _score_multi(self.backend, score_reqs)
         embed_reqs, embed_states = [], []
@@ -705,7 +975,7 @@ class SweepScheduler:
                                        _embed_multi(self.backend,
                                                     embed_reqs)):
                 st.complete_step(embs)
-        return bool(self.live or self._queue)
+        return bool(self.live or self.parked or self._queue)
 
     def run(self) -> List[SearchResult]:
         while self.step():
@@ -736,14 +1006,16 @@ def run_search_many(backend, scfg: SearchConfig,
     backends that cannot interleave problems.
 
     Capacity: ``max_live`` bounds how many problems hold pool pages at
-    once (default: all).  Admission is *prefill*-guarded: a wave whose
-    prompts would overflow the pool is deferred and retried as searches
-    finish, so sweeps with more prompts than the pool holds need no
-    manual chunking.  The admitted problems' decode working sets are
-    not reserved, though — a pool too small for ``max_live`` concurrent
-    searches (prompt + ``width`` branches each) can still raise
-    ``OutOfPages`` mid-step; bound ``max_live`` to what the pool can
-    hold (working-set-aware admission is a ROADMAP open item).
+    once (default: all).  On engine backends admission is working-set
+    aware: each problem reserves prompt pages plus an expected search
+    growth (refined online from realized page traces) and a wave only
+    enters when its reservations fit, so a pool too small for the whole
+    sweep needs no manual chunking or ``max_live`` tuning.  If a
+    problem outgrows its estimate mid-search the scheduler demotes a
+    victim (pages swap out to a host spill buffer, the problem parks,
+    then resumes bit-identically) instead of raising ``OutOfPages`` —
+    only a single problem genuinely exceeding the pool still errors,
+    exactly as a solo run would.
     """
     if not prompts:
         return []

@@ -25,9 +25,8 @@ are flat, runtime is not" observation.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 
 @dataclass
@@ -68,7 +67,6 @@ def simulate_search_cost(kv_trace: Sequence[Dict[str, float]],
     frags = []
     kv_capacity = hw.capacity_frac * hw.hbm_bytes - hw.model_bytes
     for step in kv_trace:
-        n_leaves = max(step["n_leaves"], 1)
         shared_tokens = step["kv_tokens_shared"]
         unshared_tokens = step["kv_tokens_unshared"]
         resident_tokens = shared_tokens if tree_attention else unshared_tokens

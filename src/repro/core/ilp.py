@@ -19,9 +19,8 @@ world.  ``greedy_select`` is a host-side fallback with the same objective
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 

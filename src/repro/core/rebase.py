@@ -12,8 +12,7 @@ leaf i in the ILP (Eq. 2/4) and, re-normalized over the retained set S
 """
 from __future__ import annotations
 
-import math
-from typing import List, Sequence
+from typing import Sequence
 
 import numpy as np
 

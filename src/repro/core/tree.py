@@ -17,9 +17,8 @@ during the search process" metric (Table 1's "KV Red." denominator).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Set
+from typing import Any, Dict, List, Sequence, Set
 
 
 @dataclass

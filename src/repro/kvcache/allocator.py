@@ -41,6 +41,21 @@ roots — with page accounting attributable per problem
 partition the live pages and the per-ns counters sum to the global
 ones.
 
+Swap (page demotion under memory pressure): ``swap_out_seqs`` releases
+the physical pages of one whole namespace back to the free list while
+the handles keep their block tables as *stale* page ids — the spill
+keys the engine uses to file the evicted KV in its host-side buffer.
+A swapped handle is parked: it cannot append, branch, or serve a
+decode row until ``swap_in_seqs`` re-allocates fresh physical pages
+(any ids — consumers index the pool *through* the block tables, and
+the restored bytes are exact copies, so decode streams are unchanged),
+rewrites every table, and restores the refcounts.  Namespace closure
+(branching never crosses ``ns``) is what makes the whole-namespace
+swap safe: no sequence outside the set can reference the released
+pages.  ``self.swapped`` carries the per-ns stale-page refcounts —
+the per-problem swap accounting that the engine's ``swapped_out/in``
+counters reconcile against.
+
 ``tree_metadata`` derives the tree-attention operands for a decode step
 (unique live page list, per-page descendant bitmap over the padded
 batch, per-page valid lengths) from the live block tables.  Every
@@ -50,8 +65,7 @@ engine's per-layer attention calls reuse the same arrays.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 
@@ -61,6 +75,7 @@ class SequenceHandle:
     block_table: List[int]
     length: int                   # tokens written so far
     ns: int = 0                   # problem namespace (branch inherits)
+    swapped: bool = False         # pages demoted to the host spill buffer
 
     def last_page_fill(self, page_size: int) -> int:
         rem = self.length % page_size
@@ -92,6 +107,11 @@ class PageAllocator:
         # bumped on every mutation; keys the tree-metadata memo
         self.version = 0
         self._meta_cache: Optional[Tuple[tuple, object]] = None
+        # per-ns swap accounting: ns -> {stale page id: table references}.
+        # Stale ids are the physical ids the namespace held at swap-out
+        # time; they key the engine's host spill buffer and may be
+        # reused by other sequences while the namespace is parked.
+        self.swapped: Dict[int, Dict[int, int]] = {}
 
     # -- stats -----------------------------------------------------------
     @property
@@ -104,6 +124,11 @@ class PageAllocator:
 
     def shared_pages(self) -> int:
         return sum(1 for rc in self.refcount if rc > 1)
+
+    @property
+    def swapped_pages(self) -> int:
+        """Unique pages currently demoted to the host spill buffer."""
+        return sum(len(refs) for refs in self.swapped.values())
 
     # -- per-problem (namespace) attribution ------------------------------
     # A namespace groups the sequences of one search problem.  Branching
@@ -129,12 +154,14 @@ class PageAllocator:
         logical = 0
         for h in handles:
             assert h.ns == ns, (h.seq_id, h.ns, ns)
-            pages.update(h.block_table)
+            if not h.swapped:       # stale ids are not physical pages
+                pages.update(h.block_table)
             logical += len(h.block_table)
         return {"physical_pages": len(pages),
                 "logical_pages": logical,
                 "shared_pages": sum(1 for pg in pages
-                                    if self.refcount[pg] > 1)}
+                                    if self.refcount[pg] > 1),
+                "swapped_pages": len(self.swapped.get(ns, {}))}
 
     # -- internals ---------------------------------------------------------
     def _alloc_page(self) -> int:
@@ -197,6 +224,7 @@ class PageAllocator:
         """Reserve slots for n new tokens; may CoW the shared last page."""
         self.version += 1
         h = self.seqs[seq_id]
+        assert not h.swapped, (seq_id, "append on a swapped-out sequence")
         ops: List[CopyOp] = []
         # CoW: if the last page is shared and not full, privatize it first
         if h.block_table:
@@ -219,6 +247,7 @@ class PageAllocator:
         """Fork a sequence into n additional branches sharing its pages."""
         self.version += 1
         h = self.seqs[seq_id]
+        assert not h.swapped, (seq_id, "branch on a swapped-out sequence")
         out = []
         for _ in range(n_branches):
             for pg in h.block_table:
@@ -233,8 +262,95 @@ class PageAllocator:
     def free_seq(self, seq_id: int) -> None:
         self.version += 1
         h = self.seqs.pop(seq_id)
+        if h.swapped:
+            # no physical pages to release — trim the stale-page refs so
+            # the per-ns swap accounting tracks only referenced spill
+            # pages, and drop the namespace entry once its last swapped
+            # handle is gone (the engine then drops the spill buffer)
+            refs = self.swapped[h.ns]
+            for pg in h.block_table:
+                refs[pg] -= 1
+                assert refs[pg] >= 0, (h.ns, pg)
+                if refs[pg] == 0:
+                    del refs[pg]
+            if not any(s.swapped and s.ns == h.ns
+                       for s in self.seqs.values()):
+                del self.swapped[h.ns]
+            return
         for pg in h.block_table:
             self._release_page(pg)
+
+    # -- swap (page demotion under memory pressure) ------------------------
+    def swap_out_seqs(self, seq_ids: Sequence[int]) -> List[int]:
+        """Demote one whole namespace: release its physical pages.
+
+        ``seq_ids`` must be *all* live sequences of one namespace —
+        branching never crosses namespaces, so the set is closed under
+        page sharing and no other sequence can reference the released
+        pages.  The handles keep their block tables as stale page ids
+        (the engine's spill keys) and are marked ``swapped``; the
+        per-ns stale-page refcounts land in ``self.swapped``.  Returns
+        the unique released page ids, sorted (the order the engine
+        gathers them into the host buffer).
+        """
+        assert seq_ids, "empty swap set"
+        handles = [self.seqs[s] for s in seq_ids]
+        ns = handles[0].ns
+        assert all(h.ns == ns for h in handles), "swap set spans namespaces"
+        assert not any(h.swapped for h in handles), "already swapped"
+        assert ns not in self.swapped, (ns, "namespace already swapped")
+        covered = {h.seq_id for h in handles}
+        assert all(h.seq_id in covered
+                   for h in self.seqs.values() if h.ns == ns), \
+            "swap set must cover the whole namespace"
+        self.version += 1
+        refs: Dict[int, int] = {}
+        for h in handles:
+            for pg in h.block_table:
+                refs[pg] = refs.get(pg, 0) + 1
+            h.swapped = True
+        for pg, n in refs.items():
+            # namespace closure: every reference to the page is ours
+            assert self.refcount[pg] == n, (pg, self.refcount[pg], n)
+            self.refcount[pg] = 0
+            self.free.append(pg)
+        self.swapped[ns] = refs
+        return sorted(refs)
+
+    def swap_in_seqs(self, seq_ids: Sequence[int]) -> Dict[int, int]:
+        """Restore a swapped namespace onto fresh physical pages.
+
+        Allocates one page per live stale id (all-or-nothing — raises
+        ``OutOfPages`` before touching anything when the pool lacks
+        room), rewrites every handle's block table through the returned
+        ``{stale id: new id}`` mapping and restores refcounts.  The
+        engine scatters the host spill buffer into the new pages; the
+        bytes are exact copies, so decode streams resume bit-identically
+        (consumers index the pool through the block tables, never by
+        raw page id).
+        """
+        assert seq_ids, "empty swap set"
+        handles = [self.seqs[s] for s in seq_ids]
+        ns = handles[0].ns
+        assert all(h.ns == ns and h.swapped for h in handles), \
+            "swap-in set must be one swapped namespace"
+        covered = {h.seq_id for h in handles}
+        assert all(h.seq_id in covered for h in self.seqs.values()
+                   if h.ns == ns and h.swapped), \
+            "swap-in set must cover the whole namespace"
+        refs = self.swapped[ns]
+        if len(refs) > len(self.free):
+            raise OutOfPages(
+                f"swap-in needs {len(refs)} pages, {len(self.free)} free")
+        self.version += 1
+        mapping = {old: self._alloc_page() for old in sorted(refs)}
+        for old, new in mapping.items():
+            self.refcount[new] = refs[old]
+        for h in handles:
+            h.block_table = [mapping[pg] for pg in h.block_table]
+            h.swapped = False
+        del self.swapped[ns]
+        return mapping
 
     # -- tree-attention metadata -------------------------------------------
     def tree_metadata(self, seq_ids_by_row: Sequence[Optional[int]], *,
@@ -271,13 +387,23 @@ class PageAllocator:
     # -- invariants (tests) ------------------------------------------------
     def check_invariants(self) -> None:
         counts = [0] * self.n_pages
+        swapped_refs: Dict[int, Dict[int, int]] = {}
         for s in self.seqs.values():
             need = -(-s.length // self.page_size) if s.length else 0
             assert len(s.block_table) >= need, (s.seq_id, s.length,
                                                 len(s.block_table))
+            if s.swapped:
+                # stale ids: counted against the per-ns swap accounting,
+                # never against live refcounts
+                refs = swapped_refs.setdefault(s.ns, {})
+                for pg in s.block_table:
+                    refs[pg] = refs.get(pg, 0) + 1
+                continue
             for pg in s.block_table:
                 counts[pg] += 1
         assert counts == self.refcount, "refcount mismatch"
         free_set = set(self.free)
         for pg, rc in enumerate(self.refcount):
             assert (rc == 0) == (pg in free_set), (pg, rc)
+        # swap accounting reconciles with the swapped handles' tables
+        assert swapped_refs == self.swapped, "swap accounting mismatch"

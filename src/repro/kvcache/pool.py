@@ -4,18 +4,43 @@ Layout: ``k, v: (n_layers, n_pages, page_size, n_kv_heads, head_dim)``.
 Static shapes throughout — block tables arrive as padded int32 arrays
 (-1 = empty), so every op jits once and reuses.
 
+Swap path (page demotion): ``gather_pages`` copies a set of pages to
+host memory and ``scatter_pages`` writes host copies back into (any)
+pool pages — the device half of the engine's swap-out / swap-in.  The
+page axis is padded to a power of two before the jitted transfer, so a
+serving run compiles O(log n_pages) swap signatures, matching the
+recompile discipline of every other host-built axis.
+
 The pure-jnp gather path here is also the oracle for the Pallas
 ``paged_attention`` kernel (kernels/ref.py builds on it).
 """
 from __future__ import annotations
 
 import functools
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .allocator import CopyOp
+
+
+def pow2_bucket(n: int, lo: int = 8) -> int:
+    """Smallest power-of-two >= n (at least ``lo``) — the padding bucket.
+
+    The canonical bucketing primitive behind the serving-wide recompile
+    discipline: every host-built axis that varies across calls (prefill
+    token/row counts, PRM batch/length, tree-step page counts, swap
+    transfers) is padded to one of these buckets before it reaches a
+    jitted function, bounding the jit-signature count at O(log max_size)
+    instead of O(distinct sizes).  ``serving/engine.py`` re-exports it
+    for the engine-side callers.
+    """
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
 
 class KVPool:
@@ -50,6 +75,45 @@ class KVPool:
         self.k = _copy_pages(self.k, src, dst)
         self.v = _copy_pages(self.v, src, dst)
 
+    # -- swap (device half of page demotion) ---------------------------
+    def gather_pages(self, pages: Sequence[int]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Copy the given pages to host: (L, n, S, K, hd) K and V.
+
+        The page axis is padded to a power of two (padding gathers page
+        0 and is sliced off on the host), so swap traffic costs
+        O(log n_pages) jit signatures over a run.
+        """
+        n = len(pages)
+        idx = np.zeros(pow2_bucket(max(n, 1)), np.int32)
+        idx[:n] = pages
+        k, v = _gather_pages(self.k, self.v, jnp.asarray(idx))
+        # materialize the slices: a view would pin the pow2-padded base
+        # arrays in host memory for as long as the spill entry lives
+        return (np.ascontiguousarray(np.asarray(k)[:, :n]),
+                np.ascontiguousarray(np.asarray(v)[:, :n]))
+
+    def scatter_pages(self, pages: Sequence[int], host_k: np.ndarray,
+                      host_v: np.ndarray, *, dump_page: int = 0) -> None:
+        """Write host page copies back into the pool at ``pages``.
+
+        Padding targets ``dump_page`` (a write-only page never read by
+        a valid query) with zeros, so the padded jitted scatter is
+        inert beyond the real entries.
+        """
+        n = len(pages)
+        if n == 0:
+            return
+        assert host_k.shape[1] == n and host_v.shape[1] == n, \
+            (host_k.shape, host_v.shape, n)
+        P = pow2_bucket(n)
+        idx = np.full(P, dump_page, np.int32)
+        idx[:n] = pages
+        pad = ((0, 0), (0, P - n)) + ((0, 0),) * (host_k.ndim - 2)
+        self.k, self.v = _scatter_pages(
+            self.k, self.v, jnp.asarray(idx),
+            jnp.asarray(np.pad(host_k, pad)), jnp.asarray(np.pad(host_v, pad)))
+
     def gather_kv(self, layer: int, block_table, length: int):
         """Materialize a contiguous (length, K, hd) view (oracle/tests)."""
         pages = self.k.shape[1]
@@ -71,6 +135,17 @@ def _write(pool, new_kv, pages, slots):
 @jax.jit
 def _copy_pages(pool, src, dst):
     return pool.at[:, dst].set(pool[:, src])
+
+
+@jax.jit
+def _gather_pages(pool_k, pool_v, idx):
+    return pool_k[:, idx], pool_v[:, idx]
+
+
+@jax.jit
+def _scatter_pages(pool_k, pool_v, idx, vals_k, vals_v):
+    return (pool_k.at[:, idx].set(vals_k.astype(pool_k.dtype)),
+            pool_v.at[:, idx].set(vals_v.astype(pool_v.dtype)))
 
 
 # ---------------------------------------------------------------------------

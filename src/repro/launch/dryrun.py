@@ -23,10 +23,9 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.analysis.roofline import analyze_compiled
-from repro.configs import get_config, get_shape, INPUT_SHAPES
+from repro.configs import get_config, get_shape
 from repro.launch.mesh import make_production_mesh
 from repro.launch.sharding import (batch_shardings, cache_shardings,
                                    opt_shardings, param_shardings)

@@ -18,10 +18,9 @@ fallbacks are visible in EXPERIMENTS.md).
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, List, Optional, Tuple
+from typing import List, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 
@@ -94,7 +93,6 @@ _MOE_FALLBACK = {
 
 def param_spec(mesh, path: str, shape: Tuple[int, ...], *,
                train: bool) -> P:
-    data_ax = "data" if train else None
     for pat, base_rank, spec in _PARAM_RULES:
         if re.search(pat, path):
             lead = len(shape) - base_rank

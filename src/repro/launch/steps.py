@@ -18,17 +18,14 @@ Skip policy (documented in DESIGN.md):
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import InputShape, ModelConfig, get_shape
+from repro.configs import InputShape, ModelConfig
 from repro.models.model import LM
-from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
-from repro.training.train import prm_loss_fn
+from repro.training.optimizer import AdamWConfig, adamw_update
 
 
 # ---------------------------------------------------------------------------

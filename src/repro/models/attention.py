@@ -14,7 +14,7 @@ The einsum math here is also the oracle for the Pallas kernels in
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,8 +6,7 @@ Pure functional style: params are nested dicts of jnp arrays; every layer is
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

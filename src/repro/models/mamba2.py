@@ -93,7 +93,6 @@ def _conv_full(p, xBC, conv_state):
 def _conv_step(p, xBC_t, conv_state):
     """One-token conv.  xBC_t: (B, C)."""
     w = p["conv_w"].astype(xBC_t.dtype)
-    K = w.shape[0]
     ext = jnp.concatenate([conv_state.astype(xBC_t.dtype),
                            xBC_t[:, None]], axis=1)     # (B, K, C)
     out = (ext * w[None]).sum(axis=1) + p["conv_b"].astype(xBC_t.dtype)

@@ -30,9 +30,7 @@ projector maps to d_model.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

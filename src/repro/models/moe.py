@@ -319,7 +319,6 @@ def moe_apply_expert_parallel(p, x, cfg, *, capacity: int = 0):
     S, d = x.shape
     E, k = m.n_experts, m.top_k
     msize = MESH.shape["model"]
-    E_local = E // msize
     G = N_GROUPS if S % max(N_GROUPS, 1) == 0 else 1
     # tokens are split over BOTH data and model ranks before dispatch —
     # otherwise every model rank of a data row dispatches the same tokens

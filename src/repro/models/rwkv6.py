@@ -187,7 +187,6 @@ def rwkv_apply_full(p, x, cfg, state=None) -> Tuple[jnp.ndarray, dict]:
 def rwkv_decode_step(p, x, cfg, state) -> Tuple[jnp.ndarray, dict]:
     """x: (B,1,d) -> (y (B,1,d), new state)."""
     H, hd = _dims(cfg)
-    B = x.shape[0]
     x_shift = state["x_prev"][:, 0:1].astype(x.dtype)
     r, k, v, g, logw = _proj(p, x, x_shift, cfg)
     r32, k32, v32 = (a[:, 0].astype(jnp.float32) for a in (r, k, v))

@@ -11,7 +11,15 @@ what PRM tree search actually needs (step-level expand -> score -> prune):
   * ``decode(seq_ids, …)``— ONE jitted step decodes all live branches in
     lock-step against the pool via block tables;
   * free / stats          — physical vs logical page accounting (the
-    engine-level measurement behind Table 1's KV reduction).
+    engine-level measurement behind Table 1's KV reduction);
+  * ``swap_out(seq_ids)`` / ``swap_in(seq_ids)`` — page demotion under
+    memory pressure: one problem's unique pages are gathered to a
+    host-side spill buffer and released (immediately reusable by other
+    problems), then later restored onto fresh physical pages as exact
+    copies — decode streams resume bit-identically because every
+    consumer reads the pool through block tables, never raw page ids.
+    The ``swapped_out_pages`` / ``swapped_in_pages`` counters reconcile
+    against the allocator's per-ns swap accounting.
 
 Pending-token invariant (the contract between prefill, branch and
 decode): after ``prefill(tokens)`` the pool holds KV for
@@ -81,7 +89,6 @@ dense llama-style models); MoE/SSM serving goes through the unified
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -91,6 +98,9 @@ import numpy as np
 
 from repro.kvcache import KVPool, PageAllocator
 from repro.kvcache.pool import paged_attention_ref
+# the canonical bucketing primitive lives with the pool (kvcache may
+# not import serving); re-exported here for the engine-side callers
+from repro.kvcache.pool import pow2_bucket  # noqa: F401  (re-export)
 from repro.kernels.ref import tree_attention_ref
 from repro.models.layers import mlp_apply, rms_norm
 from repro.models.layers import apply_rope, rope_angles
@@ -99,21 +109,6 @@ from repro.models.layers import apply_rope, rope_angles
 # One jitted split per decode iteration advances every row's key chain
 # in lock-step (rows are independent: chain position == live iterations).
 _split_rows = jax.jit(jax.vmap(lambda k: jax.random.split(k, 2)))
-
-
-def pow2_bucket(n: int, lo: int = 8) -> int:
-    """Smallest power-of-two >= n (at least ``lo``) — the padding bucket.
-
-    The serving-wide recompile discipline: every host-built axis that
-    varies across calls (prefill token/row counts, PRM batch/length,
-    tree-step page counts) is padded to one of these buckets before it
-    reaches a jitted function, bounding the jit-signature count at
-    O(log max_size) instead of O(distinct sizes).
-    """
-    b = lo
-    while b < n:
-        b *= 2
-    return b
 
 
 @dataclass
@@ -160,6 +155,19 @@ class PagedEngine:
         # tokens ingested by them (benchmarks/table2 prefill tok/s)
         self.n_prefill_calls = 0
         self.n_prefill_tokens = 0
+        # swap accounting (page demotion under memory pressure): pages
+        # moved device->host (swap-out) and host->device (swap-in), and
+        # the demotion calls that moved them.  Reconciles with the
+        # allocator's per-ns ``swapped`` accounting: pages out minus
+        # pages dropped while parked minus pages in == pages still in
+        # the spill buffer.
+        self.swapped_out_pages = 0
+        self.swapped_in_pages = 0
+        self.n_swap_outs = 0
+        self.n_swap_ins = 0
+        # ns -> (stale page ids, host K, host V): the spill buffer a
+        # demoted problem's pages wait in until swap-in restores them
+        self._spill: Dict[int, Tuple[List[int], np.ndarray, np.ndarray]] = {}
         # per-step attention IO accounting: pages the attention actually
         # streams (unique — tree mode dedups shared prefixes) vs the
         # per-leaf total a paged read pattern costs.  logical/unique is
@@ -190,6 +198,7 @@ class PagedEngine:
             "physical_pages": self.alloc.used_pages,
             "logical_pages": self.alloc.logical_pages,
             "shared_pages": self.alloc.shared_pages(),
+            "swapped_pages": self.alloc.swapped_pages,
             # cumulative attention-IO counters (callers diff successive
             # samples for per-step deltas)
             "unique_pages_streamed": self.unique_pages_streamed,
@@ -432,8 +441,73 @@ class PagedEngine:
         return [b.seq_id for b in handles]
 
     def free(self, seq_id: int) -> None:
+        h = self.alloc.seqs.get(seq_id)
+        ns = h.ns if h is not None else None
+        was_swapped = h.swapped if h is not None else False
         self.alloc.free_seq(seq_id)
         self.tokens.pop(seq_id, None)
+        # last swapped sequence of a parked namespace gone -> its spill
+        # buffer can never be swapped back in; drop the host copy
+        if was_swapped and ns not in self.alloc.swapped:
+            self._spill.pop(ns, None)
+
+    # ------------------------------------------------------------------
+    # Swap: page demotion to a host-side spill buffer (memory pressure)
+    # ------------------------------------------------------------------
+    def swap_out(self, seq_ids: Sequence[int]) -> int:
+        """Demote one problem: spill its unique pages to host, free them.
+
+        ``seq_ids`` must be every live sequence of one namespace (the
+        sweep scheduler passes the backend's per-problem sequence set).
+        The pages' K/V are gathered to a host buffer keyed by the
+        namespace, then the allocator releases them — the freed pages
+        are immediately reusable by other problems.  Returns the number
+        of pages spilled.
+        """
+        ids = list(seq_ids)
+        if not ids:
+            return 0
+        handles = [self.alloc.seqs[s] for s in ids]
+        ns = handles[0].ns
+        assert ns not in self._spill, (ns, "already swapped out")
+        # gather BEFORE releasing: the pool content of a freed page is
+        # only guaranteed until the next allocation writes over it
+        pages = sorted({pg for h in handles for pg in h.block_table})
+        host_k, host_v = self.pool.gather_pages(pages)
+        released = self.alloc.swap_out_seqs(ids)
+        assert released == pages, (released, pages)
+        self._spill[ns] = (pages, host_k, host_v)
+        self.swapped_out_pages += len(pages)
+        self.n_swap_outs += 1
+        return len(pages)
+
+    def swap_in(self, seq_ids: Sequence[int]) -> int:
+        """Restore a demoted problem's pages from the spill buffer.
+
+        Allocates fresh physical pages (all-or-nothing; raises
+        ``OutOfPages`` leaving everything parked when the pool lacks
+        room), scatters the host K/V copies into them and rewrites the
+        problem's block tables.  Restored pages are exact copies, so
+        the problem's decode streams resume bit-identically — physical
+        ids changed, but every consumer indexes the pool through the
+        block tables.  Returns the number of pages restored.
+        """
+        ids = list(seq_ids)
+        if not ids:
+            return 0
+        ns = self.alloc.seqs[ids[0]].ns
+        pages, host_k, host_v = self._spill[ns]
+        mapping = self.alloc.swap_in_seqs(ids)     # may raise OutOfPages
+        # sequences freed while parked may have dropped spill pages
+        rows = [i for i, pg in enumerate(pages) if pg in mapping]
+        if rows:
+            self.pool.scatter_pages([mapping[pages[i]] for i in rows],
+                                    host_k[:, rows], host_v[:, rows],
+                                    dump_page=self.dump_page)
+        del self._spill[ns]
+        self.swapped_in_pages += len(rows)
+        self.n_swap_ins += 1
+        return len(rows)
 
     def reset(self) -> None:
         """Free every live sequence; keeps the pool and compiled steps.
@@ -444,6 +518,7 @@ class PagedEngine:
         explicitly when they delimit a measurement window)."""
         for sid in list(self.alloc.seqs):
             self.free(sid)
+        self._spill.clear()
         self.logits_trace.clear()
 
     def reset_counters(self) -> None:
@@ -454,6 +529,10 @@ class PagedEngine:
         self.n_decoded_tokens = 0
         self.n_prefill_calls = 0
         self.n_prefill_tokens = 0
+        self.swapped_out_pages = 0
+        self.swapped_in_pages = 0
+        self.n_swap_outs = 0
+        self.n_swap_ins = 0
         self.unique_pages_streamed = 0
         self.logical_pages_streamed = 0
         self.unique_pages_streamed_by_ns.clear()

@@ -61,6 +61,18 @@ sweep admits keeps its own
     reduces one problem's trace — what ``SearchResult.kv_summary``
     reports in a sweep).
 
+Memory-pressure protocol (``capacity`` / ``prompt_pages`` /
+``step_pages_per_branch`` / ``problem_pages`` / ``problem_swapped_pages``
+/ ``swap_out_problem`` / ``swap_in_problem``): the sweep scheduler's
+admission control reserves a per-problem working-set estimate against
+``capacity()`` and, under pressure, demotes a victim problem —
+``swap_out_problem`` spills every sequence of its namespace to the
+engine's host-side buffer and releases the pages; ``swap_in_problem``
+restores them bit-identically once retirements free room.  Demotion is
+invisible to the search logic: a parked problem simply posts no demand
+for a few global steps, and per-problem RNG chains make the step
+timing irrelevant to its sampled streams.
+
 ``on_step`` (called by the controller after pruning) frees the engine
 sequences of pruned leaves — this is where ETS's ILP decisions become
 physical page releases.  It only sweeps the *owning problem's*
@@ -445,6 +457,61 @@ class LMBackend:
             "pages_streamed_per_step": uniq / steps,
             "io_sharing_ratio": logical / max(uniq, 1),
         }
+
+    # -- memory pressure (the scheduler's admission/demotion protocol) --
+    # The sweep scheduler reserves a working-set estimate per problem at
+    # admission and demotes (swaps out) victims under pressure; these
+    # methods are the backend half of that contract.  All page units.
+
+    def capacity(self) -> Optional[Dict[str, int]]:
+        """Pool capacity: total allocatable pages and currently free.
+        ``None`` on engine doubles without an allocator or swap support
+        — the scheduler then runs without pressure management."""
+        alloc = getattr(self.engine, "alloc", None)
+        if alloc is None or not hasattr(self.engine, "swap_out"):
+            return None
+        return {"total_pages": alloc.n_pages,
+                "free_pages": len(alloc.free)}
+
+    def prompt_pages(self, prompt_tokens: Sequence[int]) -> int:
+        """Pages one prompt's prefill holds (``tokens[:-1]`` in pages,
+        rounded up so the pending token's first append is covered)."""
+        ps = self.engine.ecfg.page_size
+        return max(-(-len(prompt_tokens) // ps), 1)
+
+    def step_pages_per_branch(self) -> int:
+        """Worst-case page growth of ONE branch over ONE search step:
+        a CoW of the shared last page plus pages for the step's new
+        tokens.  Tight: a step appends at most ``max_step_tokens``
+        slots, and from any starting fill that allocates at most
+        ``ceil(max_step_tokens / page_size)`` fresh pages on top of the
+        privatized one."""
+        ps = self.engine.ecfg.page_size
+        return 1 + -(-self.bcfg.max_step_tokens // ps)
+
+    def problem_pages(self, tree: SearchTree) -> int:
+        """Physical pages this problem holds right now."""
+        ns = tree.node(0).payload["ns"]
+        return self._ns_stats(ns).get("physical_pages", 0)
+
+    def problem_swapped_pages(self, tree: SearchTree) -> int:
+        """Pages this problem has parked in the host spill buffer."""
+        ns = tree.node(0).payload["ns"]
+        return self._ns_stats(ns).get("swapped_pages", 0)
+
+    def swap_out_problem(self, tree: SearchTree) -> int:
+        """Demote one problem: spill all its engine sequences' pages to
+        the host buffer and release them (``engine.swap_out``).  The
+        problem's search state parks until ``swap_in_problem``."""
+        ns = tree.node(0).payload["ns"]
+        return self.engine.swap_out(sorted(self._ns_seqs.get(ns, ())))
+
+    def swap_in_problem(self, tree: SearchTree) -> int:
+        """Restore a demoted problem's pages (exact copies — its decode
+        streams resume bit-identically).  Raises ``OutOfPages`` and
+        leaves the problem parked when the pool still lacks room."""
+        ns = tree.node(0).payload["ns"]
+        return self.engine.swap_in(sorted(self._ns_seqs.get(ns, ())))
 
     def finish_problem(self, tree: SearchTree) -> None:
         """Retire one problem: free whatever engine sequences its final

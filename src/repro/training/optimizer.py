@@ -6,7 +6,6 @@ PartitionSpecs in the distributed train step).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Tuple
 

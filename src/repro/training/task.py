@@ -14,7 +14,6 @@ against them (examples/train_and_search.py).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 

@@ -8,10 +8,9 @@ pieces.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -81,7 +81,6 @@ def test_backend_frees_pruned_sequences(stack):
     backend = make_backend(stack)
     tree = backend.start(encode("Q5*2\n"))
     kids = backend.expand(tree, 0, 4)
-    n_before = len(backend.engine.alloc.seqs)
     backend.on_step(tree, kids[:1])     # prune 3 of 4
     assert len(backend.engine.alloc.seqs) == 1
     backend.engine.alloc.check_invariants()

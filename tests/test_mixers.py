@@ -9,7 +9,7 @@ import pytest
 from _hypothesis_shim import given, settings, st
 
 import repro.models.moe as MOE
-from repro.configs import MoEConfig, SSMConfig, get_config, tiny_variant
+from repro.configs import SSMConfig, get_config, tiny_variant
 from repro.models import mamba2 as M
 from repro.models import rwkv6 as R
 

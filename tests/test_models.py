@@ -6,7 +6,6 @@ archs additionally verify prefill+decode_step agrees with the full
 forward (the KV/state-cache correctness invariant everything else builds
 on).
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

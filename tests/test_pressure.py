@@ -1,0 +1,393 @@
+"""KV memory pressure: working-set admission control + page demotion.
+
+The contract under test (the sweep scheduler's pressure machinery):
+
+  * swap bookkeeping — ``PageAllocator.swap_out_seqs``/``swap_in_seqs``
+    release and re-seat one namespace's pages with exact refcount
+    restoration, under random op interleavings (property test);
+  * swap transport — ``PagedEngine.swap_out``/``swap_in`` round-trips
+    the pages through the host spill buffer bit-exactly, and decode
+    streams resume bit-identically after the pool was dirtied by other
+    problems in between;
+  * the sweep — on a pool too small for naive admission, random
+    pressure schedules (pool size x admission cap drawn by hypothesis)
+    complete WITHOUT allocator errors and stay bit-identical to
+    unpressured serial per-problem runs in both attention modes;
+  * admission control — the reserved page sum never exceeds the pool
+    (``stats.max_reserved_pages``), and the estimator refines online;
+  * accounting — engine swap counters reconcile with the allocator's
+    per-ns swap stats (everything demoted was restored, nothing leaks).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_shim import HealthCheck, given, settings, st
+
+from repro.configs import get_config
+from repro.core import (ETSConfig, SearchConfig, SweepScheduler, run_search)
+from repro.core.controllers import WorkingSetEstimator
+from repro.kvcache import PageAllocator
+from repro.kvcache.allocator import OutOfPages
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, PagedEngine
+from repro.serving.search_backend import BackendConfig, LMBackend
+
+
+# ---------------------------------------------------------------------------
+# Allocator: swap bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_allocator_swap_roundtrip_accounting():
+    a = PageAllocator(32, 4)
+    h = a.new_seq(10)                       # 3 pages
+    (b,) = a.branch(h.seq_id, 1)
+    a.append_tokens(b.seq_id, 3)            # CoW + growth
+    a.check_invariants()
+    used = a.used_pages
+    pages = a.swap_out_seqs([h.seq_id, b.seq_id])
+    # every physical page released; swap accounting picks them up
+    assert a.used_pages == 0
+    assert a.swapped_pages == len(pages) == used
+    assert a.seqs[h.seq_id].swapped and a.seqs[b.seq_id].swapped
+    st_ns = a.ns_page_stats(h.ns)
+    assert st_ns["physical_pages"] == 0
+    assert st_ns["swapped_pages"] == len(pages)
+    a.check_invariants()
+    # freed pages are immediately reusable by another problem
+    other = a.new_seq(40)
+    a.check_invariants()
+    mapping = a.swap_in_seqs([h.seq_id, b.seq_id])
+    assert sorted(mapping) == pages         # every stale id re-seated
+    assert a.swapped_pages == 0
+    assert a.used_pages == len(pages) + len(a.seqs[other.seq_id].block_table)
+    # tables rewritten through the mapping, refcounts restored exactly
+    a.check_invariants()
+    for sid in (h.seq_id, b.seq_id, other.seq_id):
+        a.free_seq(sid)
+    assert a.used_pages == 0
+    a.check_invariants()
+
+
+def test_allocator_swap_in_out_of_pages_leaves_state_parked():
+    a = PageAllocator(8, 4)
+    h = a.new_seq(20)                       # 5 pages
+    a.swap_out_seqs([h.seq_id])
+    filler = a.new_seq(20)                  # occupy the freed pages
+    with pytest.raises(OutOfPages):
+        a.swap_in_seqs([h.seq_id])
+    # nothing mutated: still parked, accounting intact
+    assert a.seqs[h.seq_id].swapped
+    assert a.swapped_pages == 5
+    a.check_invariants()
+    a.free_seq(filler.seq_id)
+    a.swap_in_seqs([h.seq_id])              # now it fits
+    a.check_invariants()
+
+
+def test_allocator_free_while_swapped_trims_accounting():
+    a = PageAllocator(32, 4)
+    h = a.new_seq(10)
+    (b,) = a.branch(h.seq_id, 1)
+    a.swap_out_seqs([h.seq_id, b.seq_id])
+    a.free_seq(b.seq_id)                    # drop one branch while parked
+    a.check_invariants()
+    assert a.swapped_pages == 3             # shared pages still referenced
+    a.free_seq(h.seq_id)                    # last swapped handle of the ns
+    assert a.swapped_pages == 0 and not a.swapped
+    a.check_invariants()
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(
+    st.one_of(
+        st.tuples(st.just("new"), st.integers(0, 30)),
+        st.tuples(st.just("append"), st.integers(1, 20)),
+        st.tuples(st.just("branch"), st.integers(1, 3)),
+        st.tuples(st.just("free"), st.integers(0, 10)),
+        st.tuples(st.just("swap_out"), st.integers(0, 10)),
+        st.tuples(st.just("swap_in"), st.integers(0, 10)),
+    ), min_size=1, max_size=40))
+def test_allocator_invariants_random_ops_with_swap(ops):
+    """Refcount + swap accounting invariants hold under random op
+    interleavings; swapped namespaces are fully isolated from live
+    allocation traffic."""
+    a = PageAllocator(n_pages=128, page_size=8)
+    by_ns = {}                              # ns -> list of live seq ids
+    parked = set()
+    rng = np.random.default_rng(1)
+
+    def pick(keys):
+        keys = sorted(keys)
+        return keys[int(rng.integers(len(keys)))] if keys else None
+
+    for op, arg in ops:
+        live_ns = [ns for ns in by_ns if ns not in parked]
+        try:
+            if op == "new":
+                h = a.new_seq(arg)
+                by_ns.setdefault(h.ns, []).append(h.seq_id)
+            elif op == "append" and live_ns:
+                ns = pick(live_ns)
+                a.append_tokens(pick(by_ns[ns]), arg)
+            elif op == "branch" and live_ns:
+                ns = pick(live_ns)
+                bs = a.branch(pick(by_ns[ns]), arg)
+                by_ns[ns].extend(b.seq_id for b in bs)
+            elif op == "free" and by_ns:
+                ns = pick(by_ns)
+                sids = by_ns[ns]
+                sid = sids.pop(int(rng.integers(len(sids))))
+                a.free_seq(sid)
+                if not sids:
+                    del by_ns[ns]
+                    parked.discard(ns)
+            elif op == "swap_out" and live_ns:
+                ns = pick(live_ns)
+                a.swap_out_seqs(by_ns[ns])
+                parked.add(ns)
+            elif op == "swap_in" and parked:
+                ns = pick(parked)
+                a.swap_in_seqs(by_ns[ns])
+                parked.discard(ns)
+        except OutOfPages:
+            pass
+        a.check_invariants()
+    # cleanup: freeing parked and live namespaces alike drains the pool
+    for ns in list(by_ns):
+        for sid in by_ns[ns]:
+            a.free_seq(sid)
+    assert a.used_pages == 0 and a.swapped_pages == 0
+    a.check_invariants()
+
+
+def test_working_set_estimator_refines_down_and_clamps():
+    est = WorkingSetEstimator(margin=1.25)
+    width, step_pages = 8, 3
+    assert est.growth(width, step_pages) == 24      # a-priori: width full
+    est.note(8)                                     # realized growths
+    est.note(4)
+    got = est.growth(width, step_pages)
+    assert step_pages <= got < 24                   # refined below the cap
+    est.note(10 ** 6)                               # outlier: clamped
+    assert est.growth(width, step_pages) == 24
+
+
+# ---------------------------------------------------------------------------
+# Engine: spill-buffer round trip is bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_models():
+    lm_cfg = dataclasses.replace(get_config("tiny-lm"), n_layers=2,
+                                 d_model=64, n_heads=4, n_kv_heads=2,
+                                 d_ff=128)
+    lm = build_model(lm_cfg, remat=False)
+    lm_params = lm.init(jax.random.key(0))
+    prm = build_model(dataclasses.replace(lm_cfg, n_layers=1),
+                      with_value_head=True, remat=False)
+    prm_params = prm.init(jax.random.key(1))
+    emb_cfg = dataclasses.replace(get_config("tiny-embedder"), n_layers=1,
+                                  d_model=64, n_heads=2, n_kv_heads=2,
+                                  d_ff=128)
+    emb = build_model(emb_cfg, remat=False)
+    emb_params = emb.init(jax.random.key(2))
+    return (lm, lm_params), (prm, prm_params), (emb, emb_params)
+
+
+def _engine(tiny_models, n_pages=256, max_batch=16, attention="tree"):
+    (lm, lm_params), _, _ = tiny_models
+    return PagedEngine(lm, lm_params, EngineConfig(
+        n_pages=n_pages, page_size=8, max_batch=max_batch, max_seq_len=128,
+        attention=attention))
+
+
+def _pool_kv(eng, sid):
+    h = eng.alloc.seqs[sid]
+    out = []
+    for layer in range(eng.pool.n_layers):
+        k, v = eng.pool.gather_kv(layer, h.block_table, h.length)
+        out.append((np.asarray(k), np.asarray(v)))
+    return out
+
+
+def test_engine_swap_roundtrip_bit_exact(tiny_models):
+    eng = _engine(tiny_models)
+    sid = eng.prefill(list(range(1, 20)))
+    b1, b2 = eng.branch(sid, 2)
+    keys = jax.random.split(jax.random.key(7), 2)
+    eng.decode([b1, b2], 4, row_keys=keys, temperature=1.0)
+    snap = {s: _pool_kv(eng, s) for s in (b1, b2)}
+    spilled = eng.swap_out([sid, b1, b2])
+    assert spilled > 0
+    assert eng.alloc.used_pages == 0        # pages fully released
+    # dirty the freed pages: another problem prefills over them
+    eng.prefill(list(range(30, 90)))
+    restored = eng.swap_in([sid, b1, b2])
+    assert restored == spilled == eng.swapped_out_pages
+    assert eng.swapped_in_pages == spilled
+    for s in (b1, b2):
+        for (k0, v0), (k1, v1) in zip(snap[s], _pool_kv(eng, s)):
+            assert np.array_equal(k0, k1) and np.array_equal(v0, v1)
+    eng.alloc.check_invariants()
+
+
+def test_engine_decode_resumes_bit_identical_after_swap(tiny_models):
+    prompt = list(range(1, 20))
+    keys = jax.random.split(jax.random.key(11), 2)
+    keys2 = jax.random.split(jax.random.key(12), 2)
+
+    def run(with_swap):
+        eng = _engine(tiny_models)
+        sid = eng.prefill(prompt)
+        b1, b2 = eng.branch(sid, 2)
+        out1 = eng.decode([b1, b2], 4, row_keys=keys, temperature=1.0)
+        if with_swap:
+            eng.swap_out([sid, b1, b2])
+            filler = eng.prefill(list(range(25, 85)))   # dirty the pages
+            eng.free(filler)
+            eng.swap_in([sid, b1, b2])
+        out2 = eng.decode([b1, b2], 4, row_keys=keys2, temperature=1.0)
+        return [out1[b1], out1[b2], out2[b1], out2[b2]]
+
+    assert run(with_swap=False) == run(with_swap=True)
+
+
+def test_engine_free_while_swapped_drops_spill(tiny_models):
+    eng = _engine(tiny_models)
+    sid = eng.prefill(list(range(1, 30)))
+    ns = eng.alloc.seqs[sid].ns
+    eng.swap_out([sid])
+    assert ns in eng._spill
+    eng.free(sid)                           # problem abandoned while parked
+    assert ns not in eng._spill             # host buffer reclaimed
+    assert eng.alloc.swapped_pages == 0
+    eng.alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# The sweep under pressure: bit-identical, error-free, reconciled
+# ---------------------------------------------------------------------------
+
+def _lm_backend(tiny_models, attention, n_pages=256, max_batch=16):
+    (lm, lm_params), (prm, prm_params), (emb, emb_params) = tiny_models
+    engine = PagedEngine(lm, lm_params, EngineConfig(
+        n_pages=n_pages, page_size=8, max_batch=max_batch, max_seq_len=128,
+        attention=attention))
+    backend = LMBackend(engine, prm, prm_params, emb, emb_params,
+                        BackendConfig(step_token=2, eos_token=3,
+                                      max_step_tokens=6, max_depth=4),
+                        answer_fn=lambda full: None, seed=13)
+    return engine, backend
+
+
+PROMPTS = [list(range(4, 4 + n)) for n in (17, 23, 9, 30)]
+SCFG = SearchConfig(method="ets", width=5, max_steps=3,
+                    ets=ETSConfig(lambda_b=1.0, lambda_d=1.0,
+                                  cluster_threshold=0.2))
+# The serial baselines run on a roomy pool: results cannot depend on
+# pool size, which is exactly what the pressure tests then assert.
+TIGHT_POOL = 40
+
+
+def _tree_signature(tree):
+    out = []
+    for n in tree.nodes:
+        toks = n.payload.get("tokens") if isinstance(n.payload, dict) \
+            else None
+        out.append((n.id, n.parent, n.n_tokens, n.reward, n.finished,
+                    toks if toks is None else list(toks)))
+    return out
+
+
+def _serial_results(tiny_models, attention):
+    _, backend = _lm_backend(tiny_models, attention)
+    out = []
+    for p in PROMPTS:
+        backend.reset()
+        out.append(run_search(backend, SCFG, tree=backend.start(p)))
+    return out
+
+
+def _assert_results_identical(serial, sweep):
+    assert len(serial) == len(sweep)
+    for rs, rc in zip(serial, sweep):
+        assert _tree_signature(rs.tree) == _tree_signature(rc.tree)
+        assert rs.answer == rc.answer
+        assert rs.completed == rc.completed
+        assert rs.steps == rc.steps
+
+
+@pytest.mark.parametrize("attention", ["paged", "tree"])
+def test_pressured_sweep_bit_identical_to_serial(tiny_models, attention,
+                                                 serial_tree_results):
+    """The acceptance bar: a pool too small for naive admission (the
+    sweep's prompts + working sets overflow it) completes WITHOUT
+    allocator errors via demotion, bit-identical to unpressured serial
+    per-problem runs — in both attention modes."""
+    serial = serial_tree_results if attention == "tree" \
+        else _serial_results(tiny_models, attention)
+    engine, backend = _lm_backend(tiny_models, attention,
+                                  n_pages=TIGHT_POOL)
+    sched = SweepScheduler(backend, SCFG, prompts=PROMPTS)
+    _assert_results_identical(serial, sched.run())
+    # pressure actually happened, and every demotion was resumed
+    assert sched.stats.demotions > 0
+    assert sched.stats.resumes == sched.stats.demotions
+    # swap counters reconcile with the allocator's swap accounting:
+    # everything spilled was restored, and nothing is left behind
+    assert engine.swapped_out_pages == engine.swapped_in_pages > 0
+    assert engine.n_swap_outs == engine.n_swap_ins == sched.stats.demotions
+    assert engine.alloc.swapped_pages == 0 and not engine.alloc.swapped
+    assert engine._spill == {}
+    assert engine.alloc.used_pages == 0
+    engine.alloc.check_invariants()
+
+
+def test_reservations_and_io_partition_under_pressure(tiny_models):
+    """Admission control: the page sum reserved by concurrently-admitted
+    problems never exceeds the pool, a binding pool defers waves, the
+    estimator sees every retired problem's realized page trace — and
+    demotion does not corrupt the per-problem IO attribution (the
+    namespaced counters still partition the engine's global ones)."""
+    engine, backend = _lm_backend(tiny_models, "tree", n_pages=TIGHT_POOL)
+    sched = SweepScheduler(backend, SCFG, prompts=PROMPTS)
+    results = sched.run()
+    assert 0 < sched.stats.max_reserved_pages <= TIGHT_POOL - 1
+    assert sched.stats.admission_waves >= 2     # could not admit at once
+    assert len(sched.estimator._growths) == len(PROMPTS)
+    assert sched.stats.demotions > 0
+    per_uniq = [r.kv_summary["unique_pages_streamed"] for r in results]
+    per_log = [r.kv_summary["logical_pages_streamed"] for r in results]
+    assert sum(per_uniq) == engine.unique_pages_streamed
+    assert sum(per_log) == engine.logical_pages_streamed
+
+
+@pytest.fixture(scope="module")
+def serial_tree_results(tiny_models):
+    """Unpressured serial baseline, computed once for the module."""
+    return _serial_results(tiny_models, "tree")
+
+
+@settings(max_examples=3, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.integers(36, 96),                     # pool pages (tight..roomy)
+       st.integers(1, 4))                       # admission cap
+def test_sweep_matches_serial_under_random_pressure(tiny_models,
+                                                    serial_tree_results,
+                                                    n_pages, max_live):
+    """Property: ANY pressure schedule — pool size and admission cap
+    drawn at random, driving arbitrary demote/resume interleavings —
+    yields per-problem results bit-identical to the unpressured serial
+    baseline, with the pool fully drained afterwards."""
+    serial = serial_tree_results
+    engine, backend = _lm_backend(tiny_models, "tree", n_pages=n_pages)
+    sched = SweepScheduler(backend, SCFG, prompts=PROMPTS,
+                           max_live=max_live)
+    _assert_results_identical(serial, sched.run())
+    assert sched.stats.max_reserved_pages <= n_pages - 1
+    assert engine.swapped_out_pages == engine.swapped_in_pages
+    assert engine.alloc.used_pages == 0 and engine.alloc.swapped_pages == 0
+    engine.alloc.check_invariants()

@@ -1,9 +1,7 @@
 """Sharding policy (pure spec logic) + HLO roofline parser."""
-import types
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -5,7 +5,6 @@ import dataclasses
 import math
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_shim import HealthCheck, given, settings, st
