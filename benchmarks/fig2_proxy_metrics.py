@@ -23,25 +23,75 @@ from repro.core import (ETSConfig, HardwareModel, SearchConfig,
 from repro.core.synthetic import SyntheticProblem, SyntheticTaskConfig
 
 
-def _measured_io_validation(width: int = 8, n_problems: int = 2):
-    """Costsim prediction vs engine measurement of KV-IO sharing.
+def _predicted_step_pages(tree, candidates, page_size):
+    """Count-level page-IO prediction for ONE decode step.
 
-    Predicted per-step sharing = kv_tokens_unshared / kv_tokens_shared
-    from the tree-level trace (what ``simulate_search_cost`` consumes);
-    measured = logical / unique pages the tree-attention decode step
-    actually streamed.  The prediction covers the post-prune live set
-    while the measurement covers the decoded branch set, so we compare
-    ratios, not raw counts.
+    Replays the paged allocator's sharing rules on the tree alone: a
+    branch decoding its ``i``-th token (1-based) holds
+    ``ceil((P + i - 1)/ps)`` block-table pages (``P`` = its parent's
+    path tokens; the pending-token invariant keeps the sampled-but-
+    unappended token out of the KV, hence the ``- 1``).  Page ``j`` of
+    branch ``c`` is physically shared with exactly the branches that
+    agree on its *owner* — the deepest ancestor ``u`` on ``c``'s path
+    with ``j >= (path_tokens(parent(u)) - 1) // ps``, i.e. the node
+    whose segment allocated (or CoW-privatized: a partial fork page is
+    always copied at the child's first append, since the parent handle
+    keeps refcount > 1) that page.  Tree attention streams each
+    physical page once per iteration, so the step's predictions are
+
+      logical = sum over iterations/live branches of their page counts,
+      unique  = sum over iterations of |{(owner, j)}| over live branches.
+
+    Valid while one step's branch union fits ``max_batch`` (chunked
+    decode would split an iteration's union across chunks).
+    """
+    ps = page_size
+    info = []
+    for c in candidates:
+        node = tree.node(c)
+        info.append((c, tree.path_tokens(node.parent), node.n_tokens))
+
+    def owner(c, j):
+        u = c
+        while u != 0:
+            parent = tree.node(u).parent
+            if j >= (tree.path_tokens(parent) - 1) // ps:
+                return u
+            u = parent
+        return 0
+
+    logical = unique = 0
+    for i in range(1, max((n for _, _, n in info), default=0) + 1):
+        seen = set()
+        for c, P, n in info:
+            if n < i:
+                continue
+            npages = (P + i - 1 + ps - 1) // ps
+            logical += npages
+            seen.update((owner(c, j), j) for j in range(npages))
+        unique += len(seen)
+    return logical, unique
+
+
+def _measured_io_validation(width: int = 8, n_problems: int = 2):
+    """Costsim page-sharing model vs engine measurement — count level.
+
+    Historically this compared the post-prune live-set tree trace
+    against the decoded-branch-set engine trace, which only lined up at
+    *ratio* level.  The tree now records its decode boundaries
+    (``SearchTree.decode_trace``: entry ``k`` is step ``k``'s decoded
+    branch set, paired 1:1 with the problem's namespaced engine trace
+    ``backend.kv_trace_by_problem[ns]``), so the comparison is exact:
+    per problem, per step, the predicted logical/unique page COUNTS
+    from :func:`_predicted_step_pages` must equal the pages the
+    tree-attention decode actually streamed — asserted as integers, no
+    tolerance.  The sharing *ratios* derived from those counts are
+    still reported for the Fig. 2 narrative.
 
     The problems run as ONE continuous cross-problem sweep
-    (``run_search_many``) and the comparison is **per problem**: each
-    search's tree-level trace is zipped against its own namespaced
-    engine trace (``backend.kv_trace_by_problem``), step by step — the
-    per-problem attribution that the sweep scheduler's namespaces make
-    possible even though every decode stream is shared.  Alongside the
-    aggregate mean we report each problem's own relative error and the
-    worst of them, so a costsim bias that averages out across problems
-    still shows.
+    (``run_search_many``), so the assertion also pins the per-problem
+    IO attribution: each problem's prediction must match its own
+    namespace's slice of the shared decode stream.
     """
     import jax
     from repro.configs import get_config
@@ -78,48 +128,66 @@ def _measured_io_validation(width: int = 8, n_problems: int = 2):
     prompts = [encode(task.sample_problem(rng)[0])
                for _ in range(n_problems)]
     results = run_search_many(backend, scfg, prompts)
-    pred, meas, problems = [], [], []
+    page_size = engine.ecfg.page_size
+    tot_pred = np.zeros(2, np.int64)     # logical, unique
+    tot_meas = np.zeros(2, np.int64)
+    problems, n_steps = [], 0
     for i, res in enumerate(results):
         ns = res.tree.node(0).payload["ns"]
-        p_pred, p_meas = [], []
-        for t_tree, t_eng in zip(res.tree.kv_trace,
-                                 backend.kv_trace_by_problem[ns]):
-            if t_eng["unique_pages_streamed"] <= 0:
-                continue
-            p_pred.append(t_tree["kv_tokens_unshared"]
-                          / max(t_tree["kv_tokens_shared"], 1))
-            p_meas.append(t_eng["logical_pages_streamed"]
-                          / t_eng["unique_pages_streamed"])
-        pm, mm = float(np.mean(p_pred)), float(np.mean(p_meas))
+        eng_trace = backend.kv_trace_by_problem[ns]
+        # decode boundaries pair 1:1 with the namespaced engine trace
+        assert len(res.tree.decode_trace) == len(eng_trace), (
+            "trace misalignment", i, len(res.tree.decode_trace),
+            len(eng_trace))
+        p_pred = np.zeros(2, np.int64)
+        p_meas = np.zeros(2, np.int64)
+        for k, (cands, t_eng) in enumerate(zip(res.tree.decode_trace,
+                                               eng_trace)):
+            lg, uq = _predicted_step_pages(res.tree, cands, page_size)
+            m_lg = int(t_eng["logical_pages_streamed"])
+            m_uq = int(t_eng["unique_pages_streamed"])
+            # the tightened acceptance bar: exact page counts, per
+            # problem, per step — not just matching ratios
+            assert (lg, uq) == (m_lg, m_uq), (
+                "count-level IO mismatch", {"problem": i, "step": k,
+                                            "predicted": (lg, uq),
+                                            "measured": (m_lg, m_uq)})
+            p_pred += (lg, uq)
+            p_meas += (m_lg, m_uq)
+            n_steps += 1
         problems.append({
             "problem": i,
-            "predicted_sharing_ratio": pm,
-            "measured_sharing_ratio": mm,
-            "rel_err": abs(pm - mm) / max(mm, 1e-9),
-            "n_steps": len(p_meas),
-            "per_step_predicted": p_pred,
-            "per_step_measured": p_meas,
+            "predicted_pages": {"logical": int(p_pred[0]),
+                                "unique": int(p_pred[1])},
+            "measured_pages": {"logical": int(p_meas[0]),
+                               "unique": int(p_meas[1])},
+            "sharing_ratio": float(p_meas[0] / max(p_meas[1], 1)),
+            "n_steps": len(eng_trace),
         })
-        pred += p_pred
-        meas += p_meas
-    pred_m, meas_m = float(np.mean(pred)), float(np.mean(meas))
-    rel_err = abs(pred_m - meas_m) / max(meas_m, 1e-9)
-    worst = max(p["rel_err"] for p in problems)
-    print(f"\n-- costsim tree_attention=True vs measured engine IO "
-          f"(continuous sweep, per-problem traces) --")
-    print(f"predicted sharing ratio (tree trace) : {pred_m:6.2f}x")
-    print(f"measured  sharing ratio (engine)     : {meas_m:6.2f}x")
-    print(f"relative error of the mean           : {rel_err:6.1%}")
+        tot_pred += p_pred
+        tot_meas += p_meas
+    ratio = float(tot_meas[0] / max(tot_meas[1], 1))
+    print(f"\n-- costsim page-sharing model vs measured engine IO "
+          f"(continuous sweep, count level) --")
+    print(f"predicted pages (logical/unique)     : "
+          f"{int(tot_pred[0])}/{int(tot_pred[1])}")
+    print(f"measured  pages (logical/unique)     : "
+          f"{int(tot_meas[0])}/{int(tot_meas[1])}")
+    print(f"exact count match over {n_steps} decode steps "
+          f"x {len(problems)} problems")
+    print(f"realized sharing ratio               : {ratio:6.2f}x")
     for p in problems:
-        print(f"  problem {p['problem']}: predicted "
-              f"{p['predicted_sharing_ratio']:5.2f}x vs measured "
-              f"{p['measured_sharing_ratio']:5.2f}x over "
-              f"{p['n_steps']} steps (rel err {p['rel_err']:5.1%})")
-    print(f"worst per-problem rel err            : {worst:6.1%}")
-    return {"predicted_sharing_ratio": pred_m,
-            "measured_sharing_ratio": meas_m,
-            "rel_err": rel_err, "n_steps": len(meas),
-            "worst_problem_rel_err": worst,
+        print(f"  problem {p['problem']}: "
+              f"{p['measured_pages']['logical']}/"
+              f"{p['measured_pages']['unique']} pages over "
+              f"{p['n_steps']} steps "
+              f"(sharing {p['sharing_ratio']:5.2f}x)")
+    return {"count_level_exact": True,
+            "predicted_pages_logical": int(tot_pred[0]),
+            "predicted_pages_unique": int(tot_pred[1]),
+            "measured_pages_logical": int(tot_meas[0]),
+            "measured_pages_unique": int(tot_meas[1]),
+            "sharing_ratio": ratio, "n_steps": n_steps,
             "problems": problems}
 
 

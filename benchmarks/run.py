@@ -9,12 +9,17 @@ machine-readable perf record (tokens/s, decode calls/step, pages
 streamed per decode step for serial / batched-paged / batched-tree,
 the prefill-ingestion section: serial-dense vs batched-flash prompt
 tok/s, the sweep section: one-at-a-time vs continuous cross-problem
-problems/s + mean batch occupancy, and the pressure section:
-serialized vs demotion-enabled small-pool problems/s) that tracks the
-serving trajectory across PRs; CI uploads
+problems/s + mean batch occupancy, the pressure section:
+serialized vs demotion-enabled small-pool problems/s, and the serving
+section: lock-step vs token-level-refill p50/p99 time-to-answer per
+Poisson arrival rate on the serving loop's virtual clock) that tracks
+the serving trajectory across PRs; CI uploads
 it as an artifact from the smoke invocation and
 ``benchmarks/trend_check.py`` fails the smoke job on a >2x tok/s
-regression against the committed copy.
+regression against the committed copy (serving rows gate on p99
+time-to-answer, where LOWER is better).  The serving rows are also
+written to ``<out>/serving_latency_curve.json`` — the latency-curve
+artifact the slow CI job uploads.
 
 ``--smoke`` shrinks everything to a tiny 2-step configuration that
 finishes in a couple of minutes on CPU — a liveness check for the whole
@@ -83,9 +88,16 @@ def main() -> None:
                            "rows": res["rows"],
                            "prefill": res.get("prefill", []),
                            "sweep": res.get("sweep", []),
-                           "pressure": res.get("pressure", [])},
+                           "pressure": res.get("pressure", []),
+                           "serving": res.get("serving", [])},
                           f, indent=1, default=str)
             print(f"[table2] rows -> {args.bench_json}")
+            curve = os.path.join(args.out, "serving_latency_curve.json")
+            with open(curve, "w") as f:
+                json.dump({"smoke": args.smoke, "fast": args.fast,
+                           "rows": res.get("serving", [])},
+                          f, indent=1, default=str)
+            print(f"[table2] serving latency curve -> {curve}")
         print(f"[{name}] done in {res['wall_s']}s\n")
 
 

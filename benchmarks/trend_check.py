@@ -6,11 +6,17 @@
 Compares a fresh ``BENCH_table2.json`` (written by
 ``benchmarks/run.py --only table2 --smoke``) against the committed copy
 snapshotted before the run.  Every decode row is matched on
-(method, path) and every prefill/sweep/pressure row on (path); the
+(method, path), every prefill/sweep/pressure row on (path), and every
+serving row on (path, arrival_rate); the
 check fails when a
 fresh ``tok_per_s`` drops below ``committed / max_ratio`` (default 2x —
 generous because CI machines are noisy; the point is catching
-order-of-magnitude orchestration regressions, not 10% jitter).  Smoke
+order-of-magnitude orchestration regressions, not 10% jitter).
+Serving rows gate on ``p99_tta`` instead, where LOWER is better: the
+check fails when fresh p99 exceeds ``committed * max_ratio``.  Those
+latencies come off the serving loop's virtual clock, so they are
+deterministic — a 2x swing there is a real scheduling change, never
+machine noise.  Smoke
 rows are tiny and the serial ones especially jittery, so the check runs
 in the non-blocking slow job: a red trend is a prompt to look at the
 uploaded artifact, not a merge gate.
@@ -33,8 +39,16 @@ def _index(rows, keys):
     return {tuple(r[k] for k in keys): r for r in rows}
 
 
-def _compare(section, committed_rows, fresh_rows, keys, max_ratio):
-    """Returns (failures, stale) label lists for one section."""
+def _compare(section, committed_rows, fresh_rows, keys, max_ratio,
+             metric="tok_per_s", lower_is_better=False):
+    """Returns (failures, stale) label lists for one section.
+
+    ``ratio`` is always the regression factor (how much WORSE the fresh
+    row is): committed/fresh for higher-is-better metrics (tok/s),
+    fresh/committed for lower-is-better ones (p99 latency).  Staleness
+    (ratio < 1/max_ratio) means the fresh row improved past the bound —
+    the committed baseline no longer describes the stack.
+    """
     base = _index(committed_rows, keys)
     cur = _index(fresh_rows, keys)
     failures, stale = [], []
@@ -44,13 +58,16 @@ def _compare(section, committed_rows, fresh_rows, keys, max_ratio):
         if new is None:
             print(f"[trend] {label}: missing from fresh run (skipped)")
             continue
-        ratio = old["tok_per_s"] / max(new["tok_per_s"], 1e-9)
+        if lower_is_better:
+            ratio = new[metric] / max(old[metric], 1e-9)
+        else:
+            ratio = old[metric] / max(new[metric], 1e-9)
         status = "FAIL" if ratio > max_ratio else "ok"
         if ratio < 1 / max_ratio:
             status = "STALE?"
             stale.append(label)
-        print(f"[trend] {label}: {old['tok_per_s']:.1f} -> "
-              f"{new['tok_per_s']:.1f} tok/s ({ratio:.2f}x slower) "
+        print(f"[trend] {label}: {old[metric]:.1f} -> "
+              f"{new[metric]:.1f} {metric} ({ratio:.2f}x worse) "
               f"[{status}]")
         if ratio > max_ratio:
             failures.append(label)
@@ -80,16 +97,19 @@ def main() -> None:
               f"fast={committed.get('fast')}, fresh "
               f"smoke={fresh.get('smoke')} fast={fresh.get('fast')})")
     failures, stale = [], []
-    for section, keys in (("decode", ("method", "path")),
-                          ("prefill", ("path",)),
-                          ("sweep", ("path",)),
-                          ("pressure", ("path",))):
+    sections = (("decode", ("method", "path"), "tok_per_s", False),
+                ("prefill", ("path",), "tok_per_s", False),
+                ("sweep", ("path",), "tok_per_s", False),
+                ("pressure", ("path",), "tok_per_s", False),
+                ("serving", ("path", "arrival_rate"), "p99_tta", True))
+    for section, keys, metric, lower in sections:
         committed_rows = committed.get("rows" if section == "decode"
                                        else section, [])
         fresh_rows = fresh.get("rows" if section == "decode"
                                else section, [])
         f, s = _compare(section, committed_rows, fresh_rows, keys,
-                        args.max_ratio)
+                        args.max_ratio, metric=metric,
+                        lower_is_better=lower)
         failures += f
         stale += s
     if stale:
@@ -98,11 +118,11 @@ def main() -> None:
               f"regenerate BENCH_table2.json "
               f"({', '.join(stale)})")
     if failures:
-        print(f"[trend] FAILED: >{args.max_ratio}x tok/s regression in "
+        print(f"[trend] FAILED: >{args.max_ratio}x regression in "
               f"{len(failures)} row(s): {', '.join(failures)}")
         sys.exit(1)
     print("[trend] ok: no row regressed beyond "
-          f"{args.max_ratio}x tok/s")
+          f"{args.max_ratio}x")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,8 @@ Public API:
   SearchConfig, run_search           — unified beam/DVTS/REBASE/ETS loop
   SearchState                        — the loop as a resumable step machine
   SweepScheduler, run_search_many    — continuous cross-problem batching
+  ServingLoop, ServingConfig, Request — online serving with SLOs + refill
+  poisson_requests, load_trace, SLOTracker — workloads + latency report
   SyntheticTaskConfig, SyntheticProblem, evaluate_method — oracle task
   SyntheticSweep                     — multi-problem synthetic backend
   HardwareModel, simulate_search_cost — §3 memory-op cost model (Fig. 2)
@@ -20,6 +22,8 @@ from .ets import ETSConfig, ETSStep, ets_prune  # noqa: F401
 from .ilp import (SelectionProblem, SelectionResult, greedy_select,  # noqa: F401
                   milp_select, solve)
 from .rebase import rebase_reweight, rebase_weights  # noqa: F401
+from .serving import (Request, ServingConfig, ServingLoop,  # noqa: F401
+                      SLOTracker, load_trace, poisson_requests)
 from .synthetic import (SyntheticProblem, SyntheticSweep,  # noqa: F401
                         SyntheticTaskConfig, evaluate_method)
 from .tree import Node, SearchTree  # noqa: F401

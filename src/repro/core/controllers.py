@@ -80,6 +80,7 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import math
+import warnings
 from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple
@@ -279,6 +280,42 @@ def _tree_ns(tree: SearchTree):
     return pl.get("ns") if isinstance(pl, dict) else None
 
 
+def _release_problem(backend, tree: SearchTree,
+                     stats: Optional["SweepStats"] = None) -> None:
+    """Retire one problem's backend state through ``finish_problem``.
+
+    The single place the hook is looked up (``run_search``'s retirement,
+    the sweep scheduler's ``_retire``, and the admission rollback all
+    route here).  A backend that holds pool pages (``capacity()`` not
+    None) but exposes no — or a misspelled — ``finish_problem`` silently
+    leaks its namespace pages until the pool runs dry, so the miss is
+    counted on the sweep stats (``finish_hook_missing``) and warned
+    about; backends without page accounting (synthetic oracles, engine
+    doubles) legitimately have nothing to release and stay silent.
+    After the hook runs, the problem's per-ns page accounting must read
+    zero — asserted whenever the backend can report it.
+    """
+    fin = getattr(backend, "finish_problem", None)
+    cap_fn = getattr(backend, "capacity", None)
+    holds_pages = cap_fn is not None and cap_fn() is not None
+    if fin is None:
+        if stats is not None:
+            stats.finish_hook_missing += 1
+        if holds_pages:
+            warnings.warn(
+                "backend holds pool pages but defines no finish_problem "
+                "hook; its namespace pages leak until the pool drains",
+                RuntimeWarning, stacklevel=3)
+        return
+    fin(tree)
+    if holds_pages and hasattr(backend, "problem_pages") \
+            and hasattr(backend, "problem_swapped_pages"):
+        held = backend.problem_pages(tree)
+        swapped = backend.problem_swapped_pages(tree)
+        assert held == 0 and swapped == 0, (
+            "finish_problem left pages behind", held, swapped)
+
+
 # ---------------------------------------------------------------------------
 # The step machine
 # ---------------------------------------------------------------------------
@@ -368,6 +405,9 @@ class SearchState:
             self._finish()
             return []
         tree, scfg = self.tree, self.scfg
+        # decode-boundary trace: this step's branch set, 1:1 with the
+        # engine's per-decode KV trace (the fig2 count-level validation)
+        tree.record_decode(candidates)
         # subtree bookkeeping (children arrive grouped by parent leaf)
         kids_of: Dict[int, List[int]] = defaultdict(list)
         for kid in candidates:
@@ -452,6 +492,20 @@ class SearchState:
         self.phase = "demand"
 
     # -- terminal ------------------------------------------------------
+    def halt(self) -> None:
+        """End the search NOW (First-Finish early exit).
+
+        Whatever ``completed`` already holds becomes the answer set;
+        any stage output still pending for the current step is
+        discarded (no final ``record_step``/``on_step`` for it — the
+        retiring caller's ``finish_problem`` frees every page of the
+        namespace outright, which is the whole point: pages return to
+        the pool the moment the first trajectory completes).  Valid in
+        any phase; idempotent once finished.
+        """
+        if not self.finished:
+            self._finish()
+
     def _finish(self) -> None:
         self.finished = True
         self.phase = "done"
@@ -518,9 +572,7 @@ def run_search(backend: Backend, scfg: SearchConfig,
     # sequences are released (namespaced backends no longer sweep other
     # problems' leftovers in on_step, so sequential solo use without
     # reset() must not accumulate them)
-    fin = getattr(backend, "finish_problem", None)
-    if fin is not None:
-        fin(st.tree)
+    _release_problem(backend, st.tree)
     return result
 
 
@@ -541,12 +593,21 @@ class SweepStats:
     demotions: int = 0
     resumes: int = 0
     max_reserved_pages: int = 0
-    # per global step: live problems and total branch demand they posted
+    # per global step: live problems and total branch demand they posted.
+    # ``problems_per_step`` has one entry per global step;
+    # ``demand_per_step`` only for steps that actually issued a decode
+    # stream (a drain step whose live problems all retire or post empty
+    # demand moves no tokens, so counting it would understate the batch
+    # fill the decode kernel really saw).
     problems_per_step: List[int] = field(default_factory=list)
     demand_per_step: List[int] = field(default_factory=list)
+    # retirements routed through a backend lacking ``finish_problem``
+    # (fine for synthetic backends; a red flag for engine backends)
+    finish_hook_missing: int = 0
 
     def mean_occupancy(self) -> float:
-        """Mean branch demand per global step (the decode batch fill)."""
+        """Mean branch demand per decode-issuing global step (the
+        decode batch fill)."""
         if not self.demand_per_step:
             return 0.0
         return sum(self.demand_per_step) / len(self.demand_per_step)
@@ -688,10 +749,8 @@ class SweepScheduler:
             for p in prompts:
                 trees.append(self.backend.start(p))
         except BaseException:
-            fin = getattr(self.backend, "finish_problem", None)
-            if fin is not None:
-                for t in trees:
-                    fin(t)
+            for t in trees:
+                _release_problem(self.backend, t)
             raise
         return trees
 
@@ -720,6 +779,28 @@ class SweepScheduler:
         rewards = [st.tree.node(leaf).reward for leaf in st.live]
         return max(rewards) if rewards else 0.0
 
+    def _slack(self, idx: int) -> float:
+        """Deadline slack of a live problem, for victim selection.
+
+        The base sweep has no deadlines, so every problem reports
+        infinite slack and victim selection falls through to the
+        historical lowest-score/most-pages policy.  ``ServingLoop``
+        overrides this with ``deadline - now - estimated remaining
+        work`` so pressure demotes the request that can best afford
+        the stall.
+        """
+        return math.inf
+
+    def _demotable(self, idx: int) -> bool:
+        """Whether a live problem may be parked right now.
+
+        The base sweep can demote anything; ``ServingLoop`` overrides
+        this to pin problems with rows seated in an open decode stream
+        (swapping their pages out mid-decode would corrupt the KV the
+        in-flight rows are attending over).
+        """
+        return True
+
     def _update_peaks(self) -> None:
         for idx, st in self.live.items():
             held = self.backend.problem_pages(st.tree)
@@ -742,12 +823,20 @@ class SweepScheduler:
     def _handle_pressure(self) -> None:
         """Demote victims until the live set's next step fits the pool.
 
-        Victim policy: lowest best-leaf PRM score first (the trajectory
-        the cost model values least), breaking ties toward the problem
-        holding the most pages (frees the most room per demotion).  At
-        least one problem always stays live, so the sweep makes
-        progress and parked problems eventually resume.
+        Victim policy (``repro.kvcache.allocator.select_victim``):
+        largest deadline slack first — the request that can best
+        afford a stall; the base sweep reports infinite slack for
+        everything, which degrades to the historical policy of lowest
+        best-leaf PRM score (the trajectory the cost model values
+        least), breaking ties toward the problem holding the most
+        pages (frees the most room per demotion).  At least one
+        problem always stays live, so the sweep makes progress and
+        parked problems eventually resume.  Problems the subclass pins
+        (``_demotable`` False — e.g. rows seated in an open decode
+        stream) are never victims and retire-in-place only when
+        exhausted AND unpinned.
         """
+        from repro.kvcache.allocator import VictimCandidate, select_victim
         while len(self.live) > 1:
             free = self.backend.capacity()["free_pages"]
             need = sum(self._step_need(st) for st in self.live.values())
@@ -756,17 +845,21 @@ class SweepScheduler:
             # retire exhausted problems before picking a swap victim:
             # their pages free outright, no spill traffic needed (the
             # demand phase would retire them this same global step)
-            done = [i for i in self.live if self.live[i].exhausted]
+            done = [i for i in self.live
+                    if self.live[i].exhausted and self._demotable(i)]
             if done:
                 for i in done:
                     lc = self.live[i].demand()   # flips the state to
                     assert lc is None            # finished; never a step
                     self._retire(i)
                 continue
-            victim = min(self.live, key=lambda i: (
-                self._best_reward(self.live[i]),
-                -self._held_pages(self.live[i]), i))
-            self._park(victim)
+            cands = [VictimCandidate(key=i, slack=self._slack(i),
+                                     score=self._best_reward(self.live[i]),
+                                     pages=self._held_pages(self.live[i]))
+                     for i in self.live if self._demotable(i)]
+            if not cands:
+                return              # every live problem is pinned
+            self._park(select_victim(cands).key)
 
     def _resume_parked(self) -> None:
         """Swap parked problems back in as pages free up.
@@ -905,9 +998,7 @@ class SweepScheduler:
         self._reserved.pop(idx, None)
         self._prompt_pages.pop(idx, None)
         self._peak.pop(idx, None)
-        fin = getattr(self.backend, "finish_problem", None)
-        if fin is not None:
-            fin(st.tree)
+        _release_problem(self.backend, st.tree, self.stats)
 
     # -- one global step -----------------------------------------------
     def step(self) -> bool:
@@ -936,10 +1027,15 @@ class SweepScheduler:
             return bool(self.live or self.parked or self._queue)
         self.stats.global_steps += 1
         self.stats.problems_per_step.append(len(reqs))
-        self.stats.demand_per_step.append(
-            sum(n for _, lc in reqs for _, n in lc))
+        posted = sum(n for _, lc in reqs for _, n in lc)
         # 2. ONE expansion stream over every problem's branches
         kid_groups = _expand_multi(self.backend, reqs)
+        # occupancy counts only steps that issued a decode stream: a
+        # drain step whose demands were all pruned/at-depth expands
+        # nothing, and averaging its zero in would understate the batch
+        # fill the decode kernel actually saw
+        if any(kid_groups):
+            self.stats.demand_per_step.append(posted)
         if self._mem:
             # sample the *post-expand* page usage: this is the step's
             # true peak (every new branch still holds its pages; the

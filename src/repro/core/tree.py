@@ -40,6 +40,15 @@ class SearchTree:
                  payload=root_payload)]
         # KV time-series bookkeeping (appended by the controller each step)
         self.kv_trace: List[Dict[str, float]] = []
+        # decode-boundary trace: the step's decoded-branch set (node
+        # ids), appended by the controller the moment an expansion's
+        # children are noted — BEFORE scoring/pruning, so entry k pairs
+        # 1:1 with the k-th engine KV-trace entry of this problem (the
+        # engine books attention IO per decode, i.e. per branch set,
+        # while ``kv_trace`` above snapshots the post-prune live set).
+        # This alignment is what lets the fig2 costsim validation check
+        # measured page IO at count level instead of ratio level.
+        self.decode_trace: List[List[int]] = []
 
     # ------------------------------------------------------------------
     def add(self, parent: int, n_tokens: int, reward: float = 0.0,
@@ -97,6 +106,11 @@ class SearchTree:
     def unshared_kv_tokens(self, leaves: Sequence[int]) -> int:
         """KV tokens if every leaf kept a private contiguous cache."""
         return sum(self.path_tokens(l) for l in leaves)
+
+    # ------------------------------------------------------------------
+    def record_decode(self, candidates: Sequence[int]) -> None:
+        """Record one step's decoded-branch set (see ``decode_trace``)."""
+        self.decode_trace.append([int(c) for c in candidates])
 
     # ------------------------------------------------------------------
     def record_step(self, live_leaves: Sequence[int]) -> None:

@@ -6,5 +6,6 @@ jitted append/gather ops (pool.py).  Sharing a prefix = two block tables
 referencing the same physical pages; the paper's KV-size savings are
 exactly the refcount>1 pages this module tracks.
 """
-from .allocator import PageAllocator, SequenceHandle  # noqa: F401
+from .allocator import (PageAllocator, SequenceHandle,  # noqa: F401
+                        VictimCandidate, select_victim)
 from .pool import KVPool  # noqa: F401

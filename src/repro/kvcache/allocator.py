@@ -65,8 +65,9 @@ engine's per-layer attention calls reuse the same arrays.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 
 @dataclass
@@ -93,6 +94,39 @@ class CopyOp:
 
 class OutOfPages(RuntimeError):
     pass
+
+
+@dataclass
+class VictimCandidate:
+    """One demotion candidate for :func:`select_victim`.
+
+    ``slack`` is deadline headroom: the candidate's deadline minus the
+    current clock minus its estimated remaining cost (the serving
+    loop's SLO term).  Offline sweeps and requests without deadlines
+    use the default ``+inf``.
+    """
+    key: Any                      # caller's handle (problem index)
+    slack: float = math.inf       # deadline headroom; +inf = no deadline
+    score: float = 0.0            # best live-leaf PRM score
+    pages: int = 0                # pages held (live + spilled)
+
+
+def select_victim(candidates: Sequence[VictimCandidate]) -> VictimCandidate:
+    """Slack-aware demotion policy for page pressure.
+
+    Demote the candidate with the LARGEST slack first — the problem
+    that can best afford to wait out a spill round-trip (no-deadline
+    problems are infinitely patient, so they go before any
+    deadline-constrained one).  Ties break toward the lowest PRM score
+    (the trajectory the cost model values least), then the most pages
+    held (frees the most room per demotion), then the smallest key
+    (deterministic).  With every slack infinite this reduces exactly to
+    the historical lowest-score / most-pages policy the offline sweep
+    scheduler uses.
+    """
+    assert candidates, "no demotion candidates"
+    return min(candidates,
+               key=lambda c: (-c.slack, c.score, -c.pages, c.key))
 
 
 class PageAllocator:

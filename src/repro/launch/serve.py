@@ -1,10 +1,25 @@
-"""Serving launcher: run ETS search against a (tiny) LM + PRM, or lower
-the serve step on the production mesh.
+"""Serving launcher: an online SLO-tracked serving loop over a (tiny)
+LM + PRM, or lower the serve step on the production mesh.
 
-    PYTHONPATH=src python -m repro.launch.serve --method ets --width 16
+    # Poisson workload, token-level refill, SLO report:
+    PYTHONPATH=src python -m repro.launch.serve --rate 0.05 --requests 12
+
+    # replay a trace file (JSON list of {prompt, arrival, priority,
+    # deadline}), lock-step baseline for comparison:
+    PYTHONPATH=src python -m repro.launch.serve --trace trace.json \\
+        --no-refill
+
+    # production-mesh lowering check (unchanged):
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --dry-run
+
+Without ``--trace`` the workload is Poisson arrivals over arithmetic-
+task prompts at ``--rate`` requests per virtual time unit, with
+optional ``--priorities`` classes and a ``--deadline-slack`` SLO.  The
+clock is virtual (stage costs, not wall time), so runs are
+deterministic in ``--seed``.
 """
 import argparse
+import json
 import os
 
 
@@ -14,7 +29,22 @@ def main():
     ap.add_argument("--method", default="ets",
                     choices=["beam", "dvts", "rebase", "ets", "ets-kv"])
     ap.add_argument("--width", type=int, default=8)
-    ap.add_argument("--problems", type=int, default=5)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="Poisson workload size (ignored with --trace)")
+    ap.add_argument("--rate", type=float, default=0.05,
+                    help="arrival rate, requests per virtual time unit")
+    ap.add_argument("--trace", default=None,
+                    help="JSON request trace to replay instead of Poisson")
+    ap.add_argument("--priorities", type=int, nargs="*", default=None,
+                    help="priority classes cycled over Poisson arrivals")
+    ap.add_argument("--deadline-slack", type=float, default=None,
+                    help="per-request SLO: deadline = arrival + slack")
+    ap.add_argument("--max-live", type=int, default=4)
+    ap.add_argument("--no-refill", action="store_true",
+                    help="lock-step barrier baseline (refill off)")
+    ap.add_argument("--first-finish", action="store_true",
+                    help="halt each problem at its first completed answer")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--train-steps", type=int, default=250)
     ap.add_argument("--dry-run", action="store_true")
     ap.add_argument("--shape", default="decode_32k")
@@ -30,10 +60,83 @@ def main():
         print(rec.get("status"), rec.get("memory", rec.get("error")))
         return
 
-    # end-to-end: train tiny models, then search
-    from examples_lib import run_e2e_search  # noqa: F401 (examples provide)
-    raise SystemExit(
-        "Use examples/train_and_search.py for the runnable e2e driver.")
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import (ETSConfig, SearchConfig, ServingConfig,
+                            ServingLoop, load_trace, poisson_requests)
+    from repro.models.model import build_model
+    from repro.serving.engine import EngineConfig, PagedEngine
+    from repro.serving.search_backend import BackendConfig, LMBackend
+    from repro.training import TrainConfig, train_lm, train_prm
+    from repro.training.task import (ArithmeticTask, EOS, NEWLINE,
+                                     VOCAB_SIZE, encode)
+
+    task = ArithmeticTask(n_ops=4, seq_len=64)
+    lm_cfg = dataclasses.replace(get_config(args.arch),
+                                 vocab_size=VOCAB_SIZE)
+    lm = build_model(lm_cfg, remat=False)
+    lm_params, _ = train_lm(lm, lm.init(jax.random.key(0)), task,
+                            TrainConfig(steps=args.train_steps, batch=32,
+                                        log_every=10 ** 9))
+    prm = build_model(dataclasses.replace(lm_cfg, n_layers=2),
+                      with_value_head=True, remat=False)
+    prm_params, _ = train_prm(prm, prm.init(jax.random.key(1)), task,
+                              TrainConfig(steps=args.train_steps, batch=32,
+                                          log_every=10 ** 9))
+    emb_cfg = dataclasses.replace(get_config("tiny-embedder"),
+                                  vocab_size=VOCAB_SIZE)
+    emb = build_model(emb_cfg, remat=False)
+    emb_params = emb.init(jax.random.key(2))
+
+    engine = PagedEngine(lm, lm_params, EngineConfig(
+        n_pages=2048, page_size=8, max_batch=max(args.width * 2, 32),
+        max_seq_len=200, attention="tree"))
+    backend = LMBackend(engine, prm, prm_params, emb, emb_params,
+                        BackendConfig(step_token=NEWLINE, eos_token=EOS,
+                                      max_step_tokens=12, max_depth=8),
+                        answer_fn=ArithmeticTask.extract_answer,
+                        seed=500)
+    scfg = SearchConfig(method=args.method, width=args.width, max_steps=8,
+                        ets=ETSConfig(lambda_b=2.0, lambda_d=1.0,
+                                      cluster_threshold=0.15))
+
+    if args.trace:
+        requests = load_trace(args.trace)
+        answers = None
+    else:
+        rng = np.random.default_rng(args.seed)
+        problems = [task.sample_problem(rng)
+                    for _ in range(args.requests)]
+        requests = poisson_requests(
+            [encode(p) for p, _, _ in problems], rate=args.rate,
+            seed=args.seed, priorities=args.priorities,
+            deadline_slack=args.deadline_slack)
+        answers = [a for _, _, a in problems]
+
+    loop = ServingLoop(backend, scfg, requests, max_live=args.max_live,
+                       cfg=ServingConfig(refill=not args.no_refill,
+                                         first_finish=args.first_finish))
+    results = loop.run()
+
+    rep = loop.slo.report()
+    mode = "lock-step" if args.no_refill else "refill"
+    print(f"\n== online serving ({len(requests)} requests, {mode}"
+          f"{', first-finish' if args.first_finish else ''}, "
+          f"max_live={args.max_live}) ==")
+    for k in ("n_finished", "p50_tta", "p90_tta", "p99_tta", "mean_tta",
+              "max_tta", "deadline_hit_rate"):
+        v = rep.get(k)
+        print(f"  {k:18s}: "
+              + (f"{v:.2f}" if isinstance(v, float) else str(v)))
+    if answers is not None:
+        acc = sum(int(r.answer == a)
+                  for r, a in zip(results, answers)) / len(answers)
+        print(f"  {'accuracy':18s}: {acc:.2f}")
+    print(json.dumps(rep))
 
 
 if __name__ == "__main__":

@@ -9,7 +9,10 @@ what PRM tree search actually needs (step-level expand -> score -> prune):
     (``prefill(tokens)`` is the single-prompt convenience wrapper);
   * ``branch(seq, n)``    — fork block tables (refcount++, CoW last page);
   * ``decode(seq_ids, …)``— ONE jitted step decodes all live branches in
-    lock-step against the pool via block tables;
+    lock-step against the pool via block tables; implemented on top of
+    :class:`DecodeStream`, the persistent slot-based stream whose rows
+    can be refilled mid-flight (the online serving loop's token-level
+    refill) while preserving per-row bit-identity;
   * free / stats          — physical vs logical page accounting (the
     engine-level measurement behind Table 1's KV reduction);
   * ``swap_out(seq_ids)`` / ``swap_in(seq_ids)`` — page demotion under
@@ -573,6 +576,25 @@ class PagedEngine:
         for ns, pages in pages_by_ns.items():
             uniq_ns[ns] = uniq_ns.get(ns, 0) + len(pages)
 
+    def _pad_key_block(self):
+        """(max_batch,) inert key chains for unoccupied decode rows.
+
+        Cached: the pad keys never carry sampled values (inactive rows'
+        samples are discarded), they only keep the all-rows key split
+        shape-static."""
+        cache = getattr(self, "_pad_keys", None)
+        if cache is None or cache.shape[0] < self.ecfg.max_batch:
+            cache = jax.random.split(jax.random.key(0), self.ecfg.max_batch)
+            self._pad_keys = cache
+        return cache[:self.ecfg.max_batch]
+
+    def open_stream(self, temperature: float = 1.0,
+                    stop_tokens: Sequence[int] = ()) -> "DecodeStream":
+        """Open a persistent row-refillable decode stream (see
+        :class:`DecodeStream`)."""
+        return DecodeStream(self, temperature=temperature,
+                            stop_tokens=stop_tokens)
+
     def decode(self, seq_ids: Sequence[int], n_tokens: int,
                key=None, temperature: float = 1.0,
                stop_tokens: Sequence[int] = (),
@@ -592,99 +614,184 @@ class PagedEngine:
         key per sequence — the sweep scheduler derives them per problem
         so cross-problem batches reproduce solo runs bit-for-bit) or a
         single ``key`` that is split into per-row chains.
+
+        Implemented as the drain-to-empty special case of
+        :class:`DecodeStream`: all sequences enter together and the
+        stream runs until the last one stops — exactly the historical
+        closed loop, so every caller of ``decode`` keeps its streams
+        bit-for-bit while the serving loop refills the same stream
+        mid-flight.
         """
-        from .sampler import sample_tokens_rowwise
         ecfg = self.ecfg
-        tree_mode = ecfg.attention == "tree"
         ids = list(seq_ids)
         assert len(ids) <= ecfg.max_batch, (len(ids), ecfg.max_batch)
         if row_keys is None:
             assert key is not None, "pass key or row_keys"
             row_keys = jax.random.split(key, len(ids))
+        self.n_decode_calls += 1
+        if n_tokens <= 0:
+            return {i: [] for i in ids}
+        stream = DecodeStream(self, temperature=temperature,
+                              stop_tokens=stop_tokens)
+        stream.add(ids, row_keys, n_tokens)
+        while stream.live:
+            stream.step()
+        return {i: stream.out[i] for i in ids}
+
+
+class DecodeStream:
+    """Persistent row-refillable lock-step decode over one engine.
+
+    Generalizes the engine's ``decode()`` loop: sequences occupy slots
+    of the static ``max_batch`` row grid, ``step()`` runs ONE jitted
+    lock-step iteration over the occupied slots, and ``add()`` may seat
+    new sequences into free slots at ANY iteration boundary — including
+    while other rows keep decoding.  This is the token-level refill the
+    online serving loop is built on: when a row stops mid-step (stop
+    token / budget), its slot backfills from another live problem's
+    demand instead of waiting for a global step barrier.
+
+    Bit-identity contract: a row's sampled stream depends only on its
+    own key chain (seeded by its ``add()`` row key, advanced once per
+    iteration it occupies a slot), its own logits (per-row attention
+    over its own pages) and its stop history — never on which slots are
+    occupied around it, when it was added, or when neighbours retire.
+    Any add/retire schedule therefore reproduces the one-call
+    ``decode()`` streams bit-for-bit; ``decode()`` itself is the
+    add-everything-then-drain special case.
+    """
+
+    def __init__(self, engine: PagedEngine, *, temperature: float = 1.0,
+                 stop_tokens: Sequence[int] = ()):
+        self.engine = engine
+        self.temperature = temperature
+        self.stop = set(int(s) for s in stop_tokens)
+        B = engine.ecfg.max_batch
+        self._slot_seq: List[Optional[int]] = [None] * B
+        self._slot_of: Dict[int, int] = {}
+        self._budget: Dict[int, int] = {}
+        # every slot always carries a key chain; free slots hold inert
+        # pad chains whose samples are never consumed
+        self._keys = engine._pad_key_block()
+        self.out: Dict[int, List[int]] = {}
+
+    @property
+    def live(self) -> List[int]:
+        """Sequences currently decoding, in slot order."""
+        return [i for i in self._slot_seq if i is not None]
+
+    @property
+    def n_free(self) -> int:
+        return sum(1 for s in self._slot_seq if s is None)
+
+    def add(self, seq_ids: Sequence[int], row_keys, n_tokens: int) -> None:
+        """Seat sequences into free slots (lowest index first), each with
+        its own sampling key and a per-row budget of ``n_tokens``."""
+        ids = list(seq_ids)
+        if not ids:
+            return
         keys = jnp.asarray(row_keys)
         assert keys.shape[0] == len(ids), (keys.shape, len(ids))
-        if keys.shape[0] < ecfg.max_batch:   # pad rows get inert dummy keys
-            pad = ecfg.max_batch - keys.shape[0]
-            cache = getattr(self, "_pad_keys", None)
-            if cache is None or cache.shape[0] < pad:
-                cache = jax.random.split(jax.random.key(0), ecfg.max_batch)
-                self._pad_keys = cache
-            keys = jnp.concatenate([keys, cache[:pad]])
-        out: Dict[int, List[int]] = {i: [] for i in ids}
-        done = {i: False for i in ids}
-        stop = set(int(s) for s in stop_tokens)
-        self.n_decode_calls += 1
+        free = [j for j, s in enumerate(self._slot_seq) if s is None]
+        assert len(ids) <= len(free), (len(ids), len(free))
+        taken = free[:len(ids)]
+        for j, i in zip(taken, ids):
+            assert i not in self._slot_of, (i, "already streaming")
+            self._slot_seq[j] = i
+            self._slot_of[i] = j
+            self._budget[i] = int(n_tokens)
+            self.out[i] = []
+        self._keys = self._keys.at[jnp.asarray(taken)].set(keys)
 
-        for _ in range(n_tokens):
-            live = [i for i in ids if not done[i]]
-            if not live:
-                break
-            self.n_decode_steps += 1
-            # reserve one slot per live sequence (may CoW)
-            copy_ops = []
-            for i in live:
-                copy_ops += self.alloc.append_tokens(i, 1)
-            self.pool.copy_pages(copy_ops)
+    def _free_slot(self, i: int) -> None:
+        # the retired slot's key chain stays in the array and keeps
+        # advancing inertly until add() overwrites it with a fresh key
+        j = self._slot_of.pop(i)
+        self._slot_seq[j] = None
+        self._budget.pop(i, None)
 
-            B = ecfg.max_batch
-            T = self.max_pages_per_seq
-            tok = np.zeros(B, np.int32)
-            bt = None if tree_mode else np.full((B, T), -1, np.int32)
-            lens = np.zeros(B, np.int32)
-            pages = np.full(B, self.dump_page, np.int32)  # inactive -> dump
-            slots = np.zeros(B, np.int32)
-            act = np.zeros(B, bool)
-            rows: List[Optional[int]] = [None] * B
-            for j, i in enumerate(ids):
-                if done[i]:
-                    continue
-                h = self.alloc.seqs[i]
-                hist = self.tokens[i]
-                tok[j] = hist[-1]
-                if not tree_mode:
-                    bt[j, :len(h.block_table)] = h.block_table
-                pos = h.length - 1          # slot reserved for the new token
-                lens[j] = pos
-                pages[j] = h.block_table[pos // ecfg.page_size]
-                slots[j] = pos % ecfg.page_size
-                act[j] = True
-                rows[j] = i
+    def step(self) -> List[int]:
+        """Run ONE lock-step iteration over the occupied slots.
 
-            if tree_mode:
-                meta = self.alloc.tree_metadata(rows,
-                                                pad_page=self.dump_page)
-                self._count_streamed_pages(live, meta.n_unique,
-                                           meta.n_logical)
-                logits, self.pool.k, self.pool.v = self._tree_decode_fn(
-                    self.params, jnp.asarray(tok), jnp.asarray(lens),
-                    jnp.asarray(pages), jnp.asarray(slots), jnp.asarray(act),
-                    jnp.asarray(meta.page_list), jnp.asarray(meta.page_mask),
-                    jnp.asarray(meta.page_lens), self.pool.k, self.pool.v)
-            else:
-                # paged reads stream every page of every live row
-                n_logical = sum(len(self.alloc.seqs[i].block_table)
-                                for i in live)
-                self._count_streamed_pages(live, n_logical, n_logical)
-                logits, self.pool.k, self.pool.v = self._decode_fn(
-                    self.params, jnp.asarray(tok), jnp.asarray(bt),
-                    jnp.asarray(lens), jnp.asarray(pages), jnp.asarray(slots),
-                    jnp.asarray(act), self.pool.k, self.pool.v)
-            if ecfg.trace_logits:
-                self.logits_trace.append(np.asarray(logits))
-            # advance every row's own key chain (done rows' keys advance
-            # too, but their samples are never consumed — a row's stream
-            # depends only on how many iterations it was live for)
-            pair = _split_rows(keys)
-            keys, subs = pair[:, 0], pair[:, 1]
-            new = np.asarray(sample_tokens_rowwise(subs, logits,
-                                                   temperature))
-            for j, i in enumerate(ids):
-                if done[i] or not act[j]:
-                    continue
-                t = int(new[j])
-                self.tokens[i].append(t)
-                out[i].append(t)
-                self.n_decoded_tokens += 1
-                if t in stop or len(self.tokens[i]) >= ecfg.max_seq_len:
-                    done[i] = True
-        return out
+        Returns the sequences that stopped this iteration (stop token,
+        per-row budget, or max_seq_len) — their slots are free for
+        ``add()`` before the next iteration.
+        """
+        from .sampler import sample_tokens_rowwise
+        eng = self.engine
+        ecfg = eng.ecfg
+        tree_mode = ecfg.attention == "tree"
+        live = self.live
+        if not live:
+            return []
+        eng.n_decode_steps += 1
+        # reserve one slot per live sequence (may CoW)
+        copy_ops = []
+        for i in live:
+            copy_ops += eng.alloc.append_tokens(i, 1)
+        eng.pool.copy_pages(copy_ops)
+
+        B = ecfg.max_batch
+        T = eng.max_pages_per_seq
+        tok = np.zeros(B, np.int32)
+        bt = None if tree_mode else np.full((B, T), -1, np.int32)
+        lens = np.zeros(B, np.int32)
+        pages = np.full(B, eng.dump_page, np.int32)   # inactive -> dump
+        slots = np.zeros(B, np.int32)
+        act = np.zeros(B, bool)
+        rows: List[Optional[int]] = [None] * B
+        for j, i in enumerate(self._slot_seq):
+            if i is None:
+                continue
+            h = eng.alloc.seqs[i]
+            tok[j] = eng.tokens[i][-1]
+            if not tree_mode:
+                bt[j, :len(h.block_table)] = h.block_table
+            pos = h.length - 1              # slot reserved for the new token
+            lens[j] = pos
+            pages[j] = h.block_table[pos // ecfg.page_size]
+            slots[j] = pos % ecfg.page_size
+            act[j] = True
+            rows[j] = i
+
+        if tree_mode:
+            meta = eng.alloc.tree_metadata(rows, pad_page=eng.dump_page)
+            eng._count_streamed_pages(live, meta.n_unique, meta.n_logical)
+            logits, eng.pool.k, eng.pool.v = eng._tree_decode_fn(
+                eng.params, jnp.asarray(tok), jnp.asarray(lens),
+                jnp.asarray(pages), jnp.asarray(slots), jnp.asarray(act),
+                jnp.asarray(meta.page_list), jnp.asarray(meta.page_mask),
+                jnp.asarray(meta.page_lens), eng.pool.k, eng.pool.v)
+        else:
+            # paged reads stream every page of every live row
+            n_logical = sum(len(eng.alloc.seqs[i].block_table)
+                            for i in live)
+            eng._count_streamed_pages(live, n_logical, n_logical)
+            logits, eng.pool.k, eng.pool.v = eng._decode_fn(
+                eng.params, jnp.asarray(tok), jnp.asarray(bt),
+                jnp.asarray(lens), jnp.asarray(pages), jnp.asarray(slots),
+                jnp.asarray(act), eng.pool.k, eng.pool.v)
+        if ecfg.trace_logits:
+            eng.logits_trace.append(np.asarray(logits))
+        # advance every slot's own key chain (freed slots' keys advance
+        # too, but their samples are never consumed — a row's stream
+        # depends only on how many iterations it was live for)
+        pair = _split_rows(self._keys)
+        self._keys, subs = pair[:, 0], pair[:, 1]
+        new = np.asarray(sample_tokens_rowwise(subs, logits,
+                                               self.temperature))
+        finished: List[int] = []
+        for j, i in enumerate(self._slot_seq):
+            if i is None:
+                continue
+            t = int(new[j])
+            eng.tokens[i].append(t)
+            self.out[i].append(t)
+            eng.n_decoded_tokens += 1
+            self._budget[i] -= 1
+            if t in self.stop or len(eng.tokens[i]) >= ecfg.max_seq_len \
+                    or self._budget[i] <= 0:
+                finished.append(i)
+        for i in finished:
+            self._free_slot(i)
+        return finished

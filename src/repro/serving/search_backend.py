@@ -109,6 +109,25 @@ class BackendConfig:
     temperature: float = 1.0
 
 
+@dataclass
+class ExpandTicket:
+    """One problem's expansion split at its decode boundary.
+
+    Returned by ``LMBackend.expand_begin``: the leaves are already
+    branched (engine sequences exist, pages reserved) and the problem's
+    step key is consumed, but nothing is decoded yet.  The caller
+    decodes ``branches`` with per-row ``row_keys`` on whatever schedule
+    it likes (one drain-to-empty stream, or row-by-row refill of a
+    persistent ``DecodeStream``) and hands the token streams to
+    ``expand_finish``.  ``plan`` keeps the (leaf, branch ids) grouping
+    so children come back in ``leaf_counts`` order.
+    """
+    tree: SearchTree
+    plan: List[Tuple[int, List[int]]]
+    branches: List[int]
+    row_keys: Optional[jax.Array]
+
+
 def _pad_bucket(seqs: Sequence[Sequence[int]]):
     """Pad token sequences into a power-of-two (rows, length) bucket.
 
@@ -266,6 +285,67 @@ class LMBackend:
         (the one-problem case of ``expand_multi``)."""
         return self.expand_multi([(tree, leaf_counts)])[0]
 
+    # -- row-level demand interface (the serving loop's refill protocol) --
+    # One expansion is split at its decode boundary: ``expand_begin``
+    # does everything that must happen atomically per problem (branch
+    # the leaves, consume ONE step key from the problem's chain, derive
+    # per-branch row keys), ``expand_finish`` turns the decoded token
+    # streams into tree children.  Between the two, the caller owns the
+    # decode — ``expand_multi`` drains everything in one lock-step
+    # stream, while the online serving loop feeds the same branches into
+    # a persistent ``DecodeStream`` row by row as slots free up.  Row
+    # keys make the schedule irrelevant: a branch's stream depends only
+    # on its own key and logits, so both drivers are bit-identical.
+
+    def expand_begin(self, tree: SearchTree,
+                     leaf_counts: Sequence[Tuple[int, int]]
+                     ) -> "ExpandTicket":
+        """Branch a problem's live leaves and derive its row keys,
+        without decoding.  Consumes one step key iff any leaf branches."""
+        ns = tree.node(0).payload["ns"]
+        plan: List[Tuple[int, List[int]]] = []
+        branches: List[int] = []
+        for leaf, n in leaf_counts:
+            node = tree.node(leaf)
+            if node.depth >= self.bcfg.max_depth or n <= 0:
+                continue
+            bids = self.engine.branch(node.payload["seq_id"], n)
+            # once branched, the root's pages live on through its
+            # children's refcounts — drop the sweep protection
+            self._protected.discard(node.payload["seq_id"])
+            self._ns_seqs.setdefault(ns, set()).update(bids)
+            plan.append((leaf, bids))
+            branches.extend(bids)
+        row_keys = None
+        if branches:
+            step_key = self._next_key(ns)
+            row_keys = _fold_rows(step_key,
+                                  jnp.arange(len(branches), dtype=jnp.uint32))
+        return ExpandTicket(tree=tree, plan=plan, branches=branches,
+                            row_keys=row_keys)
+
+    def expand_finish(self, ticket: "ExpandTicket",
+                      outs: Dict[int, List[int]]) -> List[int]:
+        """Turn a ticket's decoded streams (``outs``: seq id -> step
+        tokens) into tree children, grouped by leaf in plan order."""
+        kids: List[int] = []
+        for leaf, bids in ticket.plan:
+            for bid in bids:
+                kids.append(self._add_child(ticket.tree, leaf, bid,
+                                            outs[bid]))
+        return kids
+
+    def open_stream(self):
+        """A persistent row-refillable decode stream configured with
+        this backend's step semantics (see ``DecodeStream``)."""
+        return self.engine.open_stream(
+            temperature=self.bcfg.temperature,
+            stop_tokens=(self.bcfg.step_token, self.bcfg.eos_token))
+
+    def stream_budget(self) -> int:
+        """Per-row token budget of one search step."""
+        return self.bcfg.max_step_tokens
+
     def expand_multi(self, reqs: Sequence[Tuple[SearchTree,
                                                 Sequence[Tuple[int, int]]]]
                      ) -> List[List[int]]:
@@ -281,32 +361,13 @@ class LMBackend:
         the sweep reproduces solo runs bit-for-bit.  Children are
         returned per request, grouped by leaf in ``leaf_counts`` order.
         """
-        plans: List[Tuple[SearchTree, List[Tuple[int, List[int]]]]] = []
-        all_branches: List[int] = []
-        key_groups: List[jax.Array] = []
-        for tree, leaf_counts in reqs:
-            ns = tree.node(0).payload["ns"]
-            plan: List[Tuple[int, List[int]]] = []
-            branches: List[int] = []
-            for leaf, n in leaf_counts:
-                node = tree.node(leaf)
-                if node.depth >= self.bcfg.max_depth or n <= 0:
-                    continue
-                bids = self.engine.branch(node.payload["seq_id"], n)
-                # once branched, the root's pages live on through its
-                # children's refcounts — drop the sweep protection
-                self._protected.discard(node.payload["seq_id"])
-                self._ns_seqs.setdefault(ns, set()).update(bids)
-                plan.append((leaf, bids))
-                branches.extend(bids)
-            plans.append((tree, plan))
-            if branches:
-                step_key = self._next_key(ns)
-                key_groups.append(_fold_rows(
-                    step_key, jnp.arange(len(branches), dtype=jnp.uint32)))
-                all_branches.extend(branches)
+        tickets = [self.expand_begin(tree, leaf_counts)
+                   for tree, leaf_counts in reqs]
+        all_branches = [b for t in tickets for b in t.branches]
         outs: Dict[int, List[int]] = {}
         if all_branches:
+            key_groups = [t.row_keys for t in tickets
+                          if t.row_keys is not None]
             row_keys = key_groups[0] if len(key_groups) == 1 \
                 else jnp.concatenate(key_groups)
             mb = self.engine.ecfg.max_batch
@@ -316,14 +377,7 @@ class LMBackend:
                     temperature=self.bcfg.temperature,
                     stop_tokens=(self.bcfg.step_token, self.bcfg.eos_token),
                     row_keys=row_keys[i:i + mb]))
-        results: List[List[int]] = []
-        for tree, plan in plans:
-            kids: List[int] = []
-            for leaf, bids in plan:
-                for bid in bids:
-                    kids.append(self._add_child(tree, leaf, bid, outs[bid]))
-            results.append(kids)
-        return results
+        return [self.expand_finish(t, outs) for t in tickets]
 
     def score(self, tree: SearchTree, node: int) -> float:
         sid = tree.node(node).payload["seq_id"]

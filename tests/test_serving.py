@@ -1,0 +1,341 @@
+"""Online serving loop: a degenerate workload (all arrivals at t=0, no
+deadlines) is bit-identical to ``run_search_many`` in both scheduling
+modes and both attention modes; random timed/prioritized/deadlined
+workloads never change any request's *result* (scheduling-invariance —
+the property token-level refill must preserve) and never starve a
+request; occupancy accounting excludes drain steps that issue no decode
+stream; slack-aware victim selection degrades to the historical policy
+without deadlines."""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_shim import HealthCheck, given, settings, st
+
+from repro.configs import get_config
+from repro.core import (ETSConfig, Request, SearchConfig, ServingConfig,
+                        ServingLoop, SearchTree, SweepScheduler,
+                        poisson_requests, run_search, run_search_many)
+from repro.kvcache import VictimCandidate, select_victim
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, PagedEngine
+from repro.serving.search_backend import BackendConfig, LMBackend
+
+
+def _tree_signature(tree):
+    """Backend-independent tree identity: structure, rewards, finish
+    flags, and token payloads (engine seq ids are allocation-order
+    artifacts and excluded on purpose)."""
+    out = []
+    for n in tree.nodes:
+        toks = sem = None
+        if isinstance(n.payload, dict):
+            toks = n.payload.get("tokens")
+            sem = n.payload.get("sem")
+        out.append((n.id, n.parent, n.n_tokens, n.reward, n.finished,
+                    toks if toks is None else list(toks), sem))
+    return out
+
+
+def _assert_results_identical(serial, sweep):
+    assert len(serial) == len(sweep)
+    for rs, rc in zip(serial, sweep):
+        assert _tree_signature(rs.tree) == _tree_signature(rc.tree)
+        assert rs.answer == rc.answer
+        assert rs.completed == rc.completed
+        assert rs.steps == rc.steps
+
+
+# ---------------------------------------------------------------------------
+# Deterministic prompt-keyed stub backend (no models, no engine): every
+# child is a pure function of (prompt, parent path, sibling index), so
+# any scheduler interleaving must reproduce solo runs bit-for-bit.
+# ---------------------------------------------------------------------------
+
+class StubBackend:
+    def __init__(self, seed=7, depth=3, finish_p=0.2):
+        self.seed, self.depth, self.finish_p = seed, depth, finish_p
+
+    def start(self, prompt):
+        return SearchTree(root_tokens=len(prompt),
+                          root_payload={"prompt": tuple(prompt)})
+
+    def _rng(self, tree, leaf, j):
+        pl = tree.node(0).payload["prompt"]
+        return np.random.default_rng(
+            (self.seed,) + pl + tuple(tree.path(leaf)) + (j,))
+
+    def expand(self, tree, leaf, n):
+        node = tree.node(leaf)
+        if node.depth >= self.depth:
+            return []
+        kids = []
+        for j in range(n):
+            r = self._rng(tree, leaf, j)
+            fin = (node.depth + 1 >= self.depth
+                   or r.random() < self.finish_p)
+            kids.append(tree.add(leaf, n_tokens=int(r.integers(1, 5)),
+                                 finished=fin,
+                                 payload={"v": float(r.random())}))
+        return kids
+
+    def score(self, tree, node):
+        return tree.node(node).payload["v"]
+
+    def answer(self, tree, leaf):
+        return f"A{int(tree.node(leaf).payload['v'] * 100)}"
+
+
+STUB_SCFG = SearchConfig(method="beam", width=4, max_steps=3)
+STUB_PROMPTS = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [10], [11, 12]]
+
+
+def _stub_serial(prompts, scfg=STUB_SCFG):
+    be = StubBackend()
+    return [run_search(be, scfg, tree=be.start(p)) for p in prompts]
+
+
+# ---------------------------------------------------------------------------
+# Degenerate-trace equivalence (stub): both scheduling modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("refill", [False, True])
+def test_degenerate_trace_matches_batch_sweep_stub(refill):
+    """All arrivals at t=0, no deadlines: the serving loop is just
+    another scheduler interleaving and must reproduce the batch sweep
+    (itself bit-identical to solo runs) exactly."""
+    base = run_search_many(StubBackend(), STUB_SCFG, STUB_PROMPTS)
+    loop = ServingLoop(StubBackend(), STUB_SCFG,
+                       [Request(prompt=p) for p in STUB_PROMPTS],
+                       cfg=ServingConfig(refill=refill))
+    _assert_results_identical(base, loop.run())
+    rep = loop.slo.report()
+    assert rep["n_finished"] == len(STUB_PROMPTS)
+    assert rep["deadline_hit_rate"] is None
+    assert 0 < rep["p50_tta"] <= rep["p99_tta"] <= rep["max_tta"]
+
+
+# ---------------------------------------------------------------------------
+# Property: random arrivals / priorities / deadlines never change any
+# request's result, and no request is starved (refill included)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.tuples(st.integers(0, 50),        # arrival time
+                          st.integers(0, 2),         # priority class
+                          st.integers(0, 1)),        # has a deadline?
+                min_size=2, max_size=6),
+       st.integers(1, 4),                            # max_live
+       st.integers(0, 1))                            # first_finish
+def test_timed_workload_scheduling_invariance(specs, max_live,
+                                              first_finish):
+    """Whatever the arrival pattern, priority mix, deadline pressure,
+    or admission cap, every request finishes (deadlines are SLOs, not
+    aborts — nothing is starved or dropped) and — without First-Finish
+    truncation — each request's search result is bit-identical to its
+    solo run: timing may only move *when* work happens, never what any
+    problem computes."""
+    prompts = [[100 + i, i % 7] for i in range(len(specs))]
+    reqs = [Request(prompt=p, arrival=float(a), priority=prio,
+                    deadline=float(a + 40) if dl else None)
+            for p, (a, prio, dl) in zip(prompts, specs)]
+    loop = ServingLoop(StubBackend(), STUB_SCFG, reqs,
+                       max_live=max_live,
+                       cfg=ServingConfig(refill=True,
+                                         first_finish=bool(first_finish)))
+    out = loop.run()
+    assert len(out) == len(reqs)
+    for i, req in enumerate(reqs):
+        assert i in loop.slo.finished           # nothing starved
+        assert loop.slo.finished[i] >= req.arrival
+        assert loop.slo.admitted[i] >= req.arrival
+        assert out[i].completed, "every request produced answers"
+    if not first_finish:
+        _assert_results_identical(_stub_serial(prompts), out)
+
+
+def test_first_finish_halts_at_first_answer():
+    """First-Finish mode stops each problem at its first completed
+    trajectory: never later, usually fewer steps, and strictly earlier
+    virtual finish times overall than run-to-width."""
+    reqs = [Request(prompt=p) for p in STUB_PROMPTS]
+    full = ServingLoop(StubBackend(), STUB_SCFG, reqs,
+                       cfg=ServingConfig(refill=True))
+    full_out = full.run()
+    ff = ServingLoop(StubBackend(), STUB_SCFG, reqs,
+                     cfg=ServingConfig(refill=True, first_finish=True))
+    ff_out = ff.run()
+    for a, b in zip(ff_out, full_out):
+        assert a.steps <= b.steps
+        assert len(a.completed) >= 1
+        # the early answers are a prefix of the full run's (identical
+        # streams, just truncated earlier)
+        assert a.completed == b.completed[:len(a.completed)]
+    assert sum(ff.slo.finished.values()) < sum(full.slo.finished.values())
+
+
+# ---------------------------------------------------------------------------
+# Occupancy accounting: drain steps that issue no decode stream are
+# excluded from the batch-fill mean (the denominator bugfix)
+# ---------------------------------------------------------------------------
+
+class DrainStub(StubBackend):
+    """Children never finish; expansion just dries up at the depth
+    wall.  The step after the wall posts demand (live unfinished
+    leaves) but expands nothing — a drain step with no decode stream."""
+
+    def expand(self, tree, leaf, n):
+        node = tree.node(leaf)
+        if node.depth >= self.depth:
+            return []
+        return [tree.add(leaf, n_tokens=1, finished=False,
+                         payload={"v": float(
+                             self._rng(tree, leaf, j).random())})
+                for j in range(n)]
+
+
+def test_mean_occupancy_excludes_no_decode_steps():
+    """A stub whose problems all hit the depth wall posts demand on its
+    final global step but expands nothing — that step must not appear
+    in ``demand_per_step`` (it issued no decode stream) while still
+    counting as a global step."""
+    depth = 2
+    scfg = SearchConfig(method="beam", width=4, max_steps=depth + 2,
+                        keep=2)
+    be = DrainStub(depth=depth)
+    sched = SweepScheduler(be, scfg, prompts=[[1, 2], [3, 4, 5]])
+    sched.run()
+    # depth decode-issuing steps + one drain step that expanded nothing
+    assert sched.stats.global_steps == depth + 1
+    assert len(sched.stats.demand_per_step) == depth
+    assert all(d > 0 for d in sched.stats.demand_per_step)
+    # the mean is over decode-issuing steps only: with finish_p=0 both
+    # problems post full width from step 2 on, so the mean can never be
+    # dragged below the per-step posted demand by zero-decode steps
+    assert sched.stats.mean_occupancy() == \
+        sum(sched.stats.demand_per_step) / depth
+
+
+# ---------------------------------------------------------------------------
+# Slack-aware victim selection (unit)
+# ---------------------------------------------------------------------------
+
+def test_select_victim_prefers_largest_slack_then_historical_policy():
+    inf = math.inf
+    # deadlines present: the request that can best afford a stall loses
+    v = select_victim([VictimCandidate(key="a", slack=3.0, score=0.1),
+                       VictimCandidate(key="b", slack=9.0, score=0.9),
+                       VictimCandidate(key="c", slack=-1.0, score=0.0)])
+    assert v.key == "b"
+    # no deadlines (all slack inf): lowest score, then most pages,
+    # then smallest key — exactly the historical demotion policy
+    v = select_victim([VictimCandidate(key=0, slack=inf, score=0.5,
+                                       pages=9),
+                       VictimCandidate(key=1, slack=inf, score=0.2,
+                                       pages=1),
+                       VictimCandidate(key=2, slack=inf, score=0.2,
+                                       pages=4)])
+    assert v.key == 2
+    v = select_victim([VictimCandidate(key=5, slack=inf, score=0.2,
+                                       pages=4),
+                       VictimCandidate(key=3, slack=inf, score=0.2,
+                                       pages=4)])
+    assert v.key == 3
+
+
+# ---------------------------------------------------------------------------
+# LM backend: degenerate-trace bit-identity end to end, both attention
+# modes, both scheduling modes — token-level refill included
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_models():
+    lm_cfg = dataclasses.replace(get_config("tiny-lm"), n_layers=2,
+                                 d_model=64, n_heads=4, n_kv_heads=2,
+                                 d_ff=128)
+    lm = build_model(lm_cfg, remat=False)
+    lm_params = lm.init(jax.random.key(0))
+    prm = build_model(dataclasses.replace(lm_cfg, n_layers=1),
+                      with_value_head=True, remat=False)
+    prm_params = prm.init(jax.random.key(1))
+    emb_cfg = dataclasses.replace(get_config("tiny-embedder"), n_layers=1,
+                                  d_model=64, n_heads=2, n_kv_heads=2,
+                                  d_ff=128)
+    emb = build_model(emb_cfg, remat=False)
+    emb_params = emb.init(jax.random.key(2))
+    return (lm, lm_params), (prm, prm_params), (emb, emb_params)
+
+
+def _lm_backend(tiny_models, attention, n_pages=256, max_batch=32):
+    (lm, lm_params), (prm, prm_params), (emb, emb_params) = tiny_models
+    engine = PagedEngine(lm, lm_params, EngineConfig(
+        n_pages=n_pages, page_size=8, max_batch=max_batch, max_seq_len=128,
+        attention=attention))
+    backend = LMBackend(engine, prm, prm_params, emb, emb_params,
+                        BackendConfig(step_token=2, eos_token=3,
+                                      max_step_tokens=6, max_depth=4),
+                        answer_fn=lambda full: None, seed=13)
+    return engine, backend
+
+
+PROMPTS = [list(range(4, 4 + n)) for n in (17, 23, 9, 30)]
+SCFG = SearchConfig(method="ets", width=5, max_steps=3,
+                    ets=ETSConfig(lambda_b=1.0, lambda_d=1.0,
+                                  cluster_threshold=0.2))
+
+
+@pytest.mark.parametrize("attention", ["paged", "tree"])
+@pytest.mark.parametrize("refill", [False, True])
+def test_lm_degenerate_trace_bit_identical(tiny_models, attention,
+                                           refill):
+    """The tentpole acceptance bar: a degenerate arrival trace (all
+    t=0, no deadlines) through the serving loop — lock-step barrier OR
+    token-level refill through the persistent DecodeStream — is
+    bit-identical to ``run_search_many`` on the same backend, in both
+    attention modes.  Composition-independent row keys are what make
+    the refill schedule invisible."""
+    _, be_base = _lm_backend(tiny_models, attention)
+    base = run_search_many(be_base, SCFG, PROMPTS)
+    engine, backend = _lm_backend(tiny_models, attention)
+    loop = ServingLoop(backend, SCFG,
+                       [Request(prompt=p) for p in PROMPTS],
+                       cfg=ServingConfig(refill=refill))
+    _assert_results_identical(base, loop.run())
+    # everything retired: no leaked pages in either mode
+    assert engine.alloc.used_pages == 0
+    engine.alloc.check_invariants()
+    if refill:
+        # token-level mode really used the row-level interface: the
+        # whole run decodes through ONE persistent stream, not
+        # per-step decode() calls
+        assert loop._rowlevel and loop._stream is not None
+        assert engine.n_decode_calls == 0
+
+
+def test_lm_refill_decode_iterations_never_exceed_lockstep(tiny_models):
+    """Refill backfills freed rows mid-step, so the stream never runs
+    mostly-empty iterations the barrier forces: total decode
+    iterations are never more than lock-step's, and under admission
+    pressure (binding ``max_live``) the earlier per-problem retirement
+    admits queued requests sooner, so the virtual p99 TTA is strictly
+    better.  Without a binding ``max_live`` the p99 win is not
+    guaranteed — event mode charges one score call per problem per
+    step where lock-step batches them — which is why the bench curve
+    and this test both pin ``max_live=2``."""
+    reqs = poisson_requests(PROMPTS * 2, rate=0.1, seed=5)
+    engines, loops = {}, {}
+    for refill in (False, True):
+        engine, backend = _lm_backend(tiny_models, "tree")
+        loop = ServingLoop(backend, SCFG,
+                           [Request(prompt=list(r.prompt),
+                                    arrival=r.arrival) for r in reqs],
+                           max_live=2,
+                           cfg=ServingConfig(refill=refill))
+        loop.run()
+        engines[refill], loops[refill] = engine, loop
+    assert engines[True].n_decode_steps <= engines[False].n_decode_steps
+    assert loops[True].slo.report()["p99_tta"] < \
+        loops[False].slo.report()["p99_tta"]

@@ -81,8 +81,10 @@ def test_sweep_matches_serial_random_orders(specs, max_live):
     # the scheduler interleaves: with a binding cap it admitted in waves
     if max_live < len(specs):
         assert sched.stats.admission_waves > 1
-    # occupancy bookkeeping covers every global step
-    assert len(sched.stats.demand_per_step) == sched.stats.global_steps > 0
+    # occupancy bookkeeping covers the decode-issuing global steps only
+    # (a drain step whose demands all prune to nothing moves no tokens
+    # and is excluded from the batch-fill mean)
+    assert 0 < len(sched.stats.demand_per_step) <= sched.stats.global_steps
 
 
 @pytest.mark.parametrize("method", ["beam", "dvts", "rebase", "ets",
