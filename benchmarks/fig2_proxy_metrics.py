@@ -135,14 +135,18 @@ def _measured_io_validation(width: int = 8, n_problems: int = 2):
     for i, res in enumerate(results):
         ns = res.tree.node(0).payload["ns"]
         eng_trace = backend.kv_trace_by_problem[ns]
-        # decode boundaries pair 1:1 with the namespaced engine trace
-        assert len(res.tree.decode_trace) == len(eng_trace), (
-            "trace misalignment", i, len(res.tree.decode_trace),
-            len(eng_trace))
+        # decode boundaries pair 1:1 with the namespaced engine trace.
+        # A First-Finish halt can leave trailing decode boundaries with
+        # no engine twin (the post-decode stages never ran); the tree's
+        # truncation marker says how many, so halted problems validate
+        # over their completed prefix instead of being skipped.
+        n_valid = len(res.tree.decode_trace) - res.tree.truncated_steps
+        assert n_valid == len(eng_trace), (
+            "trace misalignment", i, n_valid, len(eng_trace))
         p_pred = np.zeros(2, np.int64)
         p_meas = np.zeros(2, np.int64)
-        for k, (cands, t_eng) in enumerate(zip(res.tree.decode_trace,
-                                               eng_trace)):
+        for k, (cands, t_eng) in enumerate(
+                zip(res.tree.decode_trace[:n_valid], eng_trace)):
             lg, uq = _predicted_step_pages(res.tree, cands, page_size)
             m_lg = int(t_eng["logical_pages_streamed"])
             m_uq = int(t_eng["unique_pages_streamed"])

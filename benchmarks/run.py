@@ -8,7 +8,9 @@ written to ``BENCH_table2.json`` (repo root by default) — the
 machine-readable perf record (tokens/s, decode calls/step, pages
 streamed per decode step for serial / batched-paged / batched-tree,
 the prefill-ingestion section: serial-dense vs batched-flash prompt
-tok/s, the sweep section: one-at-a-time vs continuous cross-problem
+tok/s, the kernels section: leaf-tiled vs full-batch-tile tree
+attention decode tok/s + per-tile scratch bytes,
+the sweep section: one-at-a-time vs continuous cross-problem
 problems/s + mean batch occupancy, the pressure section:
 serialized vs demotion-enabled small-pool problems/s, and the serving
 section: lock-step vs token-level-refill p50/p99 time-to-answer per
@@ -87,6 +89,7 @@ def main() -> None:
                 json.dump({"smoke": args.smoke, "fast": args.fast,
                            "rows": res["rows"],
                            "prefill": res.get("prefill", []),
+                           "kernels": res.get("kernels", []),
                            "sweep": res.get("sweep", []),
                            "pressure": res.get("pressure", []),
                            "serving": res.get("serving", [])},

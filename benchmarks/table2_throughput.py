@@ -92,6 +92,20 @@ PRESSURE_MODES = [
     ("demotion", None),
 ]
 
+# (label, kernel_block_b mode, max_batch multiplier) — kernels section:
+# the two-level tree-attention grid (per-tile flash scratch) vs a single
+# tile spanning the whole padded batch (the old one-level grid's VMEM
+# residency).  The base row is today's serving config; the two 4x rows
+# compare the grids at a batch the single-level scratch is what used to
+# cap — same workload, only the tile size differs (each row records its
+# scratch bytes per tile so the VMEM comparison is explicit even on CPU
+# interpret mode, where timing alone can't show residency).
+KERNEL_MODES = [
+    ("tree-tiled", None, 1),
+    ("tree-full-batch-4x", "full", 4),
+    ("tree-tiled-4x", None, 4),
+]
+
 # (label, ServingConfig.refill) — serving section: lock-step barrier
 # scheduling vs token-level row refill on the same timed workload.
 SERVING_MODES = [
@@ -353,6 +367,58 @@ def measure_prefill(lm, lm_params, prompts, reps: int = 3):
     return rows
 
 
+def measure_kernels(lm, lm_params, width: int = 12, n_steps: int = 6,
+                    reps: int = 3):
+    """Tree-decode tok/s under the two-level tree-attention grid.
+
+    Same branched-tree decode workload per row; only the leaf-tile size
+    (``EngineConfig.kernel_block_b``) and ``max_batch`` vary.  The
+    per-tile fp32 flash scratch is ``block_b*K*G*(hd+2)*4`` bytes —
+    recorded per row so the VMEM story is explicit: the tiled rows keep
+    the same scratch at any ``max_batch``, while the full-batch tile's
+    scratch (the old one-level grid) grows with the padded batch.  The
+    two 4x rows compare the grids head-to-head at a batch where the
+    tile sizes actually differ; the base row is the serving config.
+    """
+    from repro.kernels.tree_attention import DEFAULT_BLOCK_B
+    from repro.serving.engine import EngineConfig, PagedEngine, pow2_bucket
+
+    base_mb = max(width * 2, 32)
+    prompt = list(range(4, 40))
+    rows = []
+    for label, mode, mult in KERNEL_MODES:
+        mb = base_mb * mult
+        block_b = pow2_bucket(mb, lo=1) if mode == "full" else None
+        engine = PagedEngine(lm, lm_params, EngineConfig(
+            n_pages=2048, page_size=8, max_batch=mb, max_seq_len=200,
+            attention="tree", kernel_block_b=block_b))
+        sid = engine.prefill(prompt)
+        leaves = engine.branch(sid, width)
+        keys = jax.random.split(jax.random.key(0), len(leaves))
+
+        def burst():
+            for _ in range(n_steps):
+                engine.decode(leaves, 1, row_keys=keys, temperature=1.0)
+
+        burst()                        # warmup: compile the tree step
+        t0 = time.time()
+        for _ in range(reps):
+            burst()
+        wall = time.time() - t0
+        cfg = engine.cfg
+        K, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+        eff_block = block_b or min(DEFAULT_BLOCK_B, pow2_bucket(mb, lo=1))
+        rows.append({
+            "path": label, "max_batch": mb, "block_b": eff_block,
+            "scratch_bytes_per_tile":
+                eff_block * K * G * (cfg.head_dim + 2) * 4,
+            "tok_per_s": reps * n_steps * width / wall,
+            "wall_s": wall})
+    rows[2]["speedup_vs_full_batch"] = \
+        rows[2]["tok_per_s"] / rows[1]["tok_per_s"]
+    return rows
+
+
 def run(train_steps: int = 150, n_problems: int = 6, width: int = 12,
         max_steps: int = 8):
     from repro.configs import get_config
@@ -473,6 +539,22 @@ def run(train_steps: int = 150, n_problems: int = 6, width: int = 12,
     print(f"-> batched flash prefill "
           f"{pre[1]['speedup_vs_serial_dense']:.2f}x serial dense tok/s "
           f"(one length-bucketed stream writing into the pool pages)")
+
+    # -- kernels: two-level tree-attention grid ------------------------
+    kr = measure_kernels(lm, lm_params, width=width)
+    out["kernels"] = kr
+    print(f"\n== tree-attention grid (width={width} decode rows) ==")
+    for r in kr:
+        print(f"{r['path']:20s} {r['tok_per_s']:8.1f} tok/s "
+              f"(max_batch={r['max_batch']}, block_b={r['block_b']}, "
+              f"{r['scratch_bytes_per_tile'] / 1024:.0f} KiB "
+              f"scratch/tile)")
+    print(f"-> at 4x max_batch the leaf-tiled grid runs "
+          f"{kr[2]['speedup_vs_full_batch']:.2f}x the full-batch tile's "
+          f"tok/s with "
+          f"{kr[2]['scratch_bytes_per_tile'] / 1024:.0f} KiB scratch/tile "
+          f"vs the {kr[1]['scratch_bytes_per_tile'] / 1024:.0f} KiB the "
+          f"one-level grid needs at that batch")
 
     # -- sweep: one-at-a-time vs continuous cross-problem batching ------
     n_sweep = max(2 * n_problems, 4)

@@ -29,9 +29,17 @@ future comparison runs against a stale floor.
 
 Rows present on only one side are reported but don't fail the check, so
 adding a new mode in a PR doesn't require regenerating history first.
+
+Besides the pass/fail verdict on stdout, the per-section before/after
+delta table is written as GitHub-flavored markdown to the file named by
+``$GITHUB_STEP_SUMMARY`` when set (the CI job summary page) and to
+``--summary-out`` when given (the slow job uploads that file as an
+artifact), so a reviewer sees every section's movement without digging
+through the log.
 """
 import argparse
 import json
+import os
 import sys
 
 
@@ -41,22 +49,27 @@ def _index(rows, keys):
 
 def _compare(section, committed_rows, fresh_rows, keys, max_ratio,
              metric="tok_per_s", lower_is_better=False):
-    """Returns (failures, stale) label lists for one section.
+    """Returns (failures, stale, deltas) for one section.
 
     ``ratio`` is always the regression factor (how much WORSE the fresh
     row is): committed/fresh for higher-is-better metrics (tok/s),
     fresh/committed for lower-is-better ones (p99 latency).  Staleness
     (ratio < 1/max_ratio) means the fresh row improved past the bound —
-    the committed baseline no longer describes the stack.
+    the committed baseline no longer describes the stack.  ``deltas``
+    carries one record per row (including baseline-less new rows) for
+    the markdown summary table.
     """
     base = _index(committed_rows, keys)
     cur = _index(fresh_rows, keys)
-    failures, stale = [], []
+    failures, stale, deltas = [], [], []
     for key, old in sorted(base.items()):
         new = cur.get(key)
         label = f"{section} {'/'.join(str(k) for k in key)}"
+        row_name = "/".join(str(k) for k in key)
         if new is None:
             print(f"[trend] {label}: missing from fresh run (skipped)")
+            deltas.append((row_name, metric, old[metric], None, None,
+                           "missing"))
             continue
         if lower_is_better:
             ratio = new[metric] / max(old[metric], 1e-9)
@@ -69,12 +82,38 @@ def _compare(section, committed_rows, fresh_rows, keys, max_ratio,
         print(f"[trend] {label}: {old[metric]:.1f} -> "
               f"{new[metric]:.1f} {metric} ({ratio:.2f}x worse) "
               f"[{status}]")
+        deltas.append((row_name, metric, old[metric], new[metric],
+                       ratio, status))
         if ratio > max_ratio:
             failures.append(label)
     for key in sorted(set(cur) - set(base)):
         print(f"[trend] {section} {'/'.join(str(k) for k in key)}: "
               f"new row (no baseline)")
-    return failures, stale
+        deltas.append(("/".join(str(k) for k in key), metric, None,
+                       cur[key][metric], None, "new"))
+    return failures, stale, deltas
+
+
+def _markdown_summary(all_deltas, max_ratio):
+    """Per-section before/after delta table, GitHub-flavored markdown."""
+    lines = ["## Bench trend: per-section before/after deltas", ""]
+    for section, deltas in all_deltas:
+        if not deltas:
+            continue
+        lines += [f"### {section}", "",
+                  "| row | metric | committed | fresh | regression | "
+                  "status |",
+                  "| --- | --- | ---: | ---: | ---: | --- |"]
+        for name, metric, old, new, ratio, status in deltas:
+            fmt = lambda v: "—" if v is None else f"{v:.1f}"
+            r = "—" if ratio is None else f"{ratio:.2f}x"
+            lines.append(f"| {name} | {metric} | {fmt(old)} | {fmt(new)} "
+                         f"| {r} | {status} |")
+        lines.append("")
+    lines.append(f"`regression` is how much worse the fresh row is "
+                 f"(bound: {max_ratio}x; serving rows gate on p99 "
+                 f"time-to-answer, lower is better).")
+    return "\n".join(lines) + "\n"
 
 
 def main() -> None:
@@ -85,6 +124,9 @@ def main() -> None:
                     help="BENCH_table2.json written by the fresh run")
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail when committed/fresh tok_per_s exceeds this")
+    ap.add_argument("--summary-out", default=None,
+                    help="also write the markdown delta table here "
+                         "(uploaded as a CI artifact)")
     args = ap.parse_args()
     with open(args.committed) as f:
         committed = json.load(f)
@@ -96,9 +138,10 @@ def main() -> None:
               f"(committed smoke={committed.get('smoke')} "
               f"fast={committed.get('fast')}, fresh "
               f"smoke={fresh.get('smoke')} fast={fresh.get('fast')})")
-    failures, stale = [], []
+    failures, stale, all_deltas = [], [], []
     sections = (("decode", ("method", "path"), "tok_per_s", False),
                 ("prefill", ("path",), "tok_per_s", False),
+                ("kernels", ("path",), "tok_per_s", False),
                 ("sweep", ("path",), "tok_per_s", False),
                 ("pressure", ("path",), "tok_per_s", False),
                 ("serving", ("path", "arrival_rate"), "p99_tta", True))
@@ -107,11 +150,21 @@ def main() -> None:
                                        else section, [])
         fresh_rows = fresh.get("rows" if section == "decode"
                                else section, [])
-        f, s = _compare(section, committed_rows, fresh_rows, keys,
-                        args.max_ratio, metric=metric,
-                        lower_is_better=lower)
+        f, s, d = _compare(section, committed_rows, fresh_rows, keys,
+                           args.max_ratio, metric=metric,
+                           lower_is_better=lower)
         failures += f
         stale += s
+        all_deltas.append((section, d))
+    md = _markdown_summary(all_deltas, args.max_ratio)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    for path in filter(None, (step_summary, args.summary_out)):
+        try:
+            with open(path, "a") as f:
+                f.write(md)
+        except OSError as e:            # a broken summary never fails CI
+            print(f"[trend] WARNING: could not write summary to "
+                  f"{path}: {e}")
     if stale:
         print(f"[trend] WARNING: {len(stale)} row(s) improved beyond "
               f"{args.max_ratio}x — the committed baseline looks stale; "

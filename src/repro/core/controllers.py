@@ -500,10 +500,15 @@ class SearchState:
         discarded (no final ``record_step``/``on_step`` for it — the
         retiring caller's ``finish_problem`` frees every page of the
         namespace outright, which is the whole point: pages return to
-        the pool the moment the first trajectory completes).  Valid in
-        any phase; idempotent once finished.
+        the pool the moment the first trajectory completes).  The tree
+        is stamped with a truncation marker so trace consumers (the
+        fig2 count-level IO validation) can pair the non-truncated
+        prefix of ``decode_trace`` with the engine KV trace instead of
+        skipping halted problems.  Valid in any phase; idempotent once
+        finished.
         """
         if not self.finished:
+            self.tree.mark_truncated()
             self._finish()
 
     def _finish(self) -> None:
@@ -696,11 +701,21 @@ class SweepScheduler:
     def __init__(self, backend, scfg: SearchConfig, *,
                  prompts: Optional[Sequence[Sequence[int]]] = None,
                  trees: Optional[Sequence[SearchTree]] = None,
-                 max_live: Optional[int] = None):
+                 max_live: Optional[int] = None,
+                 spill: str = "namespace"):
         assert (prompts is None) != (trees is None), \
             "pass exactly one of prompts / trees"
+        assert spill in ("namespace", "subtree"), spill
         self.backend = backend
         self.scfg = scfg
+        # demotion granularity: "namespace" spills a victim's whole KV
+        # (the historical behavior — pressured sweeps stay bit-identical
+        # to unpressured ones); "subtree" spills only enough of the
+        # victim's page-exclusive sequences to cover the deficit, so a
+        # demotion no longer evicts the shared prefix or the rest of
+        # the problem (requires a backend whose swap_out_problem takes
+        # need_pages)
+        self.spill = spill
         self._queue: List[Tuple[int, Any]] = []     # (index, prompt|tree)
         self._from_prompts = prompts is not None
         items = prompts if self._from_prompts else trees
@@ -807,16 +822,22 @@ class SweepScheduler:
             if held > self._peak.get(idx, 0):
                 self._peak[idx] = held
 
-    def _park(self, idx: int) -> None:
+    def _park(self, idx: int, need_pages: Optional[int] = None) -> None:
         """Demote one problem: spill its pages and stop stepping it.
 
         Parking is invisible to the search itself — the problem simply
         posts no demand for a few global steps, and per-problem RNG
         chains make step timing irrelevant to its sampled streams — so
-        the sweep stays bit-identical to unpressured serial runs.
+        the sweep stays bit-identical to unpressured serial runs.  In
+        ``spill="subtree"`` mode only ``need_pages`` worth of the
+        victim's page-exclusive sequences spill (the shared prefix
+        stays hot); the problem still parks whole either way.
         """
         st = self.live.pop(idx)
-        self.backend.swap_out_problem(st.tree)
+        if self.spill == "subtree" and need_pages is not None:
+            self.backend.swap_out_problem(st.tree, need_pages=need_pages)
+        else:
+            self.backend.swap_out_problem(st.tree)
         self.parked[idx] = st
         self.stats.demotions += 1
 
@@ -859,7 +880,8 @@ class SweepScheduler:
                      for i in self.live if self._demotable(i)]
             if not cands:
                 return              # every live problem is pinned
-            self._park(select_victim(cands).key)
+            self._park(select_victim(cands).key,
+                       need_pages=need - free)
 
     def _resume_parked(self) -> None:
         """Swap parked problems back in as pages free up.

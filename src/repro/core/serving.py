@@ -404,13 +404,50 @@ class ServingLoop(SweepScheduler):
             if not pend:
                 done.append(idx)
         # 4. problems whose step fully decoded score/prune/retire NOW —
-        #    no barrier on the other problems' rows
+        #    no barrier on the other problems' rows.  Every completion
+        #    landing in this same tick batches into ONE padded
+        #    score_multi call (and one embed_multi call), so event mode
+        #    charges a scoring pass per *tick*, exactly like lock-step
+        #    mode does per barrier — instead of one PRM call per
+        #    problem.  score_multi is composition-independent, so the
+        #    batched scores are bit-identical to per-problem calls.
+        batch: List[Tuple[int, Any, List[int]]] = []
         for idx in sorted(set(done)):
             ticket = self._tickets.pop(idx)
             self._waiting.pop(idx, None)
             outs = {bid: stream.out.pop(bid) for bid in ticket.branches}
             kids = self.backend.expand_finish(ticket, outs)
-            self._complete_step(idx, kids)
+            st = self.live[idx]
+            to_score = st.note_children(kids)
+            if st.finished:
+                self._retire(idx)
+                continue
+            batch.append((idx, st, to_score))
+        if not batch:
+            return
+        all_scores = _score_multi(self.backend,
+                                  [(st.tree, ts) for _, st, ts in batch])
+        self._charge(self.cfg.score_cost)
+        embeds: List[Tuple[int, Any, List[int]]] = []
+        for (idx, st, _), scores in zip(batch, all_scores):
+            to_embed = st.note_scores(scores)
+            if st.finished:
+                self._retire(idx)
+                continue
+            if self.cfg.first_finish and st.completed:
+                st.halt()           # First-Finish: first answer wins
+                self._retire(idx)
+                continue
+            if to_embed:
+                embeds.append((idx, st, to_embed))
+            else:
+                st.complete_step(None)
+        if embeds:
+            all_embs = _embed_multi(self.backend,
+                                    [(st.tree, te) for _, st, te in embeds])
+            self._charge(self.cfg.embed_cost)
+            for (_, st, _), embs in zip(embeds, all_embs):
+                st.complete_step(embs)
 
     # -- event mode: whole-step fallback -------------------------------
     def _step_one_problem(self) -> None:

@@ -49,6 +49,13 @@ class SearchTree:
         # This alignment is what lets the fig2 costsim validation check
         # measured page IO at count level instead of ratio level.
         self.decode_trace: List[List[int]] = []
+        # First-Finish truncation marker: number of trailing
+        # ``decode_trace`` entries whose post-decode stages never ran
+        # because the search halted mid-step (the engine KV trace has
+        # no twin for them).  Consumers pairing the two traces use the
+        # non-truncated prefix ``decode_trace[:len - truncated_steps]``
+        # instead of skipping halted problems outright.
+        self.truncated_steps: int = 0
 
     # ------------------------------------------------------------------
     def add(self, parent: int, n_tokens: int, reward: float = 0.0,
@@ -111,6 +118,14 @@ class SearchTree:
     def record_decode(self, candidates: Sequence[int]) -> None:
         """Record one step's decoded-branch set (see ``decode_trace``)."""
         self.decode_trace.append([int(c) for c in candidates])
+
+    def mark_truncated(self) -> None:
+        """Stamp the First-Finish truncation marker: any decode
+        boundary recorded beyond the last completed step (``kv_trace``
+        snapshots one entry per *completed* step) was halted mid-step
+        and has no engine-trace twin."""
+        self.truncated_steps = max(
+            len(self.decode_trace) - len(self.kv_trace), 0)
 
     # ------------------------------------------------------------------
     def record_step(self, live_leaves: Sequence[int]) -> None:

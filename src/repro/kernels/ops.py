@@ -21,17 +21,22 @@ def _auto_interpret() -> bool:
 
 
 def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
-                    scale: float, interpret=None):
+                    scale: float, interpret=None, block_b=None):
     interpret = _auto_interpret() if interpret is None else interpret
     return _paged_attention(q, k_pool, v_pool, block_tables, lengths,
-                            scale=scale, interpret=interpret)
+                            scale=scale, interpret=interpret,
+                            block_b=block_b)
 
 
 def tree_attention(q, k_pool, v_pool, page_list, page_mask, page_lens, *,
-                   scale: float, interpret=None):
+                   scale: float, interpret=None, block_b=None):
+    """``block_b`` is the leaf-tile size of the two-level
+    (leaf-tile x page) grid; None picks the kernel default (one tile up
+    to DEFAULT_BLOCK_B rows, fixed-size tiles beyond)."""
     interpret = _auto_interpret() if interpret is None else interpret
     return _tree_attention(q, k_pool, v_pool, page_list, page_mask,
-                           page_lens, scale=scale, interpret=interpret)
+                           page_lens, scale=scale, interpret=interpret,
+                           block_b=block_b)
 
 
 def flash_prefill(q, k, v, *, scale: float, causal: bool = True,

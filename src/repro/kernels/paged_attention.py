@@ -6,19 +6,27 @@ so the BlockSpec index_map can route each grid step to the right physical
 page in HBM — the TPU equivalent of vLLM/SGLang paged attention: no KV
 copy, pages stream HBM->VMEM exactly once per query.
 
-Grid: (B, T) — T = table length (pages per sequence, padded).  The TPU
-grid is sequential in the trailing axis, so flash-style running
-(max, sum, acc) scratch in VMEM carries across a sequence's pages and is
-reset at t == 0.
+Grid: (B // block_b, block_b, T) — T = table length (pages per sequence,
+padded).  The TPU grid is sequential in the trailing axis, so flash-style
+running (max, sum, acc) scratch in VMEM carries across a sequence's pages
+and is reset at t == 0.  The query axis is tiled the same way as the tree
+kernel's leaf axis: q and o blocks are (block_b, H, hd) and stay resident
+for a whole tile's sweep, so query loads and output flushes happen once
+per *tile* instead of once per row — fewer, larger DMAs — while KV
+routing stays per-row (each sequence still streams exactly its own
+pages; unlike the tree kernel there is no cross-row page dedup to
+exploit, which is why only the q/o/scratch axes tile).
 
-Block shapes: the page (page_size, K, hd) and the query (H, hd) stay in
-VMEM; page_size x hd should be MXU-friendly (multiples of 8x128 for
-fp32/bf16 — use page_size >= 8, hd in {64, 128}).  Validated on CPU in
-interpret mode against ``ref.paged_attention_ref``.
+Block shapes: the page (page_size, K, hd) and the query tile
+(block_b, H, hd) stay in VMEM; page_size x hd should be MXU-friendly
+(multiples of 8x128 for fp32/bf16 — use page_size >= 8, hd in
+{64, 128}).  Validated on CPU in interpret mode against
+``ref.paged_attention_ref``.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,21 +35,35 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# Default query tile: modest, so the resident (block_b, H, hd) q/o
+# blocks + per-tile scratch stay small next to the streamed page tiles.
+DEFAULT_BLOCK_B = 8
+
+
+def _next_pow2(n: int, lo: int) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
 
 def _kernel(tables_ref, lengths_ref,            # scalar prefetch (SMEM)
             q_ref, k_ref, v_ref,                # VMEM blocks
             o_ref,                              # output block
             m_ref, l_ref, acc_ref,              # VMEM scratch
-            *, scale: float, page_size: int, n_kv_heads: int):
-    b = pl.program_id(0)
-    t = pl.program_id(1)
-    T = pl.num_programs(1)
+            *, scale: float, page_size: int, n_kv_heads: int,
+            block_b: int):
+    bo = pl.program_id(0)
+    bi = pl.program_id(1)
+    t = pl.program_id(2)
+    T = pl.num_programs(2)
+    b = bo * block_b + bi
 
     @pl.when(t == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[bi] = jnp.full_like(m_ref[bi], NEG_INF)
+        l_ref[bi] = jnp.zeros_like(l_ref[bi])
+        acc_ref[bi] = jnp.zeros_like(acc_ref[bi])
 
     length = lengths_ref[b]
     page_start = t * page_size
@@ -50,7 +72,7 @@ def _kernel(tables_ref, lengths_ref,            # scalar prefetch (SMEM)
 
     @pl.when(n_valid > 0)
     def _attend():
-        q = q_ref[0].astype(jnp.float32)                  # (H, hd)
+        q = q_ref[bi].astype(jnp.float32)                 # (H, hd)
         k = k_ref[0].astype(jnp.float32)                  # (S, K, hd)
         v = v_ref[0].astype(jnp.float32)
         H, hd = q.shape
@@ -65,8 +87,8 @@ def _kernel(tables_ref, lengths_ref,            # scalar prefetch (SMEM)
                  < n_valid)
         s = jnp.where(valid, s, NEG_INF)
 
-        m_prev = m_ref[...]                               # (K, G)
-        l_prev = l_ref[...]
+        m_prev = m_ref[bi]                                # (K, G)
+        l_prev = l_ref[bi]
         m_cur = jnp.max(s, axis=-1)
         m_new = jnp.maximum(m_prev, m_cur)
         p = jnp.exp(s - m_new[..., None])
@@ -76,52 +98,70 @@ def _kernel(tables_ref, lengths_ref,            # scalar prefetch (SMEM)
         pv = jax.lax.dot_general(
             p, v, (((2,), (0,)), ((0,), (1,))),
             preferred_element_type=jnp.float32)           # (K, G, hd)
-        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
-        m_ref[...] = m_new
-        l_ref[...] = l_new
+        acc_ref[bi] = acc_ref[bi] * alpha[..., None] + pv
+        m_ref[bi] = m_new
+        l_ref[bi] = l_new
 
     @pl.when(t == T - 1)
     def _finish():
-        l = jnp.maximum(l_ref[...], 1e-30)
+        l = jnp.maximum(l_ref[bi], 1e-30)
         K, G = l.shape
         hd = acc_ref.shape[-1]
-        out = (acc_ref[...] / l[..., None]).reshape(K * G, hd)
-        o_ref[0] = out.astype(o_ref.dtype)
+        out = (acc_ref[bi] / l[..., None]).reshape(K * G, hd)
+        o_ref[bi] = out.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "interpret", "block_b"))
 def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
-                    scale: float, interpret: bool = True):
+                    scale: float, interpret: bool = True,
+                    block_b: Optional[int] = None):
     """q (B,H,hd); k/v_pool (P,S,K,hd); block_tables (B,T) (-1 pad);
-    lengths (B,).  Returns (B,H,hd)."""
+    lengths (B,).  Returns (B,H,hd).  B is padded to a multiple of the
+    query tile with zero-length rows (all-(-1) tables -> zeros out)."""
     B, H, hd = q.shape
     P, S, K, _ = k_pool.shape
     T = block_tables.shape[1]
     G = H // K
+
+    if block_b is None:
+        block_b = min(DEFAULT_BLOCK_B, _next_pow2(B, 1))
+    block_b = max(1, min(int(block_b), _next_pow2(B, 1)))
+    Bp = -(-B // block_b) * block_b
+    if Bp != B:
+        q = jnp.pad(q, ((0, Bp - B), (0, 0), (0, 0)))
+        block_tables = jnp.pad(block_tables, ((0, Bp - B), (0, 0)),
+                               constant_values=-1)
+        lengths = jnp.pad(lengths, (0, Bp - B))
     safe_tables = jnp.maximum(block_tables, 0).astype(jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, T),
+        grid=(Bp // block_b, block_b, T),
         in_specs=[
-            pl.BlockSpec((1, H, hd), lambda b, t, tbl, ln: (b, 0, 0)),
+            pl.BlockSpec((block_b, H, hd),
+                         lambda bo, bi, t, tbl, ln: (bo, 0, 0)),
             pl.BlockSpec((1, S, K, hd),
-                         lambda b, t, tbl, ln: (tbl[b, t], 0, 0, 0)),
+                         lambda bo, bi, t, tbl, ln:
+                         (tbl[bo * block_b + bi, t], 0, 0, 0)),
             pl.BlockSpec((1, S, K, hd),
-                         lambda b, t, tbl, ln: (tbl[b, t], 0, 0, 0)),
+                         lambda bo, bi, t, tbl, ln:
+                         (tbl[bo * block_b + bi, t], 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, H, hd), lambda b, t, tbl, ln: (b, 0, 0)),
+        out_specs=pl.BlockSpec((block_b, H, hd),
+                               lambda bo, bi, t, tbl, ln: (bo, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((K, G), jnp.float32),
-            pltpu.VMEM((K, G), jnp.float32),
-            pltpu.VMEM((K, G, hd), jnp.float32),
+            pltpu.VMEM((block_b, K, G), jnp.float32),
+            pltpu.VMEM((block_b, K, G), jnp.float32),
+            pltpu.VMEM((block_b, K, G, hd), jnp.float32),
         ],
     )
     kernel = functools.partial(_kernel, scale=scale, page_size=S,
-                               n_kv_heads=K)
-    return pl.pallas_call(
+                               n_kv_heads=K, block_b=block_b)
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((Bp, H, hd), q.dtype),
         interpret=interpret,
     )(safe_tables, lengths.astype(jnp.int32), q, k_pool, v_pool)
+    return out[:B] if Bp != B else out

@@ -22,16 +22,31 @@ Inputs:
   page_lens  (N,) int32    — valid slots in each page
 Returns (B, H, hd).
 
+Two-level grid: ``(B // block_b, N)`` — leaf-tile-major, page-minor.
+The TPU grid is sequential in the trailing axis, so for each leaf tile
+the page axis sweeps with flash-style running (m, l, acc) scratch that
+is (re)initialized at ``n == 0`` and normalized at ``n == N - 1``.  A
+page tile is attended against one *leaf tile* at a time, so the fp32
+scratch is per-tile — ``(block_b, K, G[, hd])`` — instead of spanning
+the whole batch, and ``max_batch`` can grow without growing VMEM
+residency (pages are re-streamed once per leaf tile; tile counts are
+small, and the default tile keeps the single-tile IO profile for every
+batch the serving engine currently runs).
+
 Padding contract (shared with ``build_tree_metadata`` below): the page
 axis N is padded to a power of two with *dump entries* — any in-range
 page id, ``page_lens == 0``, ``page_mask`` column all zero — and the
 batch axis B may contain inactive rows whose mask column is all zero.
 Both are inert: a zero-length page contributes no probability mass, and
-a fully-masked row produces an all-zero output (no NaNs).
+a fully-masked row produces an all-zero output (no NaNs).  The wrapper
+itself pads B up to a multiple of the leaf tile with such inactive rows
+and slices them off the output, so callers never see the tile size.
 
-VMEM budget: scratch acc is (B, K, G, hd) fp32 — e.g. B=256, H=32,
-hd=128 -> 4 MiB, within the ~16 MiB/core budget alongside one
-(S, K, hd) page tile.
+VMEM budget (per-tile): scratch is block_b*K*G*(hd+2) fp32 — e.g.
+block_b=64, H=32 (K*G=32), hd=128 -> 1.06 MiB + one (S, K, hd) page
+tile, independent of B.  The old single-level grid held (B, K, G, hd)
+for the whole batch (B=256 at the same config -> 4 MiB), which is what
+capped ``max_batch``; now batch growth adds leaf tiles, not scratch.
 """
 from __future__ import annotations
 
@@ -133,8 +148,11 @@ def _kernel(page_list_ref, page_lens_ref,       # scalar prefetch
             o_ref,
             m_ref, l_ref, acc_ref,
             *, scale: float):
-    n = pl.program_id(0)
-    N = pl.num_programs(0)
+    # grid (B // block_b, N): the page axis trails, so the flash
+    # (m, l, acc) carry below sweeps all pages for one leaf tile before
+    # the tile advances (scratch re-inits at n == 0 per tile).
+    n = pl.program_id(1)
+    N = pl.num_programs(1)
 
     @pl.when(n == 0)
     def _init():
@@ -187,35 +205,59 @@ def _kernel(page_list_ref, page_lens_ref,       # scalar prefetch
         o_ref[...] = out.reshape(B, K * G, hd).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+# Default leaf tile: one tile up to this batch size (the IO profile of
+# the old single-level grid), multiple fixed-size tiles beyond it so the
+# per-tile scratch stays within the VMEM budget however large max_batch
+# grows.
+DEFAULT_BLOCK_B = 64
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "interpret", "block_b"))
 def tree_attention(q, k_pool, v_pool, page_list, page_mask, page_lens, *,
-                   scale: float, interpret: bool = True):
+                   scale: float, interpret: bool = True,
+                   block_b: Optional[int] = None):
     B, H, hd = q.shape
     P, S, K, _ = k_pool.shape
     N = page_list.shape[0]
     G = H // K
 
+    if block_b is None:
+        block_b = min(DEFAULT_BLOCK_B, _next_pow2(B, 1))
+    block_b = max(1, min(int(block_b), _next_pow2(B, 1)))
+    # pad B to a tile multiple with inactive rows (all-zero mask column
+    # -> all-zero output, per the padding contract), sliced off below
+    Bp = -(-B // block_b) * block_b
+    if Bp != B:
+        q = jnp.pad(q, ((0, Bp - B), (0, 0), (0, 0)))
+        page_mask = jnp.pad(page_mask, ((0, 0), (0, Bp - B)))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(N,),
+        grid=(Bp // block_b, N),
         in_specs=[
-            pl.BlockSpec((B, H, hd), lambda n, pls, pln: (0, 0, 0)),
-            pl.BlockSpec((1, S, K, hd), lambda n, pls, pln: (pls[n], 0, 0, 0)),
-            pl.BlockSpec((1, S, K, hd), lambda n, pls, pln: (pls[n], 0, 0, 0)),
-            pl.BlockSpec((1, B), lambda n, pls, pln: (n, 0)),
+            pl.BlockSpec((block_b, H, hd),
+                         lambda b, n, pls, pln: (b, 0, 0)),
+            pl.BlockSpec((1, S, K, hd),
+                         lambda b, n, pls, pln: (pls[n], 0, 0, 0)),
+            pl.BlockSpec((1, S, K, hd),
+                         lambda b, n, pls, pln: (pls[n], 0, 0, 0)),
+            pl.BlockSpec((1, block_b), lambda b, n, pls, pln: (n, b)),
         ],
-        out_specs=pl.BlockSpec((B, H, hd), lambda n, pls, pln: (0, 0, 0)),
+        out_specs=pl.BlockSpec((block_b, H, hd),
+                               lambda b, n, pls, pln: (b, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((B, K, G), jnp.float32),
-            pltpu.VMEM((B, K, G), jnp.float32),
-            pltpu.VMEM((B, K, G, hd), jnp.float32),
+            pltpu.VMEM((block_b, K, G), jnp.float32),
+            pltpu.VMEM((block_b, K, G), jnp.float32),
+            pltpu.VMEM((block_b, K, G, hd), jnp.float32),
         ],
     )
     kernel = functools.partial(_kernel, scale=scale)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((Bp, H, hd), q.dtype),
         interpret=interpret,
     )(page_list.astype(jnp.int32), page_lens.astype(jnp.int32),
       q, k_pool, v_pool, page_mask.astype(jnp.int8))
+    return out[:B] if Bp != B else out

@@ -6,10 +6,14 @@ Static shapes throughout — block tables arrive as padded int32 arrays
 
 Swap path (page demotion): ``gather_pages`` copies a set of pages to
 host memory and ``scatter_pages`` writes host copies back into (any)
-pool pages — the device half of the engine's swap-out / swap-in.  The
-page axis is padded to a power of two before the jitted transfer, so a
-serving run compiles O(log n_pages) swap signatures, matching the
-recompile discipline of every other host-built axis.
+pool pages — the device half of the engine's swap-out / swap-in.
+``gather_pages_async`` is the overlapped variant: it snapshots the
+pages into fresh device arrays (async dispatch) and defers the blocking
+device->host copy to ``PendingGather.resolve``, so demotion traffic
+overlaps the in-flight decode step.  The page axis is padded to a power
+of two before the jitted transfer, so a serving run compiles
+O(log n_pages) swap signatures, matching the recompile discipline of
+every other host-built axis.
 
 The pure-jnp gather path here is also the oracle for the Pallas
 ``paged_attention`` kernel (kernels/ref.py builds on it).
@@ -24,6 +28,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from .allocator import CopyOp
+
+
+class PendingGather:
+    """An in-flight page gather: device copies taken, host copy deferred.
+
+    ``gather_pages_async`` snapshots the requested pages into fresh
+    device arrays (a jitted gather — functional, so later pool writes
+    cannot corrupt them) and returns immediately; the blocking
+    device->host materialization happens on :meth:`resolve`.  The engine
+    keeps a small number of these pending (double-buffered transfers)
+    so a demotion's copy-out overlaps the in-flight decode step instead
+    of stalling it.  ``resolve`` is idempotent and drops the device
+    references once the host copy exists."""
+
+    def __init__(self, dev_k, dev_v, n: int):
+        self._dev = (dev_k, dev_v)
+        self._n = n
+        self._host = None
+
+    @property
+    def pending(self) -> bool:
+        return self._host is None
+
+    def resolve(self) -> Tuple[np.ndarray, np.ndarray]:
+        if self._host is None:
+            dk, dv = self._dev
+            n = self._n
+            # materialize the slices: a view would pin the pow2-padded
+            # base arrays in host memory for the life of the spill entry
+            self._host = (np.ascontiguousarray(np.asarray(dk)[:, :n]),
+                          np.ascontiguousarray(np.asarray(dv)[:, :n]))
+            self._dev = None
+        return self._host
 
 
 def pow2_bucket(n: int, lo: int = 8) -> int:
@@ -84,14 +121,23 @@ class KVPool:
         0 and is sliced off on the host), so swap traffic costs
         O(log n_pages) jit signatures over a run.
         """
+        return self.gather_pages_async(pages).resolve()
+
+    def gather_pages_async(self, pages: Sequence[int]) -> PendingGather:
+        """Start a page gather without blocking on the host copy.
+
+        The jitted gather snapshots the pages into fresh device arrays
+        (dispatch is async under jax), so the caller may immediately
+        release and reuse the source pages; the returned handle's
+        :meth:`PendingGather.resolve` materializes the host copy when
+        it is actually needed (or when the engine's double-buffer depth
+        forces the oldest transfer to land).
+        """
         n = len(pages)
         idx = np.zeros(pow2_bucket(max(n, 1)), np.int32)
         idx[:n] = pages
         k, v = _gather_pages(self.k, self.v, jnp.asarray(idx))
-        # materialize the slices: a view would pin the pow2-padded base
-        # arrays in host memory for as long as the spill entry lives
-        return (np.ascontiguousarray(np.asarray(k)[:, :n]),
-                np.ascontiguousarray(np.asarray(v)[:, :n]))
+        return PendingGather(k, v, n)
 
     def scatter_pages(self, pages: Sequence[int], host_k: np.ndarray,
                       host_v: np.ndarray, *, dump_page: int = 0) -> None:

@@ -21,7 +21,15 @@ what PRM tree search actually needs (step-level expand -> score -> prune):
     problems), then later restored onto fresh physical pages as exact
     copies — decode streams resume bit-identically because every
     consumer reads the pool through block tables, never raw page ids.
-    The ``swapped_out_pages`` / ``swapped_in_pages`` counters reconcile
+    The gather is *overlapped*: swap-out snapshots the pages into fresh
+    device arrays (async dispatch) and defers the blocking host copy
+    until the transfer double-buffer (depth 2) forces the oldest one to
+    land or swap-in needs the bytes — demotion traffic hides behind the
+    in-flight decode step.  ``swap_out(..., partial=True)`` demotes a
+    page-exclusive *subset* of a namespace (a subtree's leaves) instead
+    of the whole problem: shared-prefix pages stay hot in the pool and
+    only the subtree's exclusive pages travel.  The
+    ``swapped_out_pages`` / ``swapped_in_pages`` counters reconcile
     against the allocator's per-ns swap accounting.
 
 Pending-token invariant (the contract between prefill, branch and
@@ -100,7 +108,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kvcache import KVPool, PageAllocator
-from repro.kvcache.pool import paged_attention_ref
+from repro.kvcache.pool import PendingGather, paged_attention_ref
 # the canonical bucketing primitive lives with the pool (kvcache may
 # not import serving); re-exported here for the engine-side callers
 from repro.kvcache.pool import pow2_bucket  # noqa: F401  (re-export)
@@ -124,10 +132,20 @@ class EngineConfig:
     attention: str = "paged"       # "paged" | "tree" (see module doc)
     prefill: str = "flash"         # "flash" | "dense" (dense = oracle)
     trace_logits: bool = False     # keep per-step logits (tests only)
+    # leaf/query tile for the Pallas decode kernels' two-level grids
+    # (None = kernel default); lets max_batch grow past the single-tile
+    # VMEM budget — see kernels/tree_attention.py
+    kernel_block_b: Optional[int] = None
+    # prompts longer than this many tokens prefill in page-streamed
+    # segments instead of one bucket (None = always one bucket)
+    prefill_chunk_tokens: Optional[int] = None
 
     def __post_init__(self):
         assert self.attention in ("paged", "tree"), self.attention
         assert self.prefill in ("flash", "dense"), self.prefill
+        assert self.kernel_block_b is None or self.kernel_block_b >= 1
+        assert self.prefill_chunk_tokens is None \
+            or self.prefill_chunk_tokens >= self.page_size
 
 
 class PagedEngine:
@@ -168,9 +186,17 @@ class PagedEngine:
         self.swapped_in_pages = 0
         self.n_swap_outs = 0
         self.n_swap_ins = 0
-        # ns -> (stale page ids, host K, host V): the spill buffer a
-        # demoted problem's pages wait in until swap-in restores them
-        self._spill: Dict[int, Tuple[List[int], np.ndarray, np.ndarray]] = {}
+        # ns -> [(stale page ids, PendingGather)]: the spill buffer a
+        # demoted problem's pages wait in until swap-in restores them.
+        # A namespace holds a *list* of segments because subtree-grained
+        # demotion (partial swap_out) may spill it in several waves.
+        self._spill: Dict[int, List[Tuple[List[int], PendingGather]]] = {}
+        # FIFO of not-yet-materialized spill gathers: at most
+        # _spill_buffers transfers stay pending (device snapshots taken,
+        # host copy deferred) so demotion overlaps decode without
+        # pinning unbounded device memory
+        self._pending_spills: List[PendingGather] = []
+        self._spill_buffers = 2
         # per-step attention IO accounting: pages the attention actually
         # streams (unique — tree mode dedups shared prefixes) vs the
         # per-leaf total a paged read pattern costs.  logical/unique is
@@ -192,6 +218,7 @@ class PagedEngine:
         self._decode_fn = self._build_decode_fn()
         self._tree_decode_fn = self._build_tree_decode_fn()
         self._prefill_fn = self._build_prefill_fn()
+        self._streamed_prefill_fn = self._build_streamed_prefill_fn()
 
     # ------------------------------------------------------------------
     # Stats (Table 1 / Fig. 2 measurements)
@@ -273,6 +300,73 @@ class PagedEngine:
 
         return jax.jit(prefill, donate_argnums=(6, 7))
 
+    def _build_streamed_prefill_fn(self):
+        cfg, model = self.cfg, self.model
+        scale = cfg.head_dim ** -0.5
+        ps = self.ecfg.page_size
+        from repro.models import attention as A
+
+        def streamed(params, tokens, positions, pages, slots, length,
+                     hist_table, hist_len, pool_k, pool_v):
+            """One segment of a page-streamed long-prompt prefill.
+
+            tokens/positions/pages/slots (1,Ts) — the segment, right
+            padded (positions -1, pages -> dump page); length valid
+            segment tokens; hist_table (1,Tp) the prompt's block table
+            (pow2-padded); hist_len tokens already in the pool.  Each
+            layer writes the segment's KV into the pool, then attends
+            causally within the segment AND over the history gathered
+            from the pool through the block table — absolute-position
+            masking keeps padded table slots and not-yet-written page
+            tails out of every score set.
+            """
+            self.prefill_traces += 1       # trace-time side effect
+            B, Ts = tokens.shape
+            if cfg.mrope_sections:
+                pos = jnp.broadcast_to(positions[None],
+                                       (3,) + positions.shape)
+            else:
+                pos = positions
+            x, pos = model.embed_inputs(params, {"tokens": tokens,
+                                                 "positions": pos})
+            P = pool_k.shape[1]
+            Lh = hist_table.shape[1] * ps
+            hist_idx = (jnp.clip(hist_table, 0)[:, :, None] * ps
+                        + jnp.arange(ps)[None, None, :]).reshape(B, Lh)
+            hist_pos = jnp.where(jnp.arange(Lh)[None, :] < hist_len,
+                                 jnp.arange(Lh)[None, :], -1)
+            mask_h = A.make_mask(positions, hist_pos, causal=cfg.causal,
+                                 window=cfg.sliding_window)
+            mask_s = A.make_mask(positions, positions, causal=cfg.causal,
+                                 window=cfg.sliding_window)
+            mask = jnp.concatenate([mask_h, mask_s], axis=-1)
+            gp = params["groups"][0]
+            for l in range(cfg.n_layers):
+                blk = jax.tree.map(lambda a: a[l], gp)
+                h = rms_norm(blk["ln1"], x, cfg.norm_eps)
+                q, k, v = A._project_qkv(blk["attn"], h, cfg, pos)
+                pool_k = pool_k.at[l, pages, slots].set(
+                    k.astype(pool_k.dtype))
+                pool_v = pool_v.at[l, pages, slots].set(
+                    v.astype(pool_v.dtype))
+                K, hd = k.shape[2], k.shape[3]
+                flat_k = pool_k[l].reshape(P * ps, K, hd)
+                flat_v = pool_v[l].reshape(P * ps, K, hd)
+                hk = flat_k[hist_idx]              # (1, Lh, K, hd)
+                hv = flat_v[hist_idx]
+                kk = jnp.concatenate([hk.astype(k.dtype), k], axis=1)
+                vv = jnp.concatenate([hv.astype(v.dtype), v], axis=1)
+                y = A.masked_attention(q, kk, vv, mask, scale=scale)
+                x = x + y.reshape(B, Ts, -1) @ blk["attn"]["wo"]
+                h = rms_norm(blk["ln2"], x, cfg.norm_eps)
+                x = x + mlp_apply(blk["mlp"], h, cfg.act)
+            idx = jnp.clip(length - 1, 0, Ts - 1)
+            logits = model.logits(params, x[:, idx])
+            logits = jnp.where(length > 0, logits, 0.0)
+            return logits, pool_k, pool_v
+
+        return jax.jit(streamed, donate_argnums=(8, 9))
+
     def _decode_body(self, params, tokens, lengths, pages, slots, active,
                      pool_k, pool_v, attend):
         """Shared transformer body of one lock-step decode.
@@ -314,6 +408,7 @@ class PagedEngine:
 
     def _build_decode_fn(self):
         use_kernel = self.ecfg.use_kernel
+        block_b = self.ecfg.kernel_block_b
         scale = self.cfg.head_dim ** -0.5
 
         def step(params, tokens, block_tables, lengths, pages, slots,
@@ -327,7 +422,8 @@ class PagedEngine:
                     from repro.kernels import ops
                     return ops.paged_attention(q, pk[l], pv[l],
                                                block_tables, lengths + 1,
-                                               scale=scale)
+                                               scale=scale,
+                                               block_b=block_b)
                 return paged_attention_ref(q, pk[l], pv[l], block_tables,
                                            lengths + 1, scale=scale)
 
@@ -338,6 +434,7 @@ class PagedEngine:
 
     def _build_tree_decode_fn(self):
         use_kernel = self.ecfg.use_kernel
+        block_b = self.ecfg.kernel_block_b
         scale = self.cfg.head_dim ** -0.5
 
         def step(params, tokens, lengths, pages, slots, active,
@@ -353,7 +450,8 @@ class PagedEngine:
                     from repro.kernels import ops
                     return ops.tree_attention(q, pk[l], pv[l], page_list,
                                               page_mask, page_lens,
-                                              scale=scale)
+                                              scale=scale,
+                                              block_b=block_b)
                 return tree_attention_ref(q, pk[l], pv[l], page_list,
                                           page_mask, page_lens,
                                           scale=scale)
@@ -402,16 +500,33 @@ class PagedEngine:
         handles = self.alloc.new_seqs([len(c) for c in ctxs], ns=ns)
         for h, t in zip(handles, all_toks):
             self.tokens[h.seq_id] = t
+        pct = self.ecfg.prefill_chunk_tokens
+        streamed = {i for i, c in enumerate(ctxs)
+                    if pct is not None and len(c) > pct}
+        rest = [i for i in range(len(handles)) if i not in streamed]
         mb = self.ecfg.max_batch
-        for i in range(0, len(handles), mb):
-            self._prefill_chunk(handles[i:i + mb], ctxs[i:i + mb])
+        chunks = [([handles[i] for i in rest[j:j + mb]],
+                   [ctxs[i] for i in rest[j:j + mb]])
+                  for j in range(0, len(rest), mb)]
+        # software pipeline: launching chunk k is an async jax dispatch,
+        # so the host builds chunk k+1's padded operand arrays while the
+        # device is still computing chunk k
+        pending = self._prep_prefill_chunk(*chunks[0]) if chunks else None
+        for j in range(len(chunks)):
+            self._launch_prefill_chunk(pending)
+            pending = (self._prep_prefill_chunk(*chunks[j + 1])
+                       if j + 1 < len(chunks) else None)
+        for i in sorted(streamed):
+            self._prefill_streamed(handles[i], ctxs[i])
         return [h.seq_id for h in handles]
 
-    def _prefill_chunk(self, handles, ctxs) -> None:
-        """One jitted prefill stream over <= max_batch prompts."""
+    def _prep_prefill_chunk(self, handles, ctxs):
+        """Host half of one prefill stream: build the right-padded
+        power-of-two operand arrays for <= max_batch prompts (no device
+        work — the pipelined ``prefill_many`` loop runs this for chunk
+        k+1 while the device executes chunk k)."""
         if not any(ctxs):
-            return                 # single-token prompts: nothing to write
-        self.n_prefill_calls += 1
+            return None            # single-token prompts: nothing to write
         ps = self.ecfg.page_size
         T = pow2_bucket(max(len(c) for c in ctxs))
         Bp = pow2_bucket(len(ctxs), lo=1)
@@ -420,6 +535,7 @@ class PagedEngine:
         pages = np.full((Bp, T), self.dump_page, np.int32)
         slots = np.zeros((Bp, T), np.int32)
         lens = np.zeros(Bp, np.int32)
+        n_tokens = 0
         for r, (h, ctx) in enumerate(zip(handles, ctxs)):
             n = len(ctx)
             if not n:
@@ -429,11 +545,72 @@ class PagedEngine:
             pages[r, :n] = np.repeat(h.block_table, ps)[:n]
             slots[r, :n] = np.tile(np.arange(ps), len(h.block_table))[:n]
             lens[r] = n
-            self.n_prefill_tokens += n
+            n_tokens += n
+        return tok, pos, pages, slots, lens, n_tokens
+
+    def _launch_prefill_chunk(self, prep) -> None:
+        """Device half of one prefill stream: dispatch the jitted step
+        over arrays ``_prep_prefill_chunk`` built (async under jax)."""
+        if prep is None:
+            return
+        tok, pos, pages, slots, lens, n_tokens = prep
+        self.n_prefill_calls += 1
+        self.n_prefill_tokens += n_tokens
         logits, self.pool.k, self.pool.v = self._prefill_fn(
             self.params, jnp.asarray(tok), jnp.asarray(pos),
             jnp.asarray(pages), jnp.asarray(slots), jnp.asarray(lens),
             self.pool.k, self.pool.v)
+        if self.ecfg.trace_logits:
+            self.logits_trace.append(np.asarray(logits))
+
+    def _prefill_chunk(self, handles, ctxs) -> None:
+        """One jitted prefill stream over <= max_batch prompts."""
+        self._launch_prefill_chunk(self._prep_prefill_chunk(handles, ctxs))
+
+    def _prefill_streamed(self, h, ctx) -> None:
+        """Page-streamed prefill of ONE very long prompt.
+
+        The prompt's context runs in sequential token segments of at
+        most ``prefill_chunk_tokens``: each segment's KV is written
+        into the pool, then its queries attend causally within the
+        segment plus over the *history* gathered from the prompt's own
+        pool pages through its block table — so peak activation memory
+        is one segment, not the whole prompt, and earlier segments'
+        KV never leaves the pool.  Segment lengths and the history
+        table are power-of-two bucketed, keeping the signature count
+        O(log chunk x log pages).  The final segment's last-token
+        logits match the one-shot path (same pending-token contract).
+        """
+        n = len(ctx)
+        if not n:
+            return
+        ps = self.ecfg.page_size
+        pct = self.ecfg.prefill_chunk_tokens
+        Tp = pow2_bucket(len(h.block_table), lo=1)
+        tbl = np.zeros((1, Tp), np.int32)
+        tbl[0, :len(h.block_table)] = h.block_table
+        tbl_j = jnp.asarray(tbl)
+        for s0 in range(0, n, pct):
+            s1 = min(s0 + pct, n)
+            seg = ctx[s0:s1]
+            Ts = pow2_bucket(len(seg), lo=1)
+            tok = np.zeros((1, Ts), np.int32)
+            pos = np.full((1, Ts), -1, np.int32)
+            pages = np.full((1, Ts), self.dump_page, np.int32)
+            slots = np.zeros((1, Ts), np.int32)
+            m = len(seg)
+            tok[0, :m] = seg
+            idx = np.arange(s0, s1)
+            pos[0, :m] = idx
+            pages[0, :m] = [h.block_table[i // ps] for i in idx]
+            slots[0, :m] = idx % ps
+            self.n_prefill_calls += 1
+            self.n_prefill_tokens += m
+            logits, self.pool.k, self.pool.v = self._streamed_prefill_fn(
+                self.params, jnp.asarray(tok), jnp.asarray(pos),
+                jnp.asarray(pages), jnp.asarray(slots),
+                jnp.asarray(np.int32(m)), tbl_j,
+                jnp.asarray(np.int32(s0)), self.pool.k, self.pool.v)
         if self.ecfg.trace_logits:
             self.logits_trace.append(np.asarray(logits))
 
@@ -452,34 +629,44 @@ class PagedEngine:
         # last swapped sequence of a parked namespace gone -> its spill
         # buffer can never be swapped back in; drop the host copy
         if was_swapped and ns not in self.alloc.swapped:
-            self._spill.pop(ns, None)
+            self._drop_spill(ns)
 
     # ------------------------------------------------------------------
     # Swap: page demotion to a host-side spill buffer (memory pressure)
     # ------------------------------------------------------------------
-    def swap_out(self, seq_ids: Sequence[int]) -> int:
-        """Demote one problem: spill its unique pages to host, free them.
+    def swap_out(self, seq_ids: Sequence[int], *,
+                 partial: bool = False) -> int:
+        """Demote sequences: spill their exclusive pages to host, free
+        them.
 
-        ``seq_ids`` must be every live sequence of one namespace (the
-        sweep scheduler passes the backend's per-problem sequence set).
-        The pages' K/V are gathered to a host buffer keyed by the
-        namespace, then the allocator releases them — the freed pages
-        are immediately reusable by other problems.  Returns the number
-        of pages spilled.
+        Default: ``seq_ids`` is every live sequence of one namespace
+        (the sweep scheduler passes the backend's per-problem sequence
+        set).  With ``partial=True`` any subset of one namespace works —
+        only the subset-exclusive pages travel; shared-prefix pages
+        stay hot in the pool (subtree-grained spill).  The pages' K/V
+        are snapshotted into fresh device arrays *before* the allocator
+        releases them (async dispatch — the blocking host copy is
+        deferred until the transfer double-buffer forces it or swap-in
+        needs the bytes), so the freed pages are immediately reusable
+        by other problems while the copy-out overlaps in-flight decode.
+        Returns the number of pages spilled.
         """
         ids = list(seq_ids)
         if not ids:
             return 0
-        handles = [self.alloc.seqs[s] for s in ids]
-        ns = handles[0].ns
-        assert ns not in self._spill, (ns, "already swapped out")
-        # gather BEFORE releasing: the pool content of a freed page is
+        ns = self.alloc.seqs[ids[0]].ns
+        if not partial:
+            assert ns not in self._spill, (ns, "already swapped out")
+        # snapshot BEFORE releasing: the pool content of a freed page is
         # only guaranteed until the next allocation writes over it
-        pages = sorted({pg for h in handles for pg in h.block_table})
-        host_k, host_v = self.pool.gather_pages(pages)
-        released = self.alloc.swap_out_seqs(ids)
+        pages = self.alloc.exclusive_pages(ids)
+        gather = self.pool.gather_pages_async(pages)
+        released = self.alloc.swap_out_seqs(ids, partial=partial)
         assert released == pages, (released, pages)
-        self._spill[ns] = (pages, host_k, host_v)
+        self._spill.setdefault(ns, []).append((pages, gather))
+        self._pending_spills.append(gather)
+        while len(self._pending_spills) > self._spill_buffers:
+            self._pending_spills.pop(0).resolve()
         self.swapped_out_pages += len(pages)
         self.n_swap_outs += 1
         return len(pages)
@@ -489,28 +676,44 @@ class PagedEngine:
 
         Allocates fresh physical pages (all-or-nothing; raises
         ``OutOfPages`` leaving everything parked when the pool lacks
-        room), scatters the host K/V copies into them and rewrites the
-        problem's block tables.  Restored pages are exact copies, so
-        the problem's decode streams resume bit-identically — physical
-        ids changed, but every consumer indexes the pool through the
-        block tables.  Returns the number of pages restored.
+        room), scatters the spilled K/V copies into them — resolving
+        any still-pending transfer first — and rewrites the problem's
+        block tables.  Every spill segment of the namespace (a
+        subtree-grained demotion may have several) restores in one
+        call.  Restored pages are exact copies, so the problem's decode
+        streams resume bit-identically — physical ids changed, but
+        every consumer indexes the pool through the block tables.
+        Returns the number of pages restored.
         """
         ids = list(seq_ids)
         if not ids:
             return 0
         ns = self.alloc.seqs[ids[0]].ns
-        pages, host_k, host_v = self._spill[ns]
+        segments = self._spill.get(ns, [])
         mapping = self.alloc.swap_in_seqs(ids)     # may raise OutOfPages
-        # sequences freed while parked may have dropped spill pages
-        rows = [i for i, pg in enumerate(pages) if pg in mapping]
-        if rows:
-            self.pool.scatter_pages([mapping[pages[i]] for i in rows],
-                                    host_k[:, rows], host_v[:, rows],
-                                    dump_page=self.dump_page)
-        del self._spill[ns]
-        self.swapped_in_pages += len(rows)
+        restored = 0
+        for pages, gather in segments:
+            host_k, host_v = gather.resolve()
+            # sequences freed while parked may have dropped spill pages
+            rows = [i for i, pg in enumerate(pages) if pg in mapping]
+            if rows:
+                self.pool.scatter_pages(
+                    [mapping[pages[i]] for i in rows],
+                    host_k[:, rows], host_v[:, rows],
+                    dump_page=self.dump_page)
+            restored += len(rows)
+        self._drop_spill(ns)
+        self.swapped_in_pages += restored
         self.n_swap_ins += 1
-        return len(rows)
+        return restored
+
+    def _drop_spill(self, ns: Optional[int]) -> None:
+        """Forget a namespace's spill segments (restored or orphaned)
+        and un-pin their device snapshots from the pending-transfer
+        FIFO."""
+        for _, gather in self._spill.pop(ns, []):
+            if gather in self._pending_spills:
+                self._pending_spills.remove(gather)
 
     def reset(self) -> None:
         """Free every live sequence; keeps the pool and compiled steps.
@@ -522,6 +725,7 @@ class PagedEngine:
         for sid in list(self.alloc.seqs):
             self.free(sid)
         self._spill.clear()
+        self._pending_spills.clear()
         self.logits_trace.clear()
 
     def reset_counters(self) -> None:

@@ -553,19 +553,71 @@ class LMBackend:
         ns = tree.node(0).payload["ns"]
         return self._ns_stats(ns).get("swapped_pages", 0)
 
-    def swap_out_problem(self, tree: SearchTree) -> int:
-        """Demote one problem: spill all its engine sequences' pages to
-        the host buffer and release them (``engine.swap_out``).  The
-        problem's search state parks until ``swap_in_problem``."""
+    def swap_out_problem(self, tree: SearchTree,
+                         need_pages: Optional[int] = None) -> int:
+        """Demote one problem: spill its engine sequences' pages to the
+        host buffer and release them (``engine.swap_out``).  The
+        problem's search state parks until ``swap_in_problem``.
+
+        With ``need_pages`` set (subtree-grained spill), only enough
+        sequences to release at least that many pages are demoted — a
+        greedy pick maximizing released pages per sequence, so a small
+        deficit spills a subtree of leaves (their exclusive pages below
+        the fork) while the shared prefix and the rest of the problem's
+        KV stay hot in the pool.  The whole problem still parks; resume
+        traffic is just proportionally smaller.
+        """
         ns = tree.node(0).payload["ns"]
-        return self.engine.swap_out(sorted(self._ns_seqs.get(ns, ())))
+        ids = sorted(self._ns_seqs.get(ns, ()))
+        if need_pages is not None and ids:
+            chosen = self._pick_spill_subset(ids, need_pages)
+            if len(chosen) < len(ids):
+                return self.engine.swap_out(chosen, partial=True)
+        return self.engine.swap_out(ids)
+
+    def _pick_spill_subset(self, ids: Sequence[int],
+                           need_pages: int) -> List[int]:
+        """Greedy subset selection for a partial demotion: repeatedly
+        add the sequence that releases the most additional pages (pages
+        whose every reference falls inside the chosen set), smallest
+        seq id on ties, until ``need_pages`` pages free.  Deterministic
+        given the allocator state, so pressured sweeps stay
+        reproducible."""
+        alloc = self.engine.alloc
+        chosen: List[int] = []
+        in_set: Dict[int, int] = {}
+        released = 0
+        remaining = list(ids)
+        while remaining and released < need_pages:
+            best, best_gain = None, -1
+            for s in remaining:
+                gain = 0
+                seen: Dict[int, int] = {}
+                for pg in alloc.seqs[s].block_table:
+                    seen[pg] = seen.get(pg, 0) + 1
+                for pg, n in seen.items():
+                    if in_set.get(pg, 0) + n == alloc.refcount[pg]:
+                        gain += 1
+                if gain > best_gain:
+                    best, best_gain = s, gain
+            chosen.append(best)
+            remaining.remove(best)
+            for pg in alloc.seqs[best].block_table:
+                in_set[pg] = in_set.get(pg, 0) + 1
+            released += best_gain
+        return chosen
 
     def swap_in_problem(self, tree: SearchTree) -> int:
         """Restore a demoted problem's pages (exact copies — its decode
         streams resume bit-identically).  Raises ``OutOfPages`` and
-        leaves the problem parked when the pool still lacks room."""
+        leaves the problem parked when the pool still lacks room.  Only
+        the problem's *swapped* sequences restore — after a
+        subtree-grained demotion the rest never left the pool."""
         ns = tree.node(0).payload["ns"]
-        return self.engine.swap_in(sorted(self._ns_seqs.get(ns, ())))
+        seqs = self.engine.alloc.seqs
+        ids = [s for s in sorted(self._ns_seqs.get(ns, ()))
+               if s in seqs and seqs[s].swapped]
+        return self.engine.swap_in(ids)
 
     def finish_problem(self, tree: SearchTree) -> None:
         """Retire one problem: free whatever engine sequences its final

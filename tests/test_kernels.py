@@ -139,6 +139,74 @@ def test_tree_attention_equals_paged_for_disjoint_paths():
                                rtol=2e-5, atol=2e-5)
 
 
+def test_tree_attention_leaf_tiling_invariance():
+    """The two-level grid is a pure execution-schedule choice: any leaf
+    tile size — including ones that do not divide B, forcing padded
+    inactive rows in the last tile — reproduces the single-tile result
+    and the oracle."""
+    B, H, K, hd, S, P, N = 5, 4, 2, 32, 16, 8, 8
+    kp, vp = _rand((P, S, K, hd)), _rand((P, S, K, hd))
+    q = _rand((B, H, hd))
+    pl = jnp.asarray(RNG.choice(P, N, replace=False), jnp.int32)
+    mask = np.zeros((N, B), np.int8)
+    mask[0] = 1
+    for b in range(B):
+        for n in range(1, N):
+            mask[n, b] = RNG.random() < 0.5
+    lens = jnp.asarray(RNG.integers(1, S + 1, N), jnp.int32)
+    ref = tree_attention_ref(q, kp, vp, pl, jnp.asarray(mask), lens,
+                             scale=hd ** -0.5)
+    full = tree_attention(q, kp, vp, pl, jnp.asarray(mask), lens,
+                          scale=hd ** -0.5, interpret=True, block_b=8)
+    for block_b in (1, 2, 4):       # 5 % 2 != 0, 5 % 4 != 0: ragged tiles
+        out = tree_attention(q, kp, vp, pl, jnp.asarray(mask), lens,
+                             scale=hd ** -0.5, interpret=True,
+                             block_b=block_b)
+        assert out.shape == (B, H, hd)      # pad rows sliced off
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                                   rtol=3e-5, atol=3e-5)
+
+
+def test_tree_attention_single_page_tree():
+    """Degenerate tree: every leaf shares ONE page (N=1, no padding on
+    the page axis) — the flash init/normalize steps coincide."""
+    B, H, K, hd, S, P = 3, 4, 2, 32, 8, 4
+    kp, vp = _rand((P, S, K, hd)), _rand((P, S, K, hd))
+    q = _rand((B, H, hd))
+    pl = jnp.asarray([2], jnp.int32)
+    mask = jnp.ones((1, B), jnp.int8)
+    lens = jnp.asarray([S - 2], jnp.int32)
+    out = tree_attention(q, kp, vp, pl, mask, lens, scale=hd ** -0.5,
+                         interpret=True, block_b=2)
+    ref = tree_attention_ref(q, kp, vp, pl, mask, lens, scale=hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_tree_attention_fully_masked_tile_is_inert():
+    """A whole leaf tile with all-zero mask columns (e.g. the padded
+    tail of a ragged batch, or retired rows) must produce exact zeros —
+    the guarded normalization cannot divide by an empty softmax."""
+    B, H, K, hd, S, P, N = 8, 4, 2, 32, 8, 8, 4
+    kp, vp = _rand((P, S, K, hd)), _rand((P, S, K, hd))
+    q = _rand((B, H, hd))
+    pl = jnp.asarray(RNG.choice(P, N, replace=False), jnp.int32)
+    mask = np.zeros((N, B), np.int8)
+    mask[:, :4] = 1                 # rows 4..7 fully masked: with
+    lens = jnp.full((N,), S, jnp.int32)     # block_b=4, tile 1 is inert
+    out = tree_attention(q, kp, vp, pl, jnp.asarray(mask), lens,
+                         scale=hd ** -0.5, interpret=True, block_b=4)
+    ref = tree_attention_ref(q, kp, vp, pl, jnp.asarray(mask), lens,
+                             scale=hd ** -0.5)
+    out = np.asarray(out)
+    assert np.all(np.isfinite(out))
+    assert np.all(out[4:] == 0)
+    np.testing.assert_allclose(out[:4], np.asarray(ref)[:4],
+                               rtol=3e-5, atol=3e-5)
+
+
 # ---------------------------------------------------------------------------
 # flash_prefill
 # ---------------------------------------------------------------------------

@@ -190,6 +190,71 @@ def test_prefill_many_all_or_nothing_on_out_of_pages(tiny_models):
 
 
 # ---------------------------------------------------------------------------
+# Page-streamed long-prompt prefill
+# ---------------------------------------------------------------------------
+
+def test_streamed_prefill_matches_one_shot(tiny_models):
+    """Prompts longer than ``prefill_chunk_tokens`` prefill in
+    sequential page-streamed segments (peak activation memory = one
+    segment); the pool KV matches the one-shot path to fp32 tolerance
+    and greedy continuations are identical."""
+    e_s = _engine(tiny_models, "flash", prefill_chunk_tokens=16)
+    e_o = _engine(tiny_models, "flash")
+    prompt = list(range(4, 64))             # ctx 59 tokens -> 4 segments
+    sid_s, = e_s.prefill_many([prompt])
+    sid_o = e_o.prefill(prompt)
+    assert e_s.n_prefill_calls == 4         # ceil(59 / 16) segments
+    assert e_o.n_prefill_calls == 1
+    for l in range(e_s.cfg.n_layers):
+        ks, vs = _gather(e_s, sid_s, l)
+        ko, vo = _gather(e_o, sid_o, l)
+        np.testing.assert_allclose(ks, ko, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(vs, vo, rtol=2e-5, atol=2e-5)
+    out_s = e_s.decode([sid_s], 8, jax.random.key(5), temperature=0.0)
+    out_o = e_o.decode([sid_o], 8, jax.random.key(5), temperature=0.0)
+    assert out_s[sid_s] == out_o[sid_o]
+    e_s.alloc.check_invariants()
+
+
+def test_streamed_prefill_mixes_with_pipelined_batch(tiny_models):
+    """``prefill_many`` routes long prompts through the streamed path
+    and the rest through the pipelined batch stream; every sequence
+    matches a per-prompt serial engine with streaming disabled."""
+    e_m = _engine(tiny_models, "flash", prefill_chunk_tokens=24)
+    e_r = _engine(tiny_models, "flash")
+    prompts = [list(range(4, 4 + n)) for n in (9, 58, 17, 40, 3)]
+    sids_m = e_m.prefill_many(prompts)      # 58/40 -> streamed (ctx > 24)
+    sids_r = [e_r.prefill(p) for p in prompts]
+    for sm, sr in zip(sids_m, sids_r):
+        assert e_m.alloc.seqs[sm].length == e_r.alloc.seqs[sr].length
+        for l in range(e_m.cfg.n_layers):
+            km, vm = _gather(e_m, sm, l)
+            kr, vr = _gather(e_r, sr, l)
+            np.testing.assert_allclose(km, kr, rtol=2e-5, atol=2e-5)
+            np.testing.assert_allclose(vm, vr, rtol=2e-5, atol=2e-5)
+    out_m = e_m.decode(sids_m, 6, jax.random.key(9), temperature=1.0)
+    out_r = e_r.decode(sids_r, 6, jax.random.key(9), temperature=1.0)
+    assert [out_m[s] for s in sids_m] == [out_r[s] for s in sids_r]
+    e_m.alloc.check_invariants()
+
+
+def test_streamed_prefill_recompile_bound(tiny_models):
+    """Segment lengths and the history table are pow2-bucketed, so the
+    streamed path's signature count stays O(log chunk x log pages)
+    across prompts of many lengths."""
+    eng = _engine(tiny_models, "flash", prefill_chunk_tokens=16)
+    rng = np.random.default_rng(2)
+    for n in (20, 33, 47, 61, 75, 90, 104, 120):
+        eng.prefill_many([list(rng.integers(4, 60, n))])
+        eng.reset()
+    pct = eng.ecfg.prefill_chunk_tokens
+    max_pages = -(-eng.ecfg.max_seq_len // eng.ecfg.page_size)
+    n_seg_buckets = int(math.log2(pow2_bucket(pct, lo=1))) + 1
+    n_tbl_buckets = int(math.log2(pow2_bucket(max_pages, lo=1))) + 1
+    assert eng.prefill_traces <= n_seg_buckets * n_tbl_buckets
+
+
+# ---------------------------------------------------------------------------
 # Recompile bound
 # ---------------------------------------------------------------------------
 

@@ -4,9 +4,12 @@ The contract under test (the sweep scheduler's pressure machinery):
 
   * swap bookkeeping — ``PageAllocator.swap_out_seqs``/``swap_in_seqs``
     release and re-seat one namespace's pages with exact refcount
-    restoration, under random op interleavings (property test);
+    restoration, under random op interleavings (property test); with
+    ``partial=True`` only a subtree's *exclusive* pages move while the
+    shared prefix stays live for the survivors;
   * swap transport — ``PagedEngine.swap_out``/``swap_in`` round-trips
-    the pages through the host spill buffer bit-exactly, and decode
+    the pages through the (overlap-gathered) host spill buffer
+    bit-exactly — including multi-segment partial spills — and decode
     streams resume bit-identically after the pool was dirtied by other
     problems in between;
   * the sweep — on a pool too small for naive admission, random
@@ -96,6 +99,70 @@ def test_allocator_free_while_swapped_trims_accounting():
     assert a.swapped_pages == 3             # shared pages still referenced
     a.free_seq(h.seq_id)                    # last swapped handle of the ns
     assert a.swapped_pages == 0 and not a.swapped
+    a.check_invariants()
+
+
+def test_allocator_partial_swap_roundtrip():
+    """Subtree-grained spill: demoting a subset of one namespace's
+    sequences releases exactly their exclusive pages (``exclusive_pages``
+    is the pre-mutation query the engine gathers from), keeps shared
+    prefix pages live for the survivors, and restores bit-exact refcount
+    accounting on swap-in — including across TWO partial waves."""
+    a = PageAllocator(64, 4)
+    h = a.new_seq(12)                       # 3 shared prefix pages
+    b1, b2, b3 = (x.seq_id for x in a.branch(h.seq_id, 3))
+    a.append_tokens(b1, 6)                  # CoW + growth: exclusive pages
+    a.append_tokens(b2, 10)
+    a.append_tokens(b3, 2)
+    a.check_invariants()
+    used = a.used_pages
+
+    excl = a.exclusive_pages([b1])
+    assert excl                             # b1 owns private pages
+    released = a.swap_out_seqs([b1], partial=True)
+    assert released == excl
+    # survivors untouched: shared prefix still live, nothing else moved
+    assert a.used_pages == used - len(excl)
+    assert a.swapped_pages == len(excl)
+    assert a.seqs[b1].swapped and not a.seqs[b2].swapped
+    for pg in a.seqs[h.seq_id].block_table:
+        assert a.refcount[pg] > 0           # prefix pages never released
+    a.check_invariants()
+
+    # second wave: another subtree of the SAME namespace spills
+    excl2 = a.exclusive_pages([b2])
+    released2 = a.swap_out_seqs([b2], partial=True)
+    assert released2 == excl2 and not set(released) & set(released2)
+    a.check_invariants()
+
+    # dirty the freed pages, then restore both waves
+    filler = a.new_seq(4 * (len(excl) + len(excl2)))
+    mapping = a.swap_in_seqs([b1, b2])
+    assert sorted(mapping) == sorted(excl + excl2)
+    assert a.swapped_pages == 0 and not a.swapped
+    assert a.used_pages == used + len(a.seqs[filler.seq_id].block_table)
+    a.check_invariants()
+    for sid in (h.seq_id, b1, b2, b3, filler.seq_id):
+        a.free_seq(sid)
+    assert a.used_pages == 0
+    a.check_invariants()
+
+
+def test_allocator_partial_swap_free_while_parked():
+    """Freeing a partially-swapped branch trims only its stale refs;
+    the survivors' live pages are untouched."""
+    a = PageAllocator(32, 4)
+    h = a.new_seq(8)
+    (b,) = a.branch(h.seq_id, 1)
+    a.append_tokens(b.seq_id, 6)
+    a.swap_out_seqs([b.seq_id], partial=True)
+    a.check_invariants()
+    a.free_seq(b.seq_id)                    # abandoned while parked
+    assert a.swapped_pages == 0 and not a.swapped
+    assert not a.seqs[h.seq_id].swapped
+    a.check_invariants()
+    a.free_seq(h.seq_id)
+    assert a.used_pages == 0
     a.check_invariants()
 
 
@@ -267,6 +334,34 @@ def test_engine_free_while_swapped_drops_spill(tiny_models):
     eng.alloc.check_invariants()
 
 
+def test_engine_partial_spill_segments_bit_identical(tiny_models):
+    """Two partial demotion waves of one problem leave two spill
+    segments; swap-in restores both and decode resumes bit-identically,
+    with the overlapped gather buffers fully drained afterwards."""
+    prompt = list(range(1, 20))
+    keys = jax.random.split(jax.random.key(21), 3)
+    keys2 = jax.random.split(jax.random.key(22), 3)
+
+    def run(with_spill):
+        eng = _engine(tiny_models)
+        sid = eng.prefill(prompt)
+        b1, b2, b3 = eng.branch(sid, 3)
+        out1 = eng.decode([b1, b2, b3], 4, row_keys=keys, temperature=1.0)
+        if with_spill:
+            eng.swap_out([b1], partial=True)        # wave 1
+            eng.swap_out([b2], partial=True)        # wave 2
+            ns = eng.alloc.seqs[sid].ns
+            assert len(eng._spill[ns]) == 2         # two pending segments
+            filler = eng.prefill(list(range(25, 85)))   # dirty the pool
+            eng.free(filler)
+            eng.swap_in([b1, b2])
+            assert eng._spill == {} and eng._pending_spills == []
+        out2 = eng.decode([b1, b2, b3], 4, row_keys=keys2, temperature=1.0)
+        return [out1[b1], out1[b2], out1[b3], out2[b1], out2[b2], out2[b3]]
+
+    assert run(with_spill=False) == run(with_spill=True)
+
+
 # ---------------------------------------------------------------------------
 # The sweep under pressure: bit-identical, error-free, reconciled
 # ---------------------------------------------------------------------------
@@ -391,3 +486,32 @@ def test_sweep_matches_serial_under_random_pressure(tiny_models,
     assert engine.swapped_out_pages == engine.swapped_in_pages
     assert engine.alloc.used_pages == 0 and engine.alloc.swapped_pages == 0
     engine.alloc.check_invariants()
+
+
+def test_sweep_subtree_spill_bit_identical_and_moves_fewer_pages(
+        tiny_models, serial_tree_results):
+    """``SweepScheduler(spill="subtree")`` sizes each demotion to the
+    actual deficit: a pressured sweep stays bit-identical to the
+    unpressured serial baseline while spilling strictly fewer pages
+    than whole-namespace demotion — the victim's shared prefix (and any
+    branches the greedy subset skips) never round-trips the host."""
+    e_ns, b_ns = _lm_backend(tiny_models, "tree", n_pages=TIGHT_POOL)
+    s_ns = SweepScheduler(b_ns, SCFG, prompts=PROMPTS)
+    res_ns = s_ns.run()
+    e_st, b_st = _lm_backend(tiny_models, "tree", n_pages=TIGHT_POOL)
+    s_st = SweepScheduler(b_st, SCFG, prompts=PROMPTS, spill="subtree")
+    res_st = s_st.run()
+
+    _assert_results_identical(serial_tree_results, res_ns)
+    _assert_results_identical(serial_tree_results, res_st)
+    assert s_st.stats.demotions > 0
+    assert s_st.stats.resumes == s_st.stats.demotions
+    # the point of subtree granularity: less spill traffic
+    assert 0 < e_st.swapped_out_pages < e_ns.swapped_out_pages
+    # and every demotion still fully reconciles
+    assert e_st.swapped_out_pages == e_st.swapped_in_pages
+    assert e_st.n_swap_outs == e_st.n_swap_ins == s_st.stats.demotions
+    assert e_st.alloc.swapped_pages == 0 and not e_st.alloc.swapped
+    assert e_st._spill == {} and e_st._pending_spills == []
+    assert e_st.alloc.used_pages == 0
+    e_st.alloc.check_invariants()

@@ -321,10 +321,11 @@ def test_lm_refill_decode_iterations_never_exceed_lockstep(tiny_models):
     iterations are never more than lock-step's, and under admission
     pressure (binding ``max_live``) the earlier per-problem retirement
     admits queued requests sooner, so the virtual p99 TTA is strictly
-    better.  Without a binding ``max_live`` the p99 win is not
-    guaranteed — event mode charges one score call per problem per
-    step where lock-step batches them — which is why the bench curve
-    and this test both pin ``max_live=2``."""
+    better.  Completions landing in the same event-mode tick batch
+    into one score_multi call charged once (like lock-step's barrier
+    pass), so scoring cost no longer scales with how many problems
+    finish together; ``max_live=2`` stays pinned to keep admission
+    pressure binding for the p99 comparison."""
     reqs = poisson_requests(PROMPTS * 2, rate=0.1, seed=5)
     engines, loops = {}, {}
     for refill in (False, True):
@@ -339,3 +340,82 @@ def test_lm_refill_decode_iterations_never_exceed_lockstep(tiny_models):
     assert engines[True].n_decode_steps <= engines[False].n_decode_steps
     assert loops[True].slo.report()["p99_tta"] < \
         loops[False].slo.report()["p99_tta"]
+
+
+# ---------------------------------------------------------------------------
+# Same-tick completion batching (event mode) + First-Finish truncation
+# ---------------------------------------------------------------------------
+
+def test_refill_batches_same_tick_completions_into_one_score_call(
+        tiny_models):
+    """Problems whose steps fully decode on the same stream tick score
+    in ONE padded score_multi call: the number of PRM calls is strictly
+    below the number of per-problem scoring events, at least one call
+    carries several problems — and, because score_multi is
+    composition-independent, the results stay bit-identical to the
+    batch sweep."""
+    _, be_base = _lm_backend(tiny_models, "tree")
+    base = run_search_many(be_base, SCFG, PROMPTS)
+    engine, backend = _lm_backend(tiny_models, "tree")
+    calls = []
+    orig = backend.score_multi
+
+    def counting(reqs):
+        calls.append(len(reqs))
+        return orig(reqs)
+
+    backend.score_multi = counting
+    loop = ServingLoop(backend, SCFG,
+                       [Request(prompt=p) for p in PROMPTS],
+                       cfg=ServingConfig(refill=True))
+    out = loop.run()
+    _assert_results_identical(base, out)
+    n_events = sum(calls)               # per-problem scoring events
+    assert n_events > 0
+    assert any(n >= 2 for n in calls)   # a tick really batched
+    assert len(calls) < n_events        # fewer PRM calls than events
+
+
+def test_first_finish_truncation_marker_stub():
+    """A First-Finish halt lands between a step's decode boundary
+    (``record_decode`` in ``note_children``) and its completion
+    snapshot (``record_step``), leaving a trailing ``decode_trace``
+    entry with no ``kv_trace`` twin.  ``halt()`` stamps exactly how
+    many, so consumers pair the completed prefix instead of skipping
+    halted problems."""
+    reqs = [Request(prompt=p) for p in STUB_PROMPTS]
+    ff = ServingLoop(StubBackend(), STUB_SCFG, reqs,
+                     cfg=ServingConfig(refill=True, first_finish=True))
+    ff_out = ff.run()
+    full = ServingLoop(StubBackend(), STUB_SCFG, reqs,
+                       cfg=ServingConfig(refill=True))
+    full_out = full.run()
+    n_halted = 0
+    for res in ff_out:
+        t = res.tree.truncated_steps
+        assert t >= 0
+        assert len(res.tree.decode_trace) - t == len(res.tree.kv_trace)
+        n_halted += t > 0
+    assert n_halted > 0                 # the marker is actually binding
+    for res in full_out:                # run-to-width never truncates
+        assert res.tree.truncated_steps == 0
+        assert len(res.tree.decode_trace) == len(res.tree.kv_trace)
+
+
+def test_first_finish_truncation_pairs_engine_trace_lm(tiny_models):
+    """The fig2 io_validation contract on a real LM backend: every
+    problem — including ones halted mid-step by First-Finish — pairs
+    its non-truncated decode boundaries 1:1 with its namespace's
+    engine KV trace."""
+    engine, backend = _lm_backend(tiny_models, "tree")
+    loop = ServingLoop(backend, SCFG,
+                       [Request(prompt=p) for p in PROMPTS],
+                       cfg=ServingConfig(refill=True, first_finish=True))
+    out = loop.run()
+    for res in out:
+        ns = res.tree.node(0).payload["ns"]
+        eng_trace = backend.kv_trace_by_problem.get(ns, [])
+        n_valid = len(res.tree.decode_trace) - res.tree.truncated_steps
+        assert n_valid == len(eng_trace)
+    assert engine.alloc.used_pages == 0
+    engine.alloc.check_invariants()

@@ -81,6 +81,97 @@ def test_tree_metadata_invariants_random_ops(ops):
         _assert_metadata_invariants(a)
 
 
+def _assert_meta_equal(inc, full):
+    assert inc.n_unique == full.n_unique
+    assert inc.n_logical == full.n_logical
+    assert inc.page_list.shape == full.page_list.shape
+    np.testing.assert_array_equal(inc.page_list, full.page_list)
+    np.testing.assert_array_equal(inc.page_mask, full.page_mask)
+    np.testing.assert_array_equal(inc.page_lens, full.page_lens)
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(
+    st.one_of(
+        st.tuples(st.just("new"), st.integers(0, 40)),
+        st.tuples(st.just("append"), st.integers(1, 30)),
+        st.tuples(st.just("branch"), st.integers(1, 3)),
+        st.tuples(st.just("free"), st.integers(0, 10)),
+        st.tuples(st.just("swap_out"), st.integers(0, 1)),   # arg: partial?
+        st.tuples(st.just("swap_in"), st.just(0)),
+    ), min_size=2, max_size=35))
+def test_tree_metadata_incremental_matches_full_random_ops(ops):
+    """The incremental metadata state must emit arrays BIT-IDENTICAL to
+    the from-scratch oracle after every mutation — including the swap
+    ops that renumber pages under the state's feet (swap_in re-seats a
+    namespace onto fresh physical ids; partial swap_out releases only a
+    subtree's exclusive pages while shared prefix pages stay live)."""
+    a = PageAllocator(n_pages=256, page_size=16)
+    by_ns = {}
+    parked = set()
+    rng = np.random.default_rng(3)
+
+    def pick(keys):
+        keys = sorted(keys)
+        return keys[int(rng.integers(len(keys)))] if keys else None
+
+    def live(ns):
+        return [s for s in by_ns[ns] if not a.seqs[s].swapped]
+
+    for op, arg in ops:
+        live_ns = [ns for ns in by_ns if ns not in parked and live(ns)]
+        try:
+            if op == "new":
+                h = a.new_seq(arg)
+                by_ns.setdefault(h.ns, []).append(h.seq_id)
+            elif op == "append" and live_ns:
+                a.append_tokens(pick(live(pick(live_ns))), arg)
+            elif op == "branch" and live_ns:
+                ns = pick(live_ns)
+                bs = a.branch(pick(live(ns)), arg)
+                by_ns[ns].extend(b.seq_id for b in bs)
+            elif op == "free" and by_ns:
+                ns = pick(by_ns)
+                sids = by_ns[ns]
+                a.free_seq(sids.pop(int(rng.integers(len(sids)))))
+                if not sids:
+                    del by_ns[ns]
+                    parked.discard(ns)
+            elif op == "swap_out" and live_ns:
+                ns = pick(live_ns)
+                sids = live(ns)
+                if arg and len(sids) > 1:       # subtree-grained spill
+                    k = int(rng.integers(1, len(sids)))
+                    sids = sorted(rng.choice(sids, k, replace=False))
+                if len(sids) == len(by_ns[ns]) and ns not in a.swapped:
+                    a.swap_out_seqs(sids)       # whole-namespace demotion
+                else:
+                    a.swap_out_seqs(sids, partial=True)
+                if not live(ns):
+                    parked.add(ns)
+            elif op == "swap_in":
+                cand = [ns for ns in by_ns
+                        if any(a.seqs[s].swapped for s in by_ns[ns])]
+                ns = pick(cand)
+                if ns is not None:
+                    a.swap_in_seqs([s for s in by_ns[ns]
+                                    if a.seqs[s].swapped])
+                    parked.discard(ns)
+        except OutOfPages:
+            pass
+        a.check_invariants()
+        # decode rows: live (non-swapped) sequences + a padding slot,
+        # like the engine's padded batch layout
+        rows = [s for s, h in sorted(a.seqs.items()) if not h.swapped]
+        rows.append(None)
+        inc = a.tree_metadata(rows, pad_page=0, incremental=True)
+        full = a.tree_metadata(rows, pad_page=0, incremental=False,
+                               check=True)
+        _assert_meta_equal(inc, full)
+    assert a.meta_inc_builds > 0        # the fast path actually ran
+
+
 def test_tree_metadata_inactive_rows_and_memo():
     a = PageAllocator(64, 8)
     h = a.new_seq(20)               # 3 pages (last fill 4)
