@@ -19,9 +19,12 @@ the serving trajectory across PRs; CI uploads
 it as an artifact from the smoke invocation and
 ``benchmarks/trend_check.py`` fails the smoke job on a >2x tok/s
 regression against the committed copy (serving rows gate on p99
-time-to-answer, where LOWER is better).  The serving rows are also
-written to ``<out>/serving_latency_curve.json`` — the latency-curve
-artifact the slow CI job uploads.
+time-to-answer, where LOWER is better; adaptive rows gate on accuracy,
+which is deterministic and must not regress at all — and any BENCH
+``acc`` field that is exactly 0.0 fails outright).  The serving rows
+are also written to ``<out>/serving_latency_curve.json`` and the
+adaptive accuracy-vs-tokens frontier to
+``<out>/adaptive_frontier.json`` — artifacts the slow CI job uploads.
 
 ``--smoke`` shrinks everything to a tiny 2-step configuration that
 finishes in a couple of minutes on CPU — a liveness check for the whole
@@ -53,9 +56,15 @@ def main() -> None:
 
     # one jobs table; smoke/fast only shrink the per-job parameters
     if args.smoke:
+        # t2 smoke is sized so every decode row's accuracy is non-zero
+        # (an easier 2-op task, enough training, and enough search
+        # steps to complete trajectories) — the trend check fails any
+        # BENCH section whose acc is exactly 0.0, because a zero means
+        # the row measured a stack that never produced an answer
         p = dict(fig2_problems=4, fig2_io=dict(io_width=6, io_problems=1),
                  t1_widths=(16,), t1_problems=6,
-                 t2=dict(train_steps=30, n_problems=1, width=6, max_steps=2),
+                 t2=dict(train_steps=240, n_problems=2, width=6,
+                         max_steps=4, task_ops=2),
                  t3_problems=8)
     elif args.fast:
         p = dict(fig2_problems=16, fig2_io={},
@@ -92,7 +101,8 @@ def main() -> None:
                            "kernels": res.get("kernels", []),
                            "sweep": res.get("sweep", []),
                            "pressure": res.get("pressure", []),
-                           "serving": res.get("serving", [])},
+                           "serving": res.get("serving", []),
+                           "adaptive": res.get("adaptive", [])},
                           f, indent=1, default=str)
             print(f"[table2] rows -> {args.bench_json}")
             curve = os.path.join(args.out, "serving_latency_curve.json")
@@ -101,6 +111,12 @@ def main() -> None:
                            "rows": res.get("serving", [])},
                           f, indent=1, default=str)
             print(f"[table2] serving latency curve -> {curve}")
+            frontier = os.path.join(args.out, "adaptive_frontier.json")
+            with open(frontier, "w") as f:
+                json.dump({"smoke": args.smoke, "fast": args.fast,
+                           "rows": res.get("adaptive", [])},
+                          f, indent=1, default=str)
+            print(f"[table2] adaptive frontier -> {frontier}")
         print(f"[{name}] done in {res['wall_s']}s\n")
 
 

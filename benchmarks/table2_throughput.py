@@ -36,7 +36,15 @@ refcounted tree sharing, lock-step batched decode — and measures
     refill, p50/p99 time-to-answer per arrival rate on the loop's
     *virtual* clock (stage costs, not wall time — the rows are
     deterministic and machine-independent, so the trend check gates on
-    p99 directly).
+    p99 directly),
+  * adaptive compute allocation (the ``adaptive`` section): uniform
+    sweeps at several widths vs the difficulty-adaptive budget
+    controller on the oracle synthetic task through the eval harness —
+    accuracy vs total generated tokens, the Fig. 2-style frontier.
+    Deterministic in its seed, so the trend check gates on accuracy
+    exactly (the ``adaptive`` row must keep dominating: at-least-equal
+    accuracy at strictly fewer tokens than the width-matched uniform
+    row).
 
 Three decode modes per method:
 
@@ -419,8 +427,74 @@ def measure_kernels(lm, lm_params, width: int = 12, n_steps: int = 6,
     return rows
 
 
+def measure_adaptive(n: int = 120, seed: int = 0, widths=(4, 8, 16),
+                     base_width: int = 8, max_steps: int = 6):
+    """Difficulty-adaptive accuracy-vs-tokens frontier (the ``adaptive``
+    BENCH section): uniform-width sweeps at several widths vs the
+    budget controller on the same problems.
+
+    Runs the oracle synthetic task through the eval harness — no model
+    weights, pure search dynamics — so every row is deterministic in
+    ``seed`` and the trend check can gate on accuracy exactly.  Two
+    adaptive rows bracket the frontier:
+
+      * ``adaptive``      — confidence wind-down only (a completed
+        trajectory clearing the reward bar drops the problem to width
+        1): the dominance row, at-least-equal accuracy at strictly
+        fewer generated tokens than the width-matched uniform sweep;
+      * ``adaptive-grow`` — wind-down plus growth on hard problems
+        (low early PRM signal doubles the width): a second frontier
+        point buying accuracy with the tokens the easy problems freed.
+
+    The width-matched dominance predicate is recorded on the row
+    (``dominates_uniform``) so the bench artifact is self-checking.
+    """
+    from repro.core import AdaptiveConfig, ETSConfig, SearchConfig
+    from repro.eval import get_task, run_eval
+
+    task = get_task("synthetic")
+
+    def point(width, adaptive=None):
+        scfg = SearchConfig(method="ets", width=width, max_steps=max_steps,
+                            ets=ETSConfig(lambda_b=1.0, lambda_d=1.0))
+        rep = run_eval(task, scfg, n=n, seed=seed, adaptive=adaptive)
+        return rep
+
+    rows = []
+    for w in widths:
+        rep = point(w)
+        rows.append({"path": f"uniform-w{w}", "width": w,
+                     "n_problems": n, "acc": rep.accuracy,
+                     "total_tokens": rep.total_gen_tokens,
+                     "tokens_per_problem": rep.gen_tokens_per_doc})
+    # confidence wind-down only: thresholds out of reach, so the ONLY
+    # signal is a completed trajectory clearing confident_reward
+    winddown = AdaptiveConfig(easy_threshold=2.0, hard_threshold=-1.0,
+                              min_width=1)
+    rep = point(base_width, adaptive=winddown)
+    adaptive_row = {"path": "adaptive", "width": base_width,
+                    "n_problems": n, "acc": rep.accuracy,
+                    "total_tokens": rep.total_gen_tokens,
+                    "tokens_per_problem": rep.gen_tokens_per_doc}
+    rows.append(adaptive_row)
+    # wind-down + growth on hard problems: trades the freed tokens for
+    # accuracy (a second frontier point, not the dominance row)
+    grow = AdaptiveConfig(easy_threshold=2.0, min_width=1)
+    rep = point(base_width, adaptive=grow)
+    rows.append({"path": "adaptive-grow", "width": base_width,
+                 "n_problems": n, "acc": rep.accuracy,
+                 "total_tokens": rep.total_gen_tokens,
+                 "tokens_per_problem": rep.gen_tokens_per_doc})
+    uniform = next(r for r in rows
+                   if r["path"] == f"uniform-w{base_width}")
+    adaptive_row["dominates_uniform"] = bool(
+        adaptive_row["acc"] >= uniform["acc"]
+        and adaptive_row["total_tokens"] < uniform["total_tokens"])
+    return rows
+
+
 def run(train_steps: int = 150, n_problems: int = 6, width: int = 12,
-        max_steps: int = 8):
+        max_steps: int = 8, task_ops: int = 4):
     from repro.configs import get_config
     from repro.core import ETSConfig, SearchConfig, run_search
     from repro.models.model import build_model
@@ -430,7 +504,7 @@ def run(train_steps: int = 150, n_problems: int = 6, width: int = 12,
     from repro.training.task import (ArithmeticTask, EOS, NEWLINE,
                                      VOCAB_SIZE, encode)
 
-    task = ArithmeticTask(n_ops=4, seq_len=64)
+    task = ArithmeticTask(n_ops=task_ops, seq_len=64)
     lm_cfg = dataclasses.replace(get_config("tiny-lm"),
                                  vocab_size=VOCAB_SIZE)
     lm = build_model(lm_cfg, remat=False)
@@ -610,6 +684,26 @@ def run(train_steps: int = 150, n_problems: int = 6, width: int = 12,
           "(earlier retirement -> earlier admission under a binding "
           "max_live; at rates too sparse to queue the two schedules "
           "coincide)")
+
+    # -- adaptive compute allocation: accuracy-vs-tokens frontier -------
+    ad = measure_adaptive()
+    out["adaptive"] = ad
+    n_ad = ad[0]["n_problems"]
+    print(f"\n== adaptive compute allocation ({n_ad} synthetic problems, "
+          f"ets, accuracy vs total generated tokens) ==")
+    print(f"{'path':14s} {'width':>5s} {'acc':>6s} {'tokens':>9s} "
+          f"{'tok/prob':>9s}")
+    for r in ad:
+        print(f"{r['path']:14s} {r['width']:5d} {r['acc']:6.3f} "
+              f"{r['total_tokens']:9d} {r['tokens_per_problem']:9.1f}")
+    arow = next(r for r in ad if r["path"] == "adaptive")
+    urow = next(r for r in ad if r["width"] == arow["width"]
+                and r["path"].startswith("uniform"))
+    print(f"-> adaptive {'dominates' if arow['dominates_uniform'] else 'DOES NOT dominate'} "
+          f"the width-matched uniform sweep: acc {urow['acc']:.3f} -> "
+          f"{arow['acc']:.3f} at {urow['total_tokens']} -> "
+          f"{arow['total_tokens']} tokens (confidence wind-down frees "
+          f"the budget redundant votes were spending)")
 
     sp = {(r["method"], r["path"]): r for r in out["rows"]}
     for method in ["rebase", "ets"]:

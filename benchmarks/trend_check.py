@@ -21,6 +21,16 @@ rows are tiny and the serial ones especially jittery, so the check runs
 in the non-blocking slow job: a red trend is a prompt to look at the
 uploaded artifact, not a merge gate.
 
+The ``adaptive`` section (the difficulty-adaptive accuracy-vs-tokens
+frontier) gates on ``acc`` with a per-section bound of exactly 1.0:
+those rows run the deterministic synthetic oracle at a fixed seed, so
+ANY accuracy drop is a real behavior change, never noise.  On top of
+the row matching, the fresh file is scanned for ``acc`` fields that are
+exactly 0.0 — in every section, baseline or not — and any hit fails
+the check: a zero accuracy means the measured stack never produced an
+answer (e.g. an undertrained smoke config whose searches cannot
+complete), which would silently turn the accuracy gates vacuous.
+
 Large *improvements* (fresh > committed x max_ratio) are flagged too —
 as non-failing baseline-staleness warnings: a faster runner or an
 orchestration win that big means the committed ``BENCH_table2.json``
@@ -139,23 +149,39 @@ def main() -> None:
               f"fast={committed.get('fast')}, fresh "
               f"smoke={fresh.get('smoke')} fast={fresh.get('fast')})")
     failures, stale, all_deltas = [], [], []
-    sections = (("decode", ("method", "path"), "tok_per_s", False),
-                ("prefill", ("path",), "tok_per_s", False),
-                ("kernels", ("path",), "tok_per_s", False),
-                ("sweep", ("path",), "tok_per_s", False),
-                ("pressure", ("path",), "tok_per_s", False),
-                ("serving", ("path", "arrival_rate"), "p99_tta", True))
-    for section, keys, metric, lower in sections:
+    # (section, match keys, metric, lower_is_better, own max_ratio).
+    # A None ratio uses --max-ratio; the adaptive section pins 1.0 —
+    # its accuracies are deterministic, so any drop is a real change.
+    sections = (("decode", ("method", "path"), "tok_per_s", False, None),
+                ("prefill", ("path",), "tok_per_s", False, None),
+                ("kernels", ("path",), "tok_per_s", False, None),
+                ("sweep", ("path",), "tok_per_s", False, None),
+                ("pressure", ("path",), "tok_per_s", False, None),
+                ("serving", ("path", "arrival_rate"), "p99_tta", True,
+                 None),
+                ("adaptive", ("path",), "acc", False, 1.0))
+    for section, keys, metric, lower, ratio in sections:
         committed_rows = committed.get("rows" if section == "decode"
                                        else section, [])
         fresh_rows = fresh.get("rows" if section == "decode"
                                else section, [])
         f, s, d = _compare(section, committed_rows, fresh_rows, keys,
-                           args.max_ratio, metric=metric,
-                           lower_is_better=lower)
+                           ratio if ratio is not None else args.max_ratio,
+                           metric=metric, lower_is_better=lower)
         failures += f
         stale += s
         all_deltas.append((section, d))
+    # zero-accuracy scan: every acc field in the fresh file must be
+    # non-zero, in every section, whether or not a baseline row exists
+    for section in ("rows",) + tuple(s[0] for s in sections[1:]):
+        for r in fresh.get(section, []):
+            if "acc" in r and float(r["acc"]) == 0.0:
+                name = "/".join(str(r[k]) for k in ("method", "path")
+                                if k in r)
+                label = f"{section} {name}: acc is exactly 0.0"
+                print(f"[trend] {label} (the measured stack never "
+                      f"produced an answer)")
+                failures.append(label)
     md = _markdown_summary(all_deltas, args.max_ratio)
     step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
     for path in filter(None, (step_summary, args.summary_out)):

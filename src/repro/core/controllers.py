@@ -1,6 +1,6 @@
 """Unified PRM-guided tree-search controllers.
 
-One loop, four retention policies (the paper's baselines + ETS):
+One loop, six retention policies (the paper's baselines + ETS):
 
   * ``beam``    — keep the top-k candidates by reward, split the budget
                   evenly (Snell et al., 2024).  k fixed or sqrt(N).
@@ -9,6 +9,9 @@ One loop, four retention policies (the paper's baselines + ETS):
   * ``rebase``  — keep everything, allocate by Eq. 1 (Wu et al., 2024).
   * ``ets``     — REBASE weights + ILP prune + re-weight (this paper).
   * ``ets-kv``  — ETS with lambda_d = 0 (Table 3 ablation).
+  * ``mcts``    — Adaptive Parallel MCTS (PAPERS.md): UCT over visit
+                  counts, arms within a gap of the best stay
+                  parallel-expanded, REBASE split over the kept arms.
 
 The controller is generation-backend-agnostic: backends expand leaves,
 score them with a PRM, and embed last steps.  Backends include the
@@ -74,6 +77,22 @@ default.
 Per the paper (§5.1): the search width shrinks as trajectories complete,
 and the final answer is selected by weighted majority voting with the
 final PRM score as weight.
+
+Difficulty-adaptive compute allocation
+--------------------------------------
+Uniform per-problem width wastes budget: easy problems solve at a
+fraction of the configured width while hard ones would profit from
+more (Snell et al., 2024; ROADMAP item 3).  ``AdaptiveConfig`` +
+``BudgetController`` turn the sweep's early PRM scores into an online
+difficulty signal and re-target each problem's effective width
+(``SearchState.set_width``) at the demand boundary, under a global
+generated-token budget; the scheduler re-books the problem's admission
+reservation against the adapted width (``_rebook``), so the
+``WorkingSetEstimator``-based reservations track what the problem will
+actually use instead of the a-priori ``width x step-pages`` bound.
+With ``enabled=False`` (or no ``adaptive`` config at all) every hook is
+a strict no-op and the sweep stays bit-identical to ``run_search_many``
+— property-tested in ``tests/test_adaptive.py``.
 """
 from __future__ import annotations
 
@@ -87,7 +106,7 @@ from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
-from .ets import ETSConfig, ets_prune
+from .ets import ETSConfig, ets_prune, mcts_step
 from .rebase import rebase_weights
 from .tree import SearchTree
 
@@ -157,11 +176,13 @@ class Backend(Protocol):
 
 @dataclass
 class SearchConfig:
-    method: str = "ets"            # beam | dvts | rebase | ets | ets-kv
+    method: str = "ets"       # beam | dvts | rebase | ets | ets-kv | mcts
     width: int = 16                # N — total continuation budget per step
     keep: int = 0                  # beam/dvts: trajectories kept (0=sqrt(N))
     max_steps: int = 16
     batched: bool = True           # one backend call per step stage
+    mcts_c: float = 1.4            # mcts: UCT exploration constant
+    mcts_gap: float = 0.35         # mcts: parallel-expansion UCT window
     ets: ETSConfig = field(default_factory=ETSConfig)
 
     def __post_init__(self):
@@ -169,9 +190,17 @@ class SearchConfig:
             self.ets = dataclasses.replace(self.ets, lambda_d=0.0,
                                            use_clustering=False)
 
+    def n_keep_for(self, width: int) -> int:
+        """Trajectories kept at the given *effective* width.  The
+        ``keep=0`` default derives sqrt from the width actually in
+        force — the budget controller adapts widths per problem
+        mid-search, and beam/dvts must stay well-defined under the
+        adapted width, not the static config."""
+        return self.keep if self.keep else max(int(math.sqrt(width)), 1)
+
     @property
     def n_keep(self) -> int:
-        return self.keep if self.keep else max(int(math.sqrt(self.width)), 1)
+        return self.n_keep_for(self.width)
 
 
 @dataclass
@@ -355,19 +384,61 @@ class SearchState:
         self.backend = backend
         self.scfg = scfg
         self.tree = tree if tree is not None else SearchTree()
-        self.N = scfg.width
+        # effective width: starts at the configured width; the budget
+        # controller may re-target it mid-search (set_width)
+        self.width = scfg.width
+        self.N = self.width
         self.completed: List[Tuple[Any, float]] = []
         self.steps = 0
         # leaf id -> continuation count (step 0 expands the root)
         self.live: Dict[int, int] = {0: self.N}
         # subtree id for DVTS (assigned at the first expansion)
         self.subtree_of: Dict[int, int] = {}
+        # node id -> visit count (mcts backprop; root included)
+        self.visits: Dict[int, int] = {}
         self.finished = False
         self.phase = "demand"
         self._leaf_counts: List[Tuple[int, int]] = []
         self._candidates: List[int] = []
         self._open: List[int] = []
         self._rewards: List[float] = []
+
+    @property
+    def n_keep(self) -> int:
+        """Beam/dvts keep count at this problem's *current* effective
+        width (``keep=0`` derives sqrt(width) from the adapted width,
+        not the static config)."""
+        return self.scfg.n_keep_for(self.width)
+
+    def set_width(self, width: int) -> None:
+        """Adapt this problem's effective width (the budget
+        controller's entry point).  Valid only at the demand boundary,
+        where no stage output is in flight.
+
+        The remaining budget becomes ``width - len(completed)`` and the
+        pending continuation counts are rescaled to it with
+        largest-remainder rounding (ties toward the lower leaf id), so
+        the next step's demand matches the adapted width while the
+        relative allocation the retention policy chose is preserved.
+        A no-op when the width is unchanged — with adaptation disabled
+        the state is bit-identical to one that never saw this method.
+        """
+        assert self.phase == "demand", self.phase
+        width = max(int(width), 1)
+        if width == self.width:
+            return
+        self.width = width
+        self.N = max(width - len(self.completed), 0)
+        total = sum(self.live.values())
+        if self.N <= 0 or total <= 0:
+            return
+        quota = {leaf: n * self.N / total for leaf, n in self.live.items()}
+        alloc = {leaf: int(q) for leaf, q in quota.items()}
+        order = sorted(quota, key=lambda lf: (alloc[lf] - quota[lf], lf))
+        short = self.N - sum(alloc.values())
+        for i in range(short):
+            alloc[order[i % len(order)]] += 1
+        self.live = {leaf: n for leaf, n in alloc.items() if n > 0}
 
     @property
     def exhausted(self) -> bool:
@@ -415,7 +486,7 @@ class SearchState:
         for leaf, _ in self._leaf_counts:
             kids = kids_of.get(leaf, [])
             if leaf == 0 and scfg.method == "dvts":
-                k = scfg.n_keep
+                k = self.n_keep
                 for j, kid in enumerate(kids):
                     self.subtree_of[kid] = j % k
             else:
@@ -438,7 +509,7 @@ class SearchState:
         for f in finished:
             self.completed.append((self.backend.answer(tree, f),
                                    tree.node(f).reward))
-        self.N = max(scfg.width - len(self.completed), 0)
+        self.N = max(self.width - len(self.completed), 0)
         open_c = [c for c in candidates if not tree.node(c).finished]
         if not open_c or self.N == 0:
             tree.record_step(list(candidates))
@@ -464,7 +535,7 @@ class SearchState:
             counts = rebase_weights(rewards, N, scfg.ets.rebase_temperature)
             live = {c: int(w) for c, w in zip(open_c, counts)}
         elif method == "beam":
-            k = min(scfg.n_keep, len(open_c))
+            k = min(self.n_keep, len(open_c))
             order = np.argsort(rewards)[::-1][:k]
             per = max(N // k, 1)
             live = {open_c[int(i)]: per for i in order}
@@ -482,6 +553,21 @@ class SearchState:
             step = ets_prune(tree, open_c, rewards, N, scfg.ets, embs)
             live = {open_c[i]: int(n)
                     for i, n in zip(step.selected, step.counts)}
+        elif method == "mcts":
+            # Adaptive Parallel MCTS: back-propagate a visit along each
+            # open candidate's root path, then let the UCT profile
+            # decide how many arms stay parallel-expanded this step
+            for c in open_c:
+                nid = c
+                while nid >= 0:          # root's parent is -1
+                    self.visits[nid] = self.visits.get(nid, 0) + 1
+                    nid = tree.node(nid).parent
+            sel, counts = mcts_step(
+                rewards, [self.visits[c] for c in open_c],
+                self.visits.get(0, 1), N, c_uct=scfg.mcts_c,
+                gap=scfg.mcts_gap,
+                temperature=scfg.ets.rebase_temperature)
+            live = {open_c[i]: int(n) for i, n in zip(sel, counts)}
         else:
             raise ValueError(method)
         self.live = {c: n for c, n in live.items() if n > 0}
@@ -654,6 +740,137 @@ class WorkingSetEstimator:
         return max(step_pages, min(cap, obs))
 
 
+@dataclass
+class AdaptiveConfig:
+    """Difficulty-adaptive compute allocation (ROADMAP item 3).
+
+    The mean PRM score of a problem's first ``signal_steps`` scored
+    steps is its online difficulty signal — cheap (the sweep computes
+    those scores anyway) and available before most of the budget is
+    spent.  The budget controller then re-targets the problem's
+    effective width once: easy problems (signal ``>= easy_threshold``)
+    shrink to ``width * shrink_factor``, hard ones (``<=
+    hard_threshold``) grow to ``width * grow_factor``, both clamped to
+    ``[min_width, max_width]``; problems in the middle band keep the
+    configured width.  A global generated-token budget caps the sweep:
+    once ``token_budget`` tokens have been generated across all
+    problems, every subsequently adapted problem winds down to
+    ``min_width`` instead of its target.
+
+    ``enabled=False`` is the uniform-width oracle: every controller
+    hook is a no-op and the sweep is bit-identical to one constructed
+    without an ``adaptive`` config at all (property-tested).
+    """
+    enabled: bool = True
+    signal_steps: int = 2          # scored steps before deciding
+    min_width: int = 2
+    max_width: int = 0             # 0 -> 2x the configured width
+    easy_threshold: float = 0.60   # mean early PRM score above: shrink
+    hard_threshold: float = 0.45   # mean early PRM score below: grow
+    shrink_factor: float = 0.5
+    grow_factor: float = 2.0
+    token_budget: int = 0          # global generated-token cap (0 = off)
+    # confidence wind-down: once a problem holds a completed trajectory
+    # whose final PRM reward reaches this, it is treated as solved and
+    # its width drops to min_width — final-answer rewards separate far
+    # better than mid-search ones, so this is the strongest (and
+    # cheapest) difficulty signal of all.  <= 0 disables.
+    confident_reward: float = 0.7
+
+
+class BudgetController:
+    """Per-problem difficulty-adaptive width under a global token budget.
+
+    The scheduler calls ``observe`` after every scored step (feeding the
+    difficulty signal and the token spend) and ``target_width`` at every
+    demand boundary; a changed target is applied with
+    ``SearchState.set_width`` and the problem's admission reservation is
+    re-booked against the adapted width (``SweepScheduler._rebook``), so
+    the same signal that sizes the search also sizes its
+    :class:`WorkingSetEstimator`-based page reservation.  All decisions
+    are deterministic functions of the scores the sweep computed anyway.
+    """
+
+    def __init__(self, acfg: AdaptiveConfig, scfg: SearchConfig):
+        self.acfg = acfg
+        self.scfg = scfg
+        self._signal: Dict[int, List[float]] = {}   # idx -> early scores
+        self.width_of: Dict[int, int] = {}          # idx -> decided target
+        self._tokens: Dict[int, int] = {}           # idx -> generated toks
+
+    @property
+    def max_width(self) -> int:
+        return self.acfg.max_width or 2 * self.scfg.width
+
+    @property
+    def spent_tokens(self) -> int:
+        """Generated tokens across every observed problem so far."""
+        return sum(self._tokens.values())
+
+    def observe(self, idx: int, st: SearchState,
+                scores: Sequence[float]) -> None:
+        """Fold one scored step into the difficulty signal and the
+        token ledger.  Token spend is measured by the backend when it
+        can (``problem_gen_tokens``), else derived from the tree."""
+        if not self.acfg.enabled:
+            return
+        sig = self._signal.setdefault(idx, [])
+        if len(sig) < self.acfg.signal_steps and len(scores):
+            sig.append(float(np.mean(scores)))
+        fn = getattr(st.backend, "problem_gen_tokens", None)
+        if fn is not None:
+            self._tokens[idx] = int(fn(st.tree))
+        else:
+            root = st.tree.node(0).n_tokens
+            self._tokens[idx] = sum(n.n_tokens
+                                    for n in st.tree.nodes) - root
+
+    def difficulty(self, idx: int) -> Optional[float]:
+        """Mean early PRM score (LOW means hard), or None until
+        ``signal_steps`` scored steps are in."""
+        sig = self._signal.get(idx, ())
+        if len(sig) < self.acfg.signal_steps:
+            return None
+        return float(np.mean(sig))
+
+    def target_width(self, idx: int, st: SearchState) -> int:
+        """The width this problem should run at right now."""
+        if not self.acfg.enabled:
+            return st.width
+        a = self.acfg
+        # confidence wind-down: a completed trajectory whose final
+        # reward clears the bar means the problem is (almost surely)
+        # solved — the remaining width would only buy redundant votes
+        if a.confident_reward > 0 and any(
+                r >= a.confident_reward for _, r in st.completed):
+            return a.min_width
+        w = self.width_of.get(idx)
+        if w is None:
+            d = self.difficulty(idx)
+            if d is None:
+                return st.width        # still gathering the signal
+            base = self.scfg.width
+            if d >= a.easy_threshold:
+                w = max(a.min_width, int(round(base * a.shrink_factor)))
+            elif d <= a.hard_threshold:
+                w = min(self.max_width, int(round(base * a.grow_factor)))
+            else:
+                w = base
+            self.width_of[idx] = w
+        if a.token_budget and self.spent_tokens >= a.token_budget:
+            w = min(w, a.min_width)    # budget spent: wind down
+        return w
+
+    def admission_width(self) -> int:
+        """Expected width of a not-yet-signalled problem — what
+        admission control should reserve growth for: the mean decided
+        target so far, else the configured width."""
+        if not (self.acfg.enabled and self.width_of):
+            return self.scfg.width
+        ws = self.width_of.values()
+        return max(int(round(sum(ws) / len(ws))), 1)
+
+
 class SweepScheduler:
     """Drive many searches in lock-step on one shared backend.
 
@@ -702,7 +919,8 @@ class SweepScheduler:
                  prompts: Optional[Sequence[Sequence[int]]] = None,
                  trees: Optional[Sequence[SearchTree]] = None,
                  max_live: Optional[int] = None,
-                 spill: str = "namespace"):
+                 spill: str = "namespace",
+                 adaptive: Optional[AdaptiveConfig] = None):
         assert (prompts is None) != (trees is None), \
             "pass exactly one of prompts / trees"
         assert spill in ("namespace", "subtree"), spill
@@ -744,7 +962,19 @@ class SweepScheduler:
                              "problem_pages", "problem_swapped_pages",
                              "swap_out_problem", "swap_in_problem")))
         self.estimator = WorkingSetEstimator()
-        self._reserved: Dict[int, int] = {}      # idx -> admission pages
+        # difficulty-adaptive width: hooks run whenever an AdaptiveConfig
+        # is passed (a disabled config exercises the same code paths as
+        # a strict no-op — the bit-identity oracle); None skips them
+        self.controller = BudgetController(adaptive, scfg) \
+            if adaptive is not None else None
+        # admission reservations live in the allocator-side ledger (the
+        # single place the "reserved sum never exceeds the pool"
+        # invariant is enforced); None when pressure management is off
+        self._reserved = None
+        if self._mem:
+            from repro.kvcache.allocator import ReservationLedger
+            self._reserved = ReservationLedger(
+                backend.capacity()["total_pages"])
         self._prompt_pages: Dict[int, int] = {}
         self._peak: Dict[int, int] = {}          # idx -> peak phys pages
 
@@ -939,14 +1169,20 @@ class SweepScheduler:
         cap = self.backend.capacity()
         avail = cap["total_pages"] - self._committed_pages()
         step_pages = self.backend.step_pages_per_branch()
+        # growth term: under adaptation, reserve for the width problems
+        # actually end up running at (the controller's decided-target
+        # mean), not the a-priori config width
+        grow_width = self.scfg.width if self.controller is None \
+            else self.controller.admission_width()
+        # the first 1-2 steps run at the configured width (pre-signal),
+        # so the immediate-step budget keeps the a-priori bound
         first_need = max(self.scfg.width, 1) * step_pages
         budget = cap["free_pages"] - sum(self._step_need(st)
                                          for st in self.live.values())
         out: List[Tuple[int, int, int]] = []
         for idx, item in wave:
             pp = self.backend.prompt_pages(item)
-            est = min(pp + self.estimator.growth(self.scfg.width,
-                                                 step_pages),
+            est = min(pp + self.estimator.growth(grow_width, step_pages),
                       cap["total_pages"])
             if (est > avail or pp + first_need > budget) \
                     and (out or self.live or self.parked):
@@ -1001,13 +1237,12 @@ class SweepScheduler:
         # book the admitted problems' reservations (the halving loop may
         # have admitted a shorter prefix than _reserve_wave cleared)
         for idx, pp, est in reservations[:len(wave)]:
-            self._reserved[idx] = est
+            self._reserved.book(idx, est)
             self._prompt_pages[idx] = pp
             self._peak[idx] = pp
         if self._mem:
             self.stats.max_reserved_pages = max(
-                self.stats.max_reserved_pages,
-                sum(self._reserved.values()))
+                self.stats.max_reserved_pages, self._reserved.total())
 
     # -- retirement ----------------------------------------------------
     def _retire(self, idx: int) -> None:
@@ -1017,10 +1252,43 @@ class SweepScheduler:
             # feed the realized page trace back into admission control
             self.estimator.note(self._peak[idx]
                                 - self._prompt_pages.get(idx, 0))
-        self._reserved.pop(idx, None)
+        if self._reserved is not None:
+            self._reserved.release(idx)
         self._prompt_pages.pop(idx, None)
         self._peak.pop(idx, None)
         _release_problem(self.backend, st.tree, self.stats)
+
+    # -- difficulty-adaptive width -------------------------------------
+    def _adapt(self, idx: int, st: SearchState) -> None:
+        """Apply the budget controller's target width at the demand
+        boundary and re-book the admission reservation against it.
+        No-op without a controller, for finished problems, or outside
+        the demand phase (mid-step widths never change)."""
+        ctl = self.controller
+        if ctl is None or st.finished or st.phase != "demand":
+            return
+        w = ctl.target_width(idx, st)
+        if w != st.width:
+            st.set_width(w)
+            self._rebook(idx, st)
+
+    def _rebook(self, idx: int, st: SearchState) -> None:
+        """Re-tie one problem's admission reservation to its adapted
+        width.  A shrink releases reserved headroom immediately — but
+        never below the pages the problem already holds, so nothing is
+        stranded; a grow raises the reservation only as far as the
+        pool's unreserved headroom allows (the demotion path guards the
+        remainder, exactly as when a problem outgrows its estimate)."""
+        if not self._mem or idx not in self._reserved:
+            return
+        step_pages = self.backend.step_pages_per_branch()
+        want = self._prompt_pages.get(idx, 0) \
+            + self.estimator.growth(st.width, step_pages)
+        cap = self.backend.capacity()["total_pages"]
+        self._reserved.rebook(idx, min(want, cap),
+                              floor=min(self._held_pages(st), cap))
+        self.stats.max_reserved_pages = max(
+            self.stats.max_reserved_pages, self._reserved.total())
 
     # -- one global step -----------------------------------------------
     def step(self) -> bool:
@@ -1039,6 +1307,7 @@ class SweepScheduler:
         states: List[Tuple[int, SearchState]] = []
         for idx in sorted(self.live):
             st = self.live[idx]
+            self._adapt(idx, st)
             lc = st.demand()
             if lc is None:
                 self._retire(idx)
@@ -1078,6 +1347,8 @@ class SweepScheduler:
         score_groups = _score_multi(self.backend, score_reqs)
         embed_reqs, embed_states = [], []
         for (idx, st), scores in zip(score_states, score_groups):
+            if self.controller is not None:
+                self.controller.observe(idx, st, scores)
             to_embed = st.note_scores(scores)
             if st.finished:
                 self._retire(idx)
@@ -1104,7 +1375,9 @@ class SweepScheduler:
 def run_search_many(backend, scfg: SearchConfig,
                     prompts: Sequence[Sequence[int]], *,
                     continuous: bool = True,
-                    max_live: Optional[int] = None) -> List[SearchResult]:
+                    max_live: Optional[int] = None,
+                    adaptive: Optional[AdaptiveConfig] = None
+                    ) -> List[SearchResult]:
     """Multi-problem sweep on one shared backend.
 
     ``continuous=True`` (default) drives the whole sweep through the
@@ -1134,12 +1407,18 @@ def run_search_many(backend, scfg: SearchConfig,
     then resumes bit-identically) instead of raising ``OutOfPages`` —
     only a single problem genuinely exceeding the pool still errors,
     exactly as a solo run would.
+
+    ``adaptive`` (continuous sweeps only) turns on difficulty-adaptive
+    width: early PRM scores re-target each problem's effective width
+    under a global token budget (see :class:`AdaptiveConfig`).  With
+    ``adaptive.enabled`` False the sweep is bit-identical to passing no
+    config at all.
     """
     if not prompts:
         return []
     if continuous:
         return SweepScheduler(backend, scfg, prompts=prompts,
-                              max_live=max_live).run()
+                              max_live=max_live, adaptive=adaptive).run()
     starter = getattr(backend, "start_many", None)
     if starter is not None:
         trees = list(starter(prompts))

@@ -13,11 +13,17 @@ receives next:
 
 ``lambda_d = 0`` with no clustering is the ETS-KV ablation (Table 3);
 ``lambda_b = lambda_d = 0`` degenerates to plain REBASE.
+
+``mcts_step`` (below) is a sibling one-step retention policy — the
+Adaptive Parallel MCTS baseline from PAPERS.md — sharing the REBASE
+allocation machinery so the controller's ``mcts`` method plugs into the
+same batched step protocol as ETS.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -86,3 +92,38 @@ def ets_prune(tree: SearchTree, candidates: Sequence[int],
                              cfg.rebase_temperature)
     return ETSStep(selected=res.selected, counts=counts, weights_all=W,
                    n_clusters=n_clusters, solver_result=res)
+
+
+def mcts_step(rewards: Sequence[float], visits: Sequence[int],
+              total_visits: int, n_total: int, *, c_uct: float = 1.4,
+              gap: float = 0.35, temperature: float = 0.2
+              ) -> Tuple[List[int], np.ndarray]:
+    """One Adaptive Parallel MCTS retention step (PAPERS.md baseline).
+
+    Each candidate arm gets the UCT score
+
+        U_i = R_i + c_uct * sqrt(ln(total_visits) / visits_i)
+
+    and every arm within ``gap`` of the best stays parallel-expanded:
+    a flat UCT profile keeps many arms in flight while a peaked one
+    narrows to few — the "adaptive parallelism" of the baseline —
+    capped at ``n_total`` arms.  The continuation budget is then split
+    over the kept arms by the REBASE softmax over their UCT scores
+    (largest-remainder rounding, so the counts sum exactly to
+    ``n_total``).  Deterministic given rewards and visit counts: ties
+    break toward the lower candidate index, so the serial and batched
+    drivers agree bit-for-bit.
+
+    Returns ``(selected indices, counts)`` aligned like ``ets_prune``.
+    """
+    L = len(rewards)
+    assert L and L == len(visits), (L, len(visits))
+    ln_t = math.log(max(total_visits, 2))
+    uct = np.asarray(rewards, dtype=np.float64) + c_uct * np.sqrt(
+        ln_t / np.maximum(np.asarray(visits, dtype=np.float64), 1.0))
+    best = float(uct.max())
+    keep = sorted((i for i in range(L) if uct[i] >= best - gap),
+                  key=lambda i: (-uct[i], i))
+    keep = keep[:max(min(n_total, L), 1)]
+    counts = rebase_reweight(uct.tolist(), keep, n_total, temperature)
+    return keep, counts

@@ -54,8 +54,9 @@ from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from .controllers import (SearchConfig, SearchResult, SweepScheduler,
-                          _embed_multi, _expand_multi, _score_multi)
+from .controllers import (AdaptiveConfig, SearchConfig, SearchResult,
+                          SweepScheduler, _embed_multi, _expand_multi,
+                          _score_multi)
 
 __all__ = [
     "Request", "ServingConfig", "SLOTracker", "ServingLoop",
@@ -205,13 +206,14 @@ class ServingLoop(SweepScheduler):
     def __init__(self, backend, scfg: SearchConfig,
                  requests: Sequence[Request], *,
                  max_live: Optional[int] = None,
-                 cfg: Optional[ServingConfig] = None):
+                 cfg: Optional[ServingConfig] = None,
+                 adaptive: Optional[AdaptiveConfig] = None):
         reqs = list(requests)
         self.requests = reqs
         self.cfg = cfg if cfg is not None else ServingConfig()
         super().__init__(backend, scfg,
                          prompts=[r.prompt for r in reqs],
-                         max_live=max_live)
+                         max_live=max_live, adaptive=adaptive)
         self.clock = 0.0
         self.slo = SLOTracker()
         self._priority = {i: r.priority for i, r in enumerate(reqs)}
@@ -365,6 +367,7 @@ class ServingLoop(SweepScheduler):
             st = self.live[idx]
             if idx in self._tickets or st.phase != "demand":
                 continue
+            self._adapt(idx, st)
             lc = st.demand()
             if lc is None:
                 self._retire(idx)
@@ -430,6 +433,8 @@ class ServingLoop(SweepScheduler):
         self._charge(self.cfg.score_cost)
         embeds: List[Tuple[int, Any, List[int]]] = []
         for (idx, st, _), scores in zip(batch, all_scores):
+            if self.controller is not None:
+                self.controller.observe(idx, st, scores)
             to_embed = st.note_scores(scores)
             if st.finished:
                 self._retire(idx)
@@ -461,6 +466,7 @@ class ServingLoop(SweepScheduler):
         idx = min(cands, key=lambda i: (self._slack(i),
                                         -self._priority.get(i, 0), i))
         st = self.live[idx]
+        self._adapt(idx, st)
         lc = st.demand()
         if lc is None:
             self._retire(idx)
@@ -480,6 +486,8 @@ class ServingLoop(SweepScheduler):
             return
         scores = _score_multi(self.backend, [(st.tree, to_score)])[0]
         self._charge(self.cfg.score_cost)
+        if self.controller is not None:
+            self.controller.observe(idx, st, scores)
         to_embed = st.note_scores(scores)
         if st.finished:
             self._retire(idx)

@@ -162,6 +162,75 @@ def select_victim(candidates: Sequence[VictimCandidate]) -> VictimCandidate:
                key=lambda c: (-c.slack, c.score, -c.pages, c.key))
 
 
+class ReservationLedger:
+    """Admission-reservation ledger for a fixed-size page pool.
+
+    The sweep scheduler's working-set admission control books one
+    reservation per admitted problem (prompt pages + expected search
+    growth) and releases it at retirement.  This ledger is the single
+    place the invariant "the reserved sum never exceeds the pool"
+    lives: ``book`` asserts it outright, and ``rebook`` — the
+    difficulty-adaptive width hook — clamps so adaptation cannot break
+    it either direction:
+
+      * a *shrink* takes effect immediately (the freed headroom is
+        available to the next admission wave the same global step) but
+        never drops below the ``floor`` the caller passes — the pages
+        the problem actually holds — so shrinking a problem's width
+        can never strand pages that are still occupied;
+      * a *grow* is clamped to the pool's unreserved headroom, so a
+        hard problem's raised reservation can over-commit nothing —
+        the demotion path covers any genuine overflow, exactly as when
+        a problem outgrows its original estimate.
+
+    ``total_pages=None`` disables the pool invariant (callers without
+    page accounting), keeping only the bookkeeping.
+    """
+
+    def __init__(self, total_pages: Optional[int] = None):
+        self.total_pages = total_pages
+        self._pages: Dict[Any, int] = {}
+
+    def book(self, key: Any, pages: int) -> None:
+        """Open a reservation; the key must not already hold one."""
+        assert key not in self._pages, key
+        pages = max(int(pages), 0)
+        if self.total_pages is not None:
+            assert self.total() + pages <= self.total_pages, \
+                (self.total(), pages, self.total_pages)
+        self._pages[key] = pages
+
+    def rebook(self, key: Any, pages: int, floor: int = 0) -> int:
+        """Re-size an open reservation (see class docstring); returns
+        the value actually booked.  No-op (0) for an unknown key."""
+        if key not in self._pages:
+            return 0
+        cur = self._pages[key]
+        pages = max(int(pages), int(floor), 0)
+        if pages > cur and self.total_pages is not None:
+            headroom = self.total_pages - self.total()
+            pages = min(pages, cur + max(headroom, 0))
+        self._pages[key] = pages
+        return pages
+
+    def release(self, key: Any) -> int:
+        """Close a reservation; returns the pages it held (0 if none)."""
+        return self._pages.pop(key, 0)
+
+    def get(self, key: Any, default: int = 0) -> int:
+        return self._pages.get(key, default)
+
+    def total(self) -> int:
+        """Sum of all open reservations."""
+        return sum(self._pages.values())
+
+    def __contains__(self, key: Any) -> bool:
+        return key in self._pages
+
+    def __len__(self) -> int:
+        return len(self._pages)
+
+
 class _TreeMetaState:
     """Persistent incremental tree-metadata state (one per allocator).
 

@@ -181,6 +181,10 @@ class LMBackend:
         self._ns_seqs: Dict[Any, set] = {}
         self.kv_trace_by_problem: Dict[Any, List[Dict[str, int]]] = {}
         self._last_io_ns: Dict[Any, Tuple[int, int]] = {}
+        # generated tokens per problem, measured at the decode boundary
+        # (expand_finish) — the budget controller's token ledger reads
+        # this instead of re-deriving spend from the tree
+        self.gen_tokens_by_problem: Dict[Any, int] = {}
         # flat trace across problems, in on_step order (solo runs see
         # exactly the pre-namespace behavior)
         self.kv_trace: List[Dict[str, int]] = []
@@ -329,11 +333,22 @@ class LMBackend:
         """Turn a ticket's decoded streams (``outs``: seq id -> step
         tokens) into tree children, grouped by leaf in plan order."""
         kids: List[int] = []
+        ns = ticket.tree.node(0).payload["ns"]
         for leaf, bids in ticket.plan:
             for bid in bids:
+                self.gen_tokens_by_problem[ns] = \
+                    self.gen_tokens_by_problem.get(ns, 0) + len(outs[bid])
                 kids.append(self._add_child(ticket.tree, leaf, bid,
                                             outs[bid]))
         return kids
+
+    def problem_gen_tokens(self, tree: SearchTree) -> int:
+        """Tokens this problem's decodes have generated so far — the
+        measured per-problem spend the budget controller's global token
+        ledger charges against (``repro.core.controllers
+        .BudgetController``)."""
+        ns = tree.node(0).payload["ns"]
+        return self.gen_tokens_by_problem.get(ns, 0)
 
     def open_stream(self):
         """A persistent row-refillable decode stream configured with
@@ -660,6 +675,7 @@ class LMBackend:
         self._protected.clear()
         self.kv_trace.clear()
         self.kv_trace_by_problem.clear()
+        self.gen_tokens_by_problem.clear()
         self._keys.clear()
         self._ns_seqs.clear()
         self._last_io_ns.clear()

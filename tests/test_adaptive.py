@@ -1,0 +1,519 @@
+"""Difficulty-adaptive compute allocation + the eval harness.
+
+The contract under test:
+
+  * the bit-identity oracle — with adaptation *disabled* (or absent)
+    every controller hook is a no-op and the sweep / serving loop is
+    bit-identical to ``run_search_many`` on the same backend, in both
+    attention modes and both refill modes, over random finish orders
+    and admission interleavings (property tests);
+  * the budget controller — threshold decisions (easy shrinks, hard
+    grows, middle band holds), confidence wind-down on a completed
+    high-reward trajectory, the global token-budget wind-down, and the
+    admission-width estimate reservations are sized from;
+  * ``SearchState.set_width`` — largest-remainder rescaling of the
+    live continuation counts at the demand boundary, derived ``n_keep``
+    staying well-defined as the width adapts;
+  * the MCTS method — ``mcts_step`` arm selection/UCT properties, the
+    batched-search invariants (serial == batched, one decode stream
+    per step — parametrized into the existing suites), and the O(log)
+    decode recompile bound on the LM backend;
+  * the eval harness — task registry, answer checking, and the
+    accuracy/token frontier measurement the adaptive BENCH section
+    plots: at fixed seed the confidence wind-down config spends
+    strictly fewer tokens than the uniform sweep without losing
+    accuracy.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_shim import HealthCheck, given, settings, st
+
+from repro.configs import get_config
+from repro.core import (AdaptiveConfig, BudgetController, ETSConfig,
+                        SearchConfig, SweepScheduler, mcts_step, run_search,
+                        run_search_many)
+from repro.core.controllers import SearchState
+from repro.core.serving import Request, ServingConfig, ServingLoop
+from repro.core.synthetic import (SyntheticProblem, SyntheticSweep,
+                                  SyntheticTaskConfig)
+from repro.eval import get_task, list_tasks, register_task, run_eval
+from repro.eval.harness import EvalTask
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, PagedEngine
+from repro.serving.search_backend import BackendConfig, LMBackend
+
+
+def _tree_signature(tree):
+    out = []
+    for n in tree.nodes:
+        toks = sem = None
+        if isinstance(n.payload, dict):
+            toks = n.payload.get("tokens")
+            sem = n.payload.get("sem")
+        out.append((n.id, n.parent, n.n_tokens, n.reward, n.finished,
+                    toks if toks is None else list(toks), sem))
+    return out
+
+
+def _assert_results_identical(serial, sweep):
+    assert len(serial) == len(sweep)
+    for rs, rc in zip(serial, sweep):
+        assert _tree_signature(rs.tree) == _tree_signature(rc.tree)
+        assert rs.answer == rc.answer
+        assert rs.completed == rc.completed
+        assert rs.steps == rc.steps
+
+
+# ---------------------------------------------------------------------------
+# SearchConfig.n_keep / SearchState.set_width
+# ---------------------------------------------------------------------------
+
+def test_n_keep_derives_from_effective_width():
+    scfg = SearchConfig(method="beam", width=16)
+    assert scfg.n_keep == 4                 # sqrt of the static width
+    assert scfg.n_keep_for(4) == 2          # adapted width: re-derived
+    assert scfg.n_keep_for(1) == 1          # never collapses to zero
+    fixed = SearchConfig(method="beam", width=16, keep=3)
+    assert fixed.n_keep_for(4) == 3         # explicit keep wins
+
+
+def test_search_state_n_keep_tracks_adapted_width():
+    prob = SyntheticProblem(SyntheticTaskConfig(), seed=0)
+    st_ = SearchState(prob, SearchConfig(method="beam", width=16),
+                      prob.make_tree())
+    assert st_.n_keep == 4
+    st_.set_width(4)
+    assert st_.width == 4 and st_.n_keep == 2
+
+
+def test_set_width_rescales_live_counts_largest_remainder():
+    prob = SyntheticProblem(SyntheticTaskConfig(), seed=1)
+    st_ = SearchState(prob, SearchConfig(method="rebase", width=8),
+                      prob.make_tree())
+    st_.live = {10: 4, 11: 3, 12: 1}
+    st_.set_width(4)
+    assert st_.width == 4 and st_.N == 4
+    assert sum(st_.live.values()) == 4      # counts sum to the new width
+    # quotas 2.0/1.5/0.5: the remainder tie breaks to the lower leaf id
+    # and the zero-count tail leaf is dropped
+    assert st_.live == {10: 2, 11: 2}
+    # growing rescales back up, preserving the relative allocation
+    st_.set_width(16)
+    assert sum(st_.live.values()) == 16
+    assert st_.live == {10: 8, 11: 8}
+
+
+def test_set_width_drops_zero_count_leaves_and_noops_on_same():
+    prob = SyntheticProblem(SyntheticTaskConfig(), seed=2)
+    st_ = SearchState(prob, SearchConfig(method="rebase", width=8),
+                      prob.make_tree())
+    st_.live = {10: 6, 11: 1, 12: 1}
+    before = dict(st_.live)
+    st_.set_width(8)                        # unchanged width: exact no-op
+    assert st_.live == before
+    st_.set_width(2)                        # heavily skewed: tail dropped
+    assert sum(st_.live.values()) == 2
+    assert all(n > 0 for n in st_.live.values())
+
+
+def test_set_width_accounts_completed_trajectories():
+    prob = SyntheticProblem(SyntheticTaskConfig(), seed=3)
+    st_ = SearchState(prob, SearchConfig(method="rebase", width=8),
+                      prob.make_tree())
+    st_.completed = [("a", 0.9), ("b", 0.8)]
+    st_.live = {10: 3, 11: 3}
+    st_.set_width(4)
+    assert st_.N == 2                       # width minus completed
+    assert sum(st_.live.values()) == 2
+    # winding down below the completed count ends the search cleanly
+    st_.set_width(1)
+    assert st_.N == 0
+
+
+# ---------------------------------------------------------------------------
+# BudgetController decisions
+# ---------------------------------------------------------------------------
+
+def _state(seed=0, width=8, method="ets"):
+    prob = SyntheticProblem(SyntheticTaskConfig(), seed=seed)
+    return SearchState(prob, SearchConfig(method=method, width=width),
+                       prob.make_tree())
+
+
+def _observe_scores(ctl, idx, st_, *step_scores):
+    for scores in step_scores:
+        ctl.observe(idx, st_, scores)
+
+
+def test_controller_threshold_decisions_and_memoization():
+    acfg = AdaptiveConfig(signal_steps=2, min_width=2, easy_threshold=0.6,
+                          hard_threshold=0.45, confident_reward=0.0)
+    scfg = SearchConfig(method="ets", width=8)
+    ctl = BudgetController(acfg, scfg)
+    easy, hard, mid = _state(1), _state(2), _state(3)
+    # no decision until signal_steps scored steps are in
+    ctl.observe(0, easy, [0.9, 0.9])
+    assert ctl.difficulty(0) is None
+    assert ctl.target_width(0, easy) == easy.width
+    ctl.observe(0, easy, [0.8, 0.9])
+    assert ctl.difficulty(0) == pytest.approx(0.875)
+    assert ctl.target_width(0, easy) == 4   # easy: width * shrink_factor
+    _observe_scores(ctl, 1, hard, [0.2, 0.3], [0.1, 0.2])
+    assert ctl.target_width(1, hard) == 16  # hard: width * grow_factor
+    _observe_scores(ctl, 2, mid, [0.5, 0.5], [0.5, 0.5])
+    assert ctl.target_width(2, mid) == 8    # middle band: hold
+    # the decision is one-shot: later (contradicting) scores don't flip it
+    ctl.observe(0, easy, [0.0, 0.0])
+    assert ctl.target_width(0, easy) == 4
+
+
+def test_controller_clamps_to_min_and_max_width():
+    acfg = AdaptiveConfig(signal_steps=1, min_width=3, max_width=10,
+                          shrink_factor=0.01, grow_factor=100.0,
+                          confident_reward=0.0)
+    ctl = BudgetController(acfg, SearchConfig(method="ets", width=8))
+    easy, hard = _state(1), _state(2)
+    ctl.observe(0, easy, [0.99])
+    assert ctl.target_width(0, easy) == 3   # floor
+    ctl.observe(1, hard, [0.01])
+    assert ctl.target_width(1, hard) == 10  # ceiling
+    # max_width=0 defaults to 2x the configured width
+    ctl2 = BudgetController(
+        dataclasses.replace(acfg, max_width=0),
+        SearchConfig(method="ets", width=8))
+    assert ctl2.max_width == 16
+
+
+def test_controller_confidence_winddown_dominates():
+    """A completed trajectory clearing ``confident_reward`` drops the
+    problem straight to ``min_width`` — before and regardless of the
+    threshold decision."""
+    acfg = AdaptiveConfig(signal_steps=2, min_width=2,
+                          hard_threshold=0.9,   # would otherwise grow
+                          confident_reward=0.7)
+    ctl = BudgetController(acfg, SearchConfig(method="ets", width=8))
+    st_ = _state(4)
+    _observe_scores(ctl, 0, st_, [0.1], [0.1])
+    assert ctl.target_width(0, st_) == 16   # hard: grown
+    st_.completed.append(("ans", 0.75))
+    assert ctl.target_width(0, st_) == 2    # confident: wound down
+    # a low-reward completion is NOT confidence
+    st_.completed = [("ans", 0.3)]
+    assert ctl.target_width(0, st_) == 16
+
+
+def test_controller_token_budget_winddown():
+    acfg = AdaptiveConfig(signal_steps=1, min_width=2, token_budget=50,
+                          confident_reward=0.0)
+    ctl = BudgetController(acfg, SearchConfig(method="ets", width=8))
+    st_ = _state(5)
+    st_.tree.add(0, n_tokens=30)
+    ctl.observe(0, st_, [0.5])
+    assert ctl.target_width(0, st_) == 8    # under budget: hold
+    assert ctl.spent_tokens == 30
+    st_.tree.add(0, n_tokens=30)
+    ctl.observe(0, st_, [0.5])
+    assert ctl.spent_tokens == 60
+    assert ctl.target_width(0, st_) == 2    # budget spent: wind down
+
+
+def test_controller_admission_width_tracks_decided_targets():
+    acfg = AdaptiveConfig(signal_steps=1, min_width=2,
+                          confident_reward=0.0)
+    ctl = BudgetController(acfg, SearchConfig(method="ets", width=8))
+    assert ctl.admission_width() == 8       # nothing decided yet
+    easy, hard = _state(1), _state(2)
+    ctl.observe(0, easy, [0.9])
+    ctl.target_width(0, easy)               # decides 4
+    assert ctl.admission_width() == 4
+    ctl.observe(1, hard, [0.1])
+    ctl.target_width(1, hard)               # decides 16
+    assert ctl.admission_width() == 10      # mean of decided targets
+
+
+def test_disabled_controller_is_total_noop():
+    ctl = BudgetController(AdaptiveConfig(enabled=False),
+                           SearchConfig(method="ets", width=8))
+    st_ = _state(6)
+    ctl.observe(0, st_, [0.99])
+    ctl.observe(0, st_, [0.99])
+    assert ctl.difficulty(0) is None
+    assert ctl.target_width(0, st_) == st_.width
+    assert ctl.spent_tokens == 0
+    assert ctl.admission_width() == 8
+
+
+# ---------------------------------------------------------------------------
+# mcts_step: the Adaptive Parallel MCTS retention policy
+# ---------------------------------------------------------------------------
+
+def test_mcts_step_counts_sum_and_determinism():
+    rewards, visits = [0.5, 0.4, 0.6], [2, 1, 3]
+    sel, counts = mcts_step(rewards, visits, 6, 8)
+    assert sum(counts) == 8
+    assert len(sel) == len(counts) and len(sel) >= 1
+    sel2, counts2 = mcts_step(rewards, visits, 6, 8)
+    assert sel == sel2 and list(counts) == list(counts2)
+
+
+def test_mcts_step_exploration_bonus_favors_unvisited():
+    """Equal rewards: the barely-visited arm has the higher UCT and
+    gets the larger continuation share."""
+    sel, counts = mcts_step([0.5, 0.5], [1, 10], 11, 8, gap=10.0)
+    by_arm = dict(zip(sel, counts))
+    assert by_arm[0] > by_arm[1]
+
+
+def test_mcts_step_gap_narrows_parallelism():
+    """A peaked UCT profile with a tight gap keeps one arm; a wide gap
+    keeps every arm in flight — the adaptive-parallelism knob."""
+    rewards, visits = [0.9, 0.1, 0.1], [5, 5, 5]
+    sel_tight, counts_tight = mcts_step(rewards, visits, 15, 6, gap=0.1)
+    assert sel_tight == [0] and sum(counts_tight) == 6
+    sel_wide, _ = mcts_step(rewards, visits, 15, 6, gap=10.0)
+    assert sorted(sel_wide) == [0, 1, 2]
+
+
+def test_mcts_step_caps_arms_at_budget():
+    sel, counts = mcts_step([0.5] * 8, [1] * 8, 8, 3, gap=10.0)
+    assert len(sel) <= 3 and sum(counts) == 3
+
+
+def test_mcts_serial_matches_batched_bit_identical():
+    results = {}
+    for batched in (True, False):
+        prob = SyntheticProblem(SyntheticTaskConfig(), seed=11)
+        scfg = SearchConfig(method="mcts", width=16, batched=batched)
+        results[batched] = run_search(prob, scfg, tree=prob.make_tree())
+    sig = [_tree_signature(results[b].tree) for b in (True, False)]
+    assert sig[0] == sig[1]
+    assert results[True].answer == results[False].answer
+    assert results[True].completed == results[False].completed
+
+
+# ---------------------------------------------------------------------------
+# Property: adaptation disabled == run_search_many, bit-identical
+# (synthetic backend; random finish orders + admission interleavings)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.tuples(st.integers(0, 10 ** 6),   # per-problem seed
+                          st.integers(2, 6)),        # per-problem depth
+                min_size=2, max_size=4),
+       st.integers(1, 4))                            # admission cap
+def test_disabled_adaptation_bit_identical_random_orders(specs, max_live):
+    """``AdaptiveConfig(enabled=False)`` must be indistinguishable from
+    passing no adaptive config at all — under ANY finish order and
+    admission interleaving the sweep stays bit-identical to solo
+    serial runs."""
+    scfg = SearchConfig(method="ets", width=8,
+                        ets=ETSConfig(lambda_b=1.0, lambda_d=1.0))
+
+    def problems():
+        return [SyntheticProblem(SyntheticTaskConfig(depth=d), seed=s)
+                for s, d in specs]
+
+    serial = [run_search(p, scfg, tree=p.make_tree()) for p in problems()]
+    backend = SyntheticSweep(problems())
+    sched = SweepScheduler(backend, scfg, trees=backend.make_trees(),
+                           max_live=max_live,
+                           adaptive=AdaptiveConfig(enabled=False))
+    _assert_results_identical(serial, sched.run())
+    # the disabled controller decided nothing and spent nothing
+    assert sched.controller is not None
+    assert sched.controller.width_of == {}
+    assert sched.controller.spent_tokens == 0
+
+
+# ---------------------------------------------------------------------------
+# LM backend: disabled adaptation bit-identical in both attention modes
+# and both refill modes
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_models():
+    lm_cfg = dataclasses.replace(get_config("tiny-lm"), n_layers=2,
+                                 d_model=64, n_heads=4, n_kv_heads=2,
+                                 d_ff=128)
+    lm = build_model(lm_cfg, remat=False)
+    lm_params = lm.init(jax.random.key(0))
+    prm = build_model(dataclasses.replace(lm_cfg, n_layers=1),
+                      with_value_head=True, remat=False)
+    prm_params = prm.init(jax.random.key(1))
+    emb_cfg = dataclasses.replace(get_config("tiny-embedder"), n_layers=1,
+                                  d_model=64, n_heads=2, n_kv_heads=2,
+                                  d_ff=128)
+    emb = build_model(emb_cfg, remat=False)
+    emb_params = emb.init(jax.random.key(2))
+    return (lm, lm_params), (prm, prm_params), (emb, emb_params)
+
+
+def _lm_backend(tiny_models, attention, n_pages=256, max_batch=32):
+    (lm, lm_params), (prm, prm_params), (emb, emb_params) = tiny_models
+    engine = PagedEngine(lm, lm_params, EngineConfig(
+        n_pages=n_pages, page_size=8, max_batch=max_batch, max_seq_len=128,
+        attention=attention))
+    backend = LMBackend(engine, prm, prm_params, emb, emb_params,
+                        BackendConfig(step_token=2, eos_token=3,
+                                      max_step_tokens=6, max_depth=4),
+                        answer_fn=lambda full: None, seed=13)
+    return engine, backend
+
+
+PROMPTS = [list(range(4, 4 + n)) for n in (17, 23, 9)]
+SCFG = SearchConfig(method="ets", width=5, max_steps=3,
+                    ets=ETSConfig(lambda_b=1.0, lambda_d=1.0,
+                                  cluster_threshold=0.2))
+
+
+@pytest.mark.parametrize("attention", ["paged", "tree"])
+@pytest.mark.parametrize("refill", [False, True])
+def test_lm_disabled_adaptation_bit_identical(tiny_models, attention,
+                                              refill):
+    """The satellite acceptance bar: with adaptation disabled the
+    adaptive serving loop — lock-step barrier OR token-level refill —
+    reproduces ``run_search_many`` bit-for-bit in both attention
+    modes (the controller hooks sit on every one of those paths)."""
+    _, be_base = _lm_backend(tiny_models, attention)
+    base = run_search_many(be_base, SCFG, PROMPTS)
+    engine, backend = _lm_backend(tiny_models, attention)
+    loop = ServingLoop(backend, SCFG,
+                       [Request(prompt=p) for p in PROMPTS],
+                       cfg=ServingConfig(refill=refill),
+                       adaptive=AdaptiveConfig(enabled=False))
+    _assert_results_identical(base, loop.run())
+    assert engine.alloc.used_pages == 0
+    engine.alloc.check_invariants()
+
+
+def test_lm_sweep_disabled_adaptation_bit_identical(tiny_models):
+    """Same oracle on the plain sweep path (``run_search_many`` with
+    ``adaptive=`` vs without)."""
+    _, be_base = _lm_backend(tiny_models, "tree")
+    base = run_search_many(be_base, SCFG, PROMPTS)
+    _, backend = _lm_backend(tiny_models, "tree")
+    sweep = run_search_many(backend, SCFG, PROMPTS,
+                            adaptive=AdaptiveConfig(enabled=False))
+    _assert_results_identical(base, sweep)
+
+
+def test_lm_mcts_sweep_stays_in_decode_recompile_budget(tiny_models):
+    """The MCTS method rides the same lock-step decode stream: a sweep
+    under ``method="mcts"`` stays inside the O(log n_pages) tree-decode
+    recompile budget (and completes with the pool drained)."""
+    import math
+    engine, backend = _lm_backend(tiny_models, "tree")
+    scfg = dataclasses.replace(SCFG, method="mcts")
+    results = run_search_many(backend, scfg, PROMPTS)
+    assert len(results) == len(PROMPTS)
+    assert all(r.steps >= 1 for r in results)
+    assert engine.decode_traces <= int(math.log2(engine.ecfg.n_pages)) + 1
+    assert engine.alloc.used_pages == 0
+    engine.alloc.check_invariants()
+
+
+def test_lm_adaptive_winddown_spends_fewer_tokens(tiny_models):
+    """Adaptation enabled on the LM backend: the confidence/threshold
+    wind-down generates strictly fewer tokens than the uniform sweep,
+    and the adapted problems' effective widths actually moved."""
+    _, be_u = _lm_backend(tiny_models, "tree")
+    run_search_many(be_u, SCFG, PROMPTS)
+    uniform_tokens = sum(be_u.gen_tokens_by_problem.values())
+
+    _, be_a = _lm_backend(tiny_models, "tree")
+    acfg = AdaptiveConfig(signal_steps=1, min_width=1,
+                          easy_threshold=-1.0,   # every problem "easy"
+                          confident_reward=0.0)
+    results = run_search_many(be_a, SCFG, PROMPTS, adaptive=acfg)
+    adaptive_tokens = sum(be_a.gen_tokens_by_problem.values())
+    assert len(results) == len(PROMPTS)
+    assert 0 < adaptive_tokens < uniform_tokens
+
+
+# ---------------------------------------------------------------------------
+# Eval harness: registry, answer checking, and the adaptive frontier
+# ---------------------------------------------------------------------------
+
+def test_task_registry_roundtrip():
+    assert "synthetic" in list_tasks() and "arithmetic" in list_tasks()
+    with pytest.raises(KeyError):
+        get_task("no-such-task")
+
+    @register_task("_test_dummy")
+    class Dummy(EvalTask):
+        def docs(self, n, seed=0):
+            return []
+
+    assert isinstance(get_task("_test_dummy"), Dummy)
+    assert "_test_dummy" in list_tasks()
+
+
+def test_arithmetic_task_docs_are_checkable():
+    task = get_task("arithmetic", n_ops=2)
+    docs = task.docs(5, seed=3)
+    assert len(docs) == 5
+    for d in docs:
+        assert d.prompt is not None and len(d.prompt) > 0
+        assert isinstance(d.gold, int)
+        assert task.check(d.gold, d.gold)
+        assert not task.check(None, d.gold)
+        assert not task.check(d.gold + 1, d.gold)
+
+
+def test_run_eval_synthetic_report_shape():
+    scfg = SearchConfig(method="ets", width=4, max_steps=4,
+                        ets=ETSConfig(lambda_b=1.0, lambda_d=1.0))
+    rep = run_eval(get_task("synthetic"), scfg, n=8, seed=0)
+    assert rep.task == "synthetic" and rep.n == 8
+    assert 0.0 <= rep.accuracy <= 1.0
+    assert len(rep.results) == len(rep.correct) == 8
+    assert rep.total_gen_tokens > 0
+    assert rep.gen_tokens_per_doc == pytest.approx(
+        rep.total_gen_tokens / 8)
+    assert rep.accuracy == pytest.approx(np.mean(rep.correct))
+
+
+def test_run_eval_disabled_adaptation_matches_plain():
+    scfg = SearchConfig(method="ets", width=6, max_steps=5,
+                        ets=ETSConfig(lambda_b=1.0, lambda_d=1.0))
+    plain = run_eval(get_task("synthetic"), scfg, n=10, seed=3)
+    off = run_eval(get_task("synthetic"), scfg, n=10, seed=3,
+                   adaptive=AdaptiveConfig(enabled=False))
+    assert plain.accuracy == off.accuracy
+    assert plain.total_gen_tokens == off.total_gen_tokens
+    assert plain.correct == off.correct
+
+
+@pytest.mark.slow
+def test_adaptive_frontier_dominates_uniform():
+    """The BENCH predicate at bench scale: the calibrated confidence
+    wind-down config reaches at-least-equal accuracy at strictly fewer
+    generated tokens than the uniform sweep (fixed seed, deterministic
+    backend — the exact comparison ``trend_check`` gates on)."""
+    scfg = SearchConfig(method="ets", width=8, max_steps=6,
+                        ets=ETSConfig(lambda_b=1.0, lambda_d=1.0))
+    acfg = AdaptiveConfig(easy_threshold=2.0, hard_threshold=-1.0,
+                          min_width=1)
+    uniform = run_eval(get_task("synthetic"), scfg, n=120, seed=0)
+    adaptive = run_eval(get_task("synthetic"), scfg, n=120, seed=0,
+                        adaptive=acfg)
+    assert adaptive.accuracy >= uniform.accuracy
+    assert adaptive.total_gen_tokens < uniform.total_gen_tokens
+
+
+def test_adaptive_winddown_saves_tokens_smoke():
+    """Small-n version of the frontier check for the fast tier: the
+    wind-down must still save tokens without zeroing accuracy."""
+    scfg = SearchConfig(method="ets", width=8, max_steps=6,
+                        ets=ETSConfig(lambda_b=1.0, lambda_d=1.0))
+    acfg = AdaptiveConfig(easy_threshold=2.0, hard_threshold=-1.0,
+                          min_width=1)
+    uniform = run_eval(get_task("synthetic"), scfg, n=24, seed=0)
+    adaptive = run_eval(get_task("synthetic"), scfg, n=24, seed=0,
+                        adaptive=acfg)
+    assert adaptive.total_gen_tokens < uniform.total_gen_tokens
+    assert adaptive.accuracy > 0

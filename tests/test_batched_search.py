@@ -14,7 +14,7 @@ from repro.models.model import build_model
 from repro.serving.engine import EngineConfig
 from repro.serving.search_backend import BackendConfig, LMBackend, _bucket
 
-METHODS = ["beam", "dvts", "rebase", "ets", "ets-kv"]
+METHODS = ["beam", "dvts", "rebase", "ets", "ets-kv", "mcts"]
 
 
 # ---------------------------------------------------------------------------
@@ -172,7 +172,7 @@ def _make_stub_backend(max_batch=32, max_depth=3, width=6):
     return eng, backend
 
 
-@pytest.mark.parametrize("method", ["rebase", "ets", "beam"])
+@pytest.mark.parametrize("method", ["rebase", "ets", "beam", "mcts"])
 def test_one_decode_call_per_step(method):
     """L live leaves with <= max_batch total branches => exactly one
     batched decode stream per search step."""

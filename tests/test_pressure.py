@@ -29,10 +29,11 @@ import pytest
 from _hypothesis_shim import HealthCheck, given, settings, st
 
 from repro.configs import get_config
-from repro.core import (ETSConfig, SearchConfig, SweepScheduler, run_search)
+from repro.core import (AdaptiveConfig, ETSConfig, SearchConfig,
+                        SweepScheduler, run_search)
 from repro.core.controllers import WorkingSetEstimator
 from repro.kvcache import PageAllocator
-from repro.kvcache.allocator import OutOfPages
+from repro.kvcache.allocator import OutOfPages, ReservationLedger
 from repro.models.model import build_model
 from repro.serving.engine import EngineConfig, PagedEngine
 from repro.serving.search_backend import BackendConfig, LMBackend
@@ -240,6 +241,63 @@ def test_working_set_estimator_refines_down_and_clamps():
     assert step_pages <= got < 24                   # refined below the cap
     est.note(10 ** 6)                               # outlier: clamped
     assert est.growth(width, step_pages) == 24
+
+
+def test_working_set_estimator_growth_clamps_to_adapted_width():
+    """The adaptive-width coupling: ``growth`` is bounded by the width
+    actually passed in, so a problem wound down to width 2 reserves a
+    fraction of what the static width-8 config would."""
+    est = WorkingSetEstimator(margin=1.25)
+    step_pages = 3
+    assert est.growth(2, step_pages) == 6           # adapted bound
+    assert est.growth(8, step_pages) == 24
+    est.note(10 ** 6)                               # huge realized growth
+    # ...still clamped by the (adapted) width, not the observation
+    assert est.growth(2, step_pages) == 6
+    assert est.growth(8, step_pages) == 24
+
+
+# ---------------------------------------------------------------------------
+# Reservation ledger: the admission/adaptation page-sum invariant
+# ---------------------------------------------------------------------------
+
+def test_reservation_ledger_book_release_invariant():
+    led = ReservationLedger(total_pages=20)
+    led.book("a", 8)
+    led.book("b", 12)                       # exactly full is fine
+    assert led.total() == 20 and len(led) == 2
+    assert "a" in led and led.get("a") == 8
+    with pytest.raises(AssertionError):
+        led.book("c", 1)                    # pool invariant enforced
+    assert led.release("a") == 8
+    assert led.total() == 12 and "a" not in led
+    assert led.release("a") == 0            # double release is benign
+    led.book("c", 8)                        # freed headroom reusable
+    assert led.total() == 20
+
+
+def test_reservation_ledger_rebook_shrink_respects_floor():
+    """Shrinking an adapted problem's reservation never drops below the
+    pages it actually holds — adaptation cannot strand occupied pages."""
+    led = ReservationLedger(total_pages=30)
+    led.book("a", 20)
+    assert led.rebook("a", 4, floor=9) == 9     # clamped to held pages
+    assert led.get("a") == 9
+    assert led.rebook("a", 2) == 2              # no floor: full shrink
+    assert led.rebook("missing", 5) == 0        # unknown key: no-op
+    assert led.total() == 2
+
+
+def test_reservation_ledger_rebook_grow_clamps_to_headroom():
+    led = ReservationLedger(total_pages=30)
+    led.book("a", 10)
+    led.book("b", 15)
+    assert led.rebook("a", 100) == 15           # 10 held + 5 headroom
+    assert led.total() == 30
+    # a ledger without a pool bound keeps only the bookkeeping
+    unbounded = ReservationLedger()
+    unbounded.book("x", 10)
+    assert unbounded.rebook("x", 100) == 100
 
 
 # ---------------------------------------------------------------------------
@@ -515,3 +573,46 @@ def test_sweep_subtree_spill_bit_identical_and_moves_fewer_pages(
     assert e_st._spill == {} and e_st._pending_spills == []
     assert e_st.alloc.used_pages == 0
     e_st.alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Difficulty-adaptive widths under pressure: reservations track the
+# adapted width and never break the pool invariant
+# ---------------------------------------------------------------------------
+
+def test_adaptive_sweep_reservations_bounded_and_drained(tiny_models):
+    """Adaptation enabled on a tight pool: every problem's reservation
+    is re-booked as its width shrinks, the reserved page sum never
+    exceeds the pool, and retirement drains the ledger completely —
+    shrinking never strands reserved pages."""
+    engine, backend = _lm_backend(tiny_models, "tree", n_pages=TIGHT_POOL)
+    acfg = AdaptiveConfig(signal_steps=1, min_width=1,
+                          easy_threshold=-1.0,  # every problem winds down
+                          confident_reward=0.0)
+    sched = SweepScheduler(backend, SCFG, prompts=PROMPTS, adaptive=acfg)
+    results = sched.run()
+    assert len(results) == len(PROMPTS)
+    # widths really adapted (every problem decided a shrink target)
+    assert len(sched.controller.width_of) == len(PROMPTS)
+    assert all(w < SCFG.width for w in sched.controller.width_of.values())
+    # pool invariant held throughout and the ledger is fully drained
+    assert 0 < sched.stats.max_reserved_pages <= TIGHT_POOL
+    assert len(sched._reserved) == 0 and sched._reserved.total() == 0
+    assert engine.alloc.used_pages == 0
+    engine.alloc.check_invariants()
+
+
+def test_adaptive_shrink_frees_reservation_headroom(tiny_models):
+    """The admission coupling: a sweep whose problems wind down holds a
+    strictly smaller peak reservation than the uniform sweep on the
+    same pool (the freed headroom is what later waves admit into)."""
+    e_u, b_u = _lm_backend(tiny_models, "tree", n_pages=TIGHT_POOL)
+    s_u = SweepScheduler(b_u, SCFG, prompts=PROMPTS)
+    s_u.run()
+    e_a, b_a = _lm_backend(tiny_models, "tree", n_pages=TIGHT_POOL)
+    acfg = AdaptiveConfig(signal_steps=1, min_width=1,
+                          easy_threshold=-1.0, confident_reward=0.0)
+    s_a = SweepScheduler(b_a, SCFG, prompts=PROMPTS, adaptive=acfg)
+    s_a.run()
+    assert s_a.stats.max_reserved_pages <= s_u.stats.max_reserved_pages
+    assert e_a.alloc.used_pages == 0 and e_u.alloc.used_pages == 0

@@ -88,7 +88,7 @@ def test_sweep_matches_serial_random_orders(specs, max_live):
 
 
 @pytest.mark.parametrize("method", ["beam", "dvts", "rebase", "ets",
-                                    "ets-kv"])
+                                    "ets-kv", "mcts"])
 def test_sweep_matches_serial_all_methods(method):
     scfg = SearchConfig(method=method, width=8,
                         ets=ETSConfig(lambda_b=1.0, lambda_d=1.0))
