@@ -102,9 +102,16 @@ def main() -> None:
                            "sweep": res.get("sweep", []),
                            "pressure": res.get("pressure", []),
                            "serving": res.get("serving", []),
-                           "adaptive": res.get("adaptive", [])},
+                           "adaptive": res.get("adaptive", []),
+                           "mesh": res.get("mesh", [])},
                           f, indent=1, default=str)
             print(f"[table2] rows -> {args.bench_json}")
+            stage = os.path.join(args.out, "stage_costs.json")
+            with open(stage, "w") as f:
+                json.dump({"smoke": args.smoke, "fast": args.fast,
+                           **res.get("stage_costs", {})},
+                          f, indent=1, default=str)
+            print(f"[table2] stage-cost calibration -> {stage}")
             curve = os.path.join(args.out, "serving_latency_curve.json")
             with open(curve, "w") as f:
                 json.dump({"smoke": args.smoke, "fast": args.fast,

@@ -329,6 +329,190 @@ def measure_sweep(lm, lm_params, prm, prm_params, emb, emb_params,
     return rows
 
 
+def _sweep_stack(lm, lm_params, prm, prm_params, emb, emb_params,
+                 n_prompts, width, *, mesh=None):
+    """One engine+backend on the sweep smoke config (shared by the
+    sweep/mesh/stage-cost sections so their numbers are comparable)."""
+    from repro.serving.engine import EngineConfig, PagedEngine
+    from repro.serving.search_backend import BackendConfig, LMBackend
+    from repro.training.task import ArithmeticTask, EOS, NEWLINE
+
+    engine = PagedEngine(lm, lm_params, EngineConfig(
+        n_pages=2048, page_size=8,
+        max_batch=max(width * n_prompts, 32), max_seq_len=200,
+        attention="tree", mesh=mesh))
+    backend = LMBackend(
+        engine, prm, prm_params, emb, emb_params,
+        BackendConfig(step_token=NEWLINE, eos_token=EOS,
+                      max_step_tokens=12, max_depth=8),
+        answer_fn=ArithmeticTask.extract_answer, seed=500)
+    return engine, backend
+
+
+def measure_stage_costs(lm, lm_params, prm, prm_params, emb, emb_params,
+                        prompts, width: int, max_steps: int):
+    """Seed wall-clock calibration of the serving virtual cost model.
+
+    Wraps the backend's batched stage entry points (``start_many``
+    prefill, ``expand_multi`` decode, ``score_multi`` PRM,
+    ``embed_multi``) with wall timers, runs the sweep smoke config once
+    warm and once timed, and reports measured seconds per unit of each
+    ``ServingConfig`` cost: per lock-step decode *iteration*, per PRM
+    call, per embedder call, per admitted problem's prefill.  The
+    normalized ratios (decode iteration = 1.0) are what
+    ``ServingConfig.from_stage_costs`` consumes — benchmarks/run.py
+    archives the dict as ``experiments/bench/stage_costs.json``.
+    """
+    from repro.core import ETSConfig, SearchConfig, run_search_many
+
+    engine, backend = _sweep_stack(lm, lm_params, prm, prm_params, emb,
+                                   emb_params, len(prompts), width)
+    scfg = SearchConfig(method="ets", width=width, max_steps=max_steps,
+                        ets=ETSConfig(lambda_b=2.0, lambda_d=1.0,
+                                      cluster_threshold=0.15))
+    run_search_many(backend, scfg, prompts)   # warmup: compile buckets
+    backend.reset()
+
+    walls = {"prefill": 0.0, "expand": 0.0, "score": 0.0, "embed": 0.0}
+    calls = {"prefill": 0, "expand": 0, "score": 0, "embed": 0}
+
+    def timed(name, fn, n_of=None, block=None):
+        def inner(arg):
+            t0 = time.time()
+            out = fn(arg)
+            if block is not None:
+                block()       # drain async dispatch before reading t
+            walls[name] += time.time() - t0
+            calls[name] += n_of(arg) if n_of is not None else 1
+            return out
+        return inner
+
+    # instance attributes shadow the bound methods for this run only
+    backend.start_many = timed(
+        "prefill", backend.start_many, n_of=len,
+        block=lambda: jax.block_until_ready(engine.pool.k))
+    backend.expand_multi = timed("expand", backend.expand_multi)
+    backend.score_multi = timed("score", backend.score_multi)
+    backend.embed_multi = timed("embed", backend.embed_multi)
+    d0, t0 = engine.n_decode_steps, engine.n_decoded_tokens
+    run_search_many(backend, scfg, prompts)
+    dec_iters = engine.n_decode_steps - d0
+    dec_toks = engine.n_decoded_tokens - t0
+
+    out = {
+        "decode_iter_s": walls["expand"] / max(dec_iters, 1),
+        "decode_token_s": walls["expand"] / max(dec_toks, 1),
+        "mean_batch_occupancy": dec_toks / max(dec_iters, 1),
+        "score_s": walls["score"] / max(calls["score"], 1),
+        "embed_s": walls["embed"] / max(calls["embed"], 1),
+        "prefill_s": walls["prefill"] / max(calls["prefill"], 1),
+        "decode_iterations": dec_iters,
+        "score_calls": calls["score"],
+        "embed_calls": calls["embed"],
+        "prefill_problems": calls["prefill"],
+        "n_problems": len(prompts), "width": width,
+        "max_steps": max_steps,
+    }
+    base = out["decode_iter_s"] or 1.0
+    out["ratios"] = {"decode_iter_cost": 1.0,
+                     "score_cost": out["score_s"] / base,
+                     "embed_cost": out["embed_s"] / base,
+                     "prefill_cost": out["prefill_s"] / base}
+    return out
+
+
+def measure_mesh(lm, lm_params, prm, prm_params, emb, emb_params,
+                 prompts, width: int, max_steps: int, costs=None):
+    """Replica scaling on the sweep smoke config: one mesh'd engine vs
+    two engine replicas behind one admission queue (``ReplicaSweep``).
+
+    Every engine's KV pool lives on the host mesh (1 device on CPU CI —
+    the bit-identity configuration).  Both replicas share ONE physical
+    device here, so wall clock cannot show the scaling; the headline
+    ``problems_per_s`` is therefore measured on per-replica *device
+    time*: decode charged per decoded token (the measured
+    seconds-per-token at calibration occupancy — a saturated device's
+    decode cost scales with the rows it steps, which is exactly what
+    splitting the problem set across replicas halves), PRM/embed per
+    call, prefill per admitted problem, all at the measured stage costs
+    (``costs``, from :func:`measure_stage_costs`; ``ServingConfig``
+    defaults otherwise).  The fleet makespan is the max over replicas,
+    exactly how the serving clock models concurrent replicas.  The
+    per-replica device times and problem counts are recorded so the
+    projection is auditable.
+    """
+    from repro.core import (ETSConfig, ReplicaSweep, SearchConfig,
+                            SweepScheduler)
+    from repro.core.serving import ServingConfig
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()
+    c = costs or {}
+    svc = ServingConfig.from_stage_costs(c)
+    tok_s = c.get("decode_token_s") or (
+        svc.decode_iter_cost / max(c.get("mean_batch_occupancy", 1), 1))
+    unit = c.get("decode_iter_s") or 1.0       # virtual unit -> seconds
+    score_s = c.get("score_s") or unit * svc.score_cost
+    embed_s = c.get("embed_s") or unit * svc.embed_cost
+    prefill_s = c.get("prefill_s") or unit * svc.prefill_cost
+    scfg = SearchConfig(method="ets", width=width, max_steps=max_steps,
+                        ets=ETSConfig(lambda_b=2.0, lambda_d=1.0,
+                                      cluster_threshold=0.15))
+
+    def device_time(engine, sched, n_done):
+        return (engine.n_decoded_tokens * tok_s
+                + sched.stats.global_steps * (score_s + embed_s)
+                + n_done * prefill_s)
+
+    rows = []
+    # -- single mesh'd engine ------------------------------------------
+    engine, backend = _sweep_stack(lm, lm_params, prm, prm_params, emb,
+                                   emb_params, len(prompts), width,
+                                   mesh=mesh)
+    sched = SweepScheduler(backend, scfg, prompts=prompts)
+    t0 = time.time()
+    sched.run()
+    wall = time.time() - t0
+    vt = device_time(engine, sched, len(prompts))
+    rows.append({
+        "path": "single-engine", "replicas": 1,
+        "n_problems": len(prompts),
+        "problems_per_s": len(prompts) / vt,
+        "device_time_s": vt,
+        "mean_batch_occupancy": (engine.n_decoded_tokens
+                                 / max(engine.n_decode_steps, 1)),
+        "shard_fallbacks": len(engine.shard_fallbacks),
+        "wall_s": wall,
+    })
+
+    # -- two replicas, one admission queue -----------------------------
+    stacks = [_sweep_stack(lm, lm_params, prm, prm_params, emb,
+                           emb_params, len(prompts), width, mesh=mesh)
+              for _ in range(2)]
+    rs = ReplicaSweep([b for _, b in stacks], scfg, prompts)
+    t0 = time.time()
+    rs.run()
+    wall = time.time() - t0
+    vts = [device_time(eng, rep.sched, len(rep.sched.results))
+           for (eng, _), rep in zip(stacks, rs.replicas)]
+    toks = sum(eng.n_decoded_tokens for eng, _ in stacks)
+    dec = sum(eng.n_decode_steps for eng, _ in stacks)
+    rows.append({
+        "path": "2-replica", "replicas": 2,
+        "n_problems": len(prompts),
+        "problems_per_s": len(prompts) / max(vts),
+        "device_time_s": max(vts),
+        "per_replica_device_time_s": vts,
+        "per_replica_problems": [len(rep.sched.results)
+                                 for rep in rs.replicas],
+        "mean_batch_occupancy": toks / max(dec, 1),
+        "wall_s": wall,
+    })
+    rows[1]["speedup_vs_single_engine"] = \
+        rows[1]["problems_per_s"] / rows[0]["problems_per_s"]
+    return rows
+
+
 def measure_prefill(lm, lm_params, prompts, reps: int = 3):
     """Prompt-ingestion tok/s: serial dense prefill vs one batched,
     length-bucketed flash stream into the pool pages.
@@ -704,6 +888,42 @@ def run(train_steps: int = 150, n_problems: int = 6, width: int = 12,
           f"{arow['acc']:.3f} at {urow['total_tokens']} -> "
           f"{arow['total_tokens']} tokens (confidence wind-down frees "
           f"the budget redundant votes were spending)")
+
+    # -- stage-cost calibration (ROADMAP 1c) ----------------------------
+    sc = measure_stage_costs(lm, lm_params, prm, prm_params, emb,
+                             emb_params, sweep_prompts, width=width,
+                             max_steps=max_steps)
+    out["stage_costs"] = sc
+    print(f"\n== stage-cost calibration ({sc['n_problems']} problems, "
+          f"width={width}) ==")
+    print(f"  decode iteration {sc['decode_iter_s'] * 1e3:8.2f} ms "
+          f"({sc['mean_batch_occupancy']:.1f} tok/iter)   "
+          f"PRM call {sc['score_s'] * 1e3:8.2f} ms   "
+          f"embed call {sc['embed_s'] * 1e3:8.2f} ms   "
+          f"prefill/problem {sc['prefill_s'] * 1e3:8.2f} ms")
+    r = sc["ratios"]
+    print(f"-> ServingConfig.from_stage_costs fit: decode=1.0 "
+          f"score={r['score_cost']:.2f} embed={r['embed_cost']:.2f} "
+          f"prefill={r['prefill_cost']:.2f} "
+          f"(archived as experiments/bench/stage_costs.json)")
+
+    # -- mesh + replicas: single engine vs 2 behind one queue -----------
+    me = measure_mesh(lm, lm_params, prm, prm_params, emb, emb_params,
+                      sweep_prompts, width=width, max_steps=max_steps,
+                      costs=sc)
+    out["mesh"] = me
+    print(f"\n== mesh replicas ({n_sweep} problems, width={width}, "
+          f"host mesh, device-time projection) ==")
+    for r in me:
+        print(f"{r['path']:14s} {r['problems_per_s']:8.2f} problems/s "
+              f"({r['device_time_s']:.2f}s device time, "
+              f"{r['mean_batch_occupancy']:.1f} seqs/decode-step"
+              + (f", split {r['per_replica_problems']}"
+                 if "per_replica_problems" in r else "") + ")")
+    print(f"-> 2 replicas behind one admission queue: "
+          f"{me[1]['speedup_vs_single_engine']:.2f}x the single mesh'd "
+          f"engine's problems/s (per-problem results bit-identical — "
+          f"routing is invisible to the RNG namespaces)")
 
     sp = {(r["method"], r["path"]): r for r in out["rows"]}
     for method in ["rebase", "ets"]:

@@ -159,7 +159,11 @@ def main() -> None:
                 ("pressure", ("path",), "tok_per_s", False, None),
                 ("serving", ("path", "arrival_rate"), "p99_tta", True,
                  None),
-                ("adaptive", ("path",), "acc", False, 1.0))
+                ("adaptive", ("path",), "acc", False, 1.0),
+                # replica scaling gates on device-time problems/s (the
+                # projection off measured stage costs — wall clock on a
+                # single CI device can't see the second replica)
+                ("mesh", ("path",), "problems_per_s", False, None))
     for section, keys, metric, lower, ratio in sections:
         committed_rows = committed.get("rows" if section == "decode"
                                        else section, [])

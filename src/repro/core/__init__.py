@@ -7,9 +7,11 @@ Public API:
   SearchConfig, run_search           — unified beam/DVTS/REBASE/ETS/MCTS loop
   SearchState                        — the loop as a resumable step machine
   SweepScheduler, run_search_many    — continuous cross-problem batching
+  EngineReplica, ReplicaSweep        — N replicas, one admission queue
   AdaptiveConfig, BudgetController   — difficulty-adaptive width + budget
   mcts_step                          — Adaptive Parallel MCTS step policy
   ServingLoop, ServingConfig, Request — online serving with SLOs + refill
+  ReplicaServingLoop                 — one arrival stream over N replicas
   poisson_requests, load_trace, SLOTracker — workloads + latency report
   SyntheticTaskConfig, SyntheticProblem, evaluate_method — oracle task
   SyntheticSweep                     — multi-problem synthetic backend
@@ -25,8 +27,10 @@ from .ets import ETSConfig, ETSStep, ets_prune, mcts_step  # noqa: F401
 from .ilp import (SelectionProblem, SelectionResult, greedy_select,  # noqa: F401
                   milp_select, solve)
 from .rebase import rebase_reweight, rebase_weights  # noqa: F401
-from .serving import (Request, ServingConfig, ServingLoop,  # noqa: F401
-                      SLOTracker, load_trace, poisson_requests)
+from .replica import EngineReplica, ReplicaSweep  # noqa: F401
+from .serving import (ReplicaServingLoop, Request,  # noqa: F401
+                      ServingConfig, ServingLoop, SLOTracker, load_trace,
+                      poisson_requests)
 from .synthetic import (SyntheticProblem, SyntheticSweep,  # noqa: F401
                         SyntheticTaskConfig, evaluate_method)
 from .tree import Node, SearchTree  # noqa: F401

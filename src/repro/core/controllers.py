@@ -1413,9 +1413,26 @@ def run_search_many(backend, scfg: SearchConfig,
     under a global token budget (see :class:`AdaptiveConfig`).  With
     ``adaptive.enabled`` False the sweep is bit-identical to passing no
     config at all.
+
+    Horizontal scaling: ``backend`` may be a list/tuple of backends
+    (one engine replica each).  The sweep then runs through
+    :class:`repro.core.replica.ReplicaSweep` — one admission queue,
+    least-loaded routing, per-replica reservations — and ``max_live``
+    becomes the per-replica bound.  Per-problem results stay
+    bit-identical to the single-backend run (replica-invisible RNG
+    namespaces).  A 1-element sequence unwraps to the plain sweep.
     """
     if not prompts:
         return []
+    if isinstance(backend, (list, tuple)):
+        if len(backend) == 1:
+            backend = backend[0]
+        else:
+            assert continuous, \
+                "multi-replica sweeps require continuous=True"
+            from .replica import ReplicaSweep
+            return ReplicaSweep(backend, scfg, prompts,
+                                max_live=max_live, adaptive=adaptive).run()
     if continuous:
         return SweepScheduler(backend, scfg, prompts=prompts,
                               max_live=max_live, adaptive=adaptive).run()

@@ -20,6 +20,28 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def check_mesh_compat(mesh, *, use_kernel: bool) -> None:
+    """Wrapper-seam guard for mesh-aware engines.
+
+    The pure-jnp reference paths partition under GSPMD like any other
+    jax code, but these Pallas entry points run per-device and are not
+    yet wired through ``shard_map`` — calling them on operands sharded
+    across a >1-device mesh would silently compute on a shard as if it
+    were the whole pool.  Engines therefore call this at build time:
+    a multi-device mesh with ``use_kernel=True`` is rejected up front
+    with an actionable error instead of a wrong answer.
+    """
+    if mesh is None or not use_kernel:
+        return
+    if mesh.size > 1:
+        raise NotImplementedError(
+            f"use_kernel=True on a {mesh.size}-device mesh: the Pallas "
+            f"decode/prefill kernels are per-device and not yet wrapped "
+            f"in shard_map — run the pure-jnp reference path "
+            f"(use_kernel=False) on multi-device meshes, or a 1-device "
+            f"mesh with kernels")
+
+
 def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
                     scale: float, interpret=None, block_b=None):
     interpret = _auto_interpret() if interpret is None else interpret

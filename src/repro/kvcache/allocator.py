@@ -11,6 +11,16 @@ The allocator is pure host bookkeeping: it never touches device memory.
 Device-side copies required by CoW are returned as (src_page, dst_page,
 n_valid) descriptors for the engine to execute in one batched jit op.
 
+Mesh contract (mesh-aware engines, ``EngineConfig.mesh``): everything
+this module produces — block tables, page ids, descendant bitmaps,
+``tree_metadata`` — is host/replicated by construction, and physical
+page ids are *layout-oblivious* names: the pool may shard its page axis
+across a device mesh (``launch.sharding.pool_spec``) without any change
+here, because every consumer indexes the pool through these tables
+inside jit, where GSPMD resolves the shard.  Per-replica scaling needs
+no hook at all: each ``EngineReplica`` owns a whole allocator, so seq
+ids, namespaces and reservations are naturally replica-local.
+
 Pending-token invariant (the engine contract this bookkeeping serves):
 a sequence created by prefill holds pages for ``tokens[:-1]`` — the
 handle's ``length`` counts exactly the tokens whose KV is in the pool,

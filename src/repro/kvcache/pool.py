@@ -81,16 +81,32 @@ def pow2_bucket(n: int, lo: int = 8) -> int:
 
 
 class KVPool:
+    """Sharding hook: ``sharding`` (a ``jax.sharding.Sharding``, built
+    by the engine from ``launch.sharding.pool_spec``) places ``k``/``v``
+    on a device mesh at creation.  Every jitted update here is a
+    functional ``.at[]`` op, so the layout survives writes/copies
+    unchanged; all *indexing* metadata (block tables, page ids) stays
+    host-side, which is what keeps the allocator mesh-oblivious.  None
+    (default) keeps the historical single-device placement bit-for-bit.
+    """
+
     def __init__(self, n_layers: int, n_pages: int, page_size: int,
-                 n_kv_heads: int, head_dim: int, dtype=jnp.float32):
+                 n_kv_heads: int, head_dim: int, dtype=jnp.float32,
+                 sharding=None):
         self.n_layers = n_layers
         self.n_pages = n_pages
         self.page_size = page_size
         self.n_kv_heads = n_kv_heads
         self.head_dim = head_dim
+        self.sharding = sharding
         shape = (n_layers, n_pages, page_size, n_kv_heads, head_dim)
-        self.k = jnp.zeros(shape, dtype)
-        self.v = jnp.zeros(shape, dtype)
+        self.shape = shape
+        if sharding is None:
+            self.k = jnp.zeros(shape, dtype)
+            self.v = jnp.zeros(shape, dtype)
+        else:
+            self.k = jnp.zeros(shape, dtype, device=sharding)
+            self.v = jnp.zeros(shape, dtype, device=sharding)
 
     # ------------------------------------------------------------------
     def write_tokens(self, layer_k, layer_v, pages, slots):

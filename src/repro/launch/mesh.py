@@ -20,8 +20,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model: int = 1):
-    """Degenerate mesh on the real local device(s) — tests/examples."""
+    """Degenerate mesh on the real local device(s) — tests/examples.
+
+    ``model=1`` is the common fast path (the serving tests' 1-device
+    equivalence oracle): every local device lands on ``data`` without
+    consulting divisibility at all.  Any other ``model`` must divide
+    ``jax.device_count()`` exactly — a remainder used to silently build
+    a mesh over ``(n // model) * model < n`` devices, which then failed
+    far away inside jit with an opaque sharding error.
+    """
     n = jax.device_count()
+    if model == 1:
+        return jax.make_mesh((n, 1), ("data", "model"))
+    if model < 1 or n % model != 0:
+        raise ValueError(
+            f"make_host_mesh: model={model} must be >= 1 and divide "
+            f"jax.device_count()={n} exactly (got remainder "
+            f"{n % model if model >= 1 else model}); pick a model-axis "
+            f"size from the divisors of {n}")
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 

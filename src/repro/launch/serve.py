@@ -9,6 +9,10 @@ LM + PRM, or lower the serve step on the production mesh.
     PYTHONPATH=src python -m repro.launch.serve --trace trace.json \\
         --no-refill
 
+    # two engine replicas behind one arrival stream, each KV pool
+    # sharded on a host mesh with a 1-wide model axis:
+    PYTHONPATH=src python -m repro.launch.serve --replicas 2 --mesh 1
+
     # production-mesh lowering check (unchanged):
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --dry-run
 
@@ -39,7 +43,15 @@ def main():
                     help="priority classes cycled over Poisson arrivals")
     ap.add_argument("--deadline-slack", type=float, default=None,
                     help="per-request SLO: deadline = arrival + slack")
-    ap.add_argument("--max-live", type=int, default=4)
+    ap.add_argument("--max-live", type=int, default=4,
+                    help="per-replica live-problem bound")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the one arrival stream "
+                         "(each gets its own KV pool and spill buffer)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="MODEL",
+                    help="shard each engine's KV pool on a host mesh "
+                         "with this model-axis size (0: no mesh — the "
+                         "historical single-device engine)")
     ap.add_argument("--no-refill", action="store_true",
                     help="lock-step barrier baseline (refill off)")
     ap.add_argument("--first-finish", action="store_true",
@@ -92,14 +104,25 @@ def main():
     emb = build_model(emb_cfg, remat=False)
     emb_params = emb.init(jax.random.key(2))
 
-    engine = PagedEngine(lm, lm_params, EngineConfig(
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model=args.mesh)
+    ecfg = EngineConfig(
         n_pages=2048, page_size=8, max_batch=max(args.width * 2, 32),
-        max_seq_len=200, attention="tree"))
-    backend = LMBackend(engine, prm, prm_params, emb, emb_params,
-                        BackendConfig(step_token=NEWLINE, eos_token=EOS,
-                                      max_step_tokens=12, max_depth=8),
-                        answer_fn=ArithmeticTask.extract_answer,
-                        seed=500)
+        max_seq_len=200, attention="tree", mesh=mesh)
+
+    def make_backend():
+        # identically-seeded backends: a request's RNG namespace chain
+        # is replica-invisible, so routing never changes an answer
+        engine = PagedEngine(lm, lm_params, ecfg)
+        return LMBackend(engine, prm, prm_params, emb, emb_params,
+                         BackendConfig(step_token=NEWLINE, eos_token=EOS,
+                                       max_step_tokens=12, max_depth=8),
+                         answer_fn=ArithmeticTask.extract_answer,
+                         seed=500)
+
+    backends = [make_backend() for _ in range(max(args.replicas, 1))]
     scfg = SearchConfig(method=args.method, width=args.width, max_steps=8,
                         ets=ETSConfig(lambda_b=2.0, lambda_d=1.0,
                                       cluster_threshold=0.15))
@@ -117,16 +140,22 @@ def main():
             deadline_slack=args.deadline_slack)
         answers = [a for _, _, a in problems]
 
-    loop = ServingLoop(backend, scfg, requests, max_live=args.max_live,
-                       cfg=ServingConfig(refill=not args.no_refill,
-                                         first_finish=args.first_finish))
+    svc = ServingConfig(refill=not args.no_refill,
+                        first_finish=args.first_finish)
+    if len(backends) > 1:
+        from repro.core import ReplicaServingLoop
+        loop = ReplicaServingLoop(backends, scfg, requests,
+                                  max_live=args.max_live, cfg=svc)
+    else:
+        loop = ServingLoop(backends[0], scfg, requests,
+                           max_live=args.max_live, cfg=svc)
     results = loop.run()
 
     rep = loop.slo.report()
     mode = "lock-step" if args.no_refill else "refill"
     print(f"\n== online serving ({len(requests)} requests, {mode}"
           f"{', first-finish' if args.first_finish else ''}, "
-          f"max_live={args.max_live}) ==")
+          f"replicas={len(backends)}, max_live={args.max_live}) ==")
     for k in ("n_finished", "p50_tta", "p90_tta", "p99_tta", "mean_tta",
               "max_tta", "deadline_hit_rate"):
         v = rep.get(k)

@@ -12,13 +12,17 @@ Policies (per input-shape kind):
     ratio incl. kv_heads < mesh axis, which head-sharding cannot do).
 
 Every rule is divisibility-checked against the mesh: a dim that doesn't
-divide its axis is left unsharded (recorded by the dry-run so per-arch
-fallbacks are visible in EXPERIMENTS.md).
+divide its axis is left unsharded and *recorded* — pass ``record=[]``
+to any spec function and every dropped axis appends a
+:class:`ShardFallback` (path, dim index, dim size, wanted axis, axis
+size), so the dry-run can surface per-arch fallbacks in EXPERIMENTS.md
+instead of silently replicating.
 """
 from __future__ import annotations
 
 import re
-from typing import List, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -39,13 +43,39 @@ def _axis_size(mesh, name) -> int:
     return mesh.shape[name]
 
 
-def fit_spec(mesh, shape: Tuple[int, ...], want: Tuple) -> P:
-    """Drop axes that don't divide their dim; pad/trim to rank."""
+@dataclass(frozen=True)
+class ShardFallback:
+    """One divisibility fallback: the rule wanted ``axis`` on dim
+    ``dim_index`` but ``dim % axis_size != 0`` left it unsharded."""
+    path: str
+    dim_index: int
+    dim: int
+    axis: object            # str or tuple of axis names
+    axis_size: int
+
+
+def fit_spec(mesh, shape: Tuple[int, ...], want: Tuple, *,
+             record: Optional[List[ShardFallback]] = None,
+             path: str = "") -> P:
+    """Drop axes that don't divide their dim; pad/trim to rank.
+
+    ``record`` (a caller-owned list) collects a :class:`ShardFallback`
+    per dropped axis, so policy callers can surface which dims fell
+    back to replication instead of silently absorbing them.
+    """
     want = tuple(want) + (None,) * (len(shape) - len(want))
     want = want[: len(shape)]
     out = []
-    for dim, ax in zip(shape, want):
-        out.append(ax if ax and dim % _axis_size(mesh, ax) == 0 else None)
+    for i, (dim, ax) in enumerate(zip(shape, want)):
+        size = _axis_size(mesh, ax)
+        if ax and dim % size == 0:
+            out.append(ax)
+        else:
+            if ax and record is not None:
+                record.append(ShardFallback(path=path, dim_index=i,
+                                            dim=dim, axis=ax,
+                                            axis_size=size))
+            out.append(None)
     return P(*out)
 
 
@@ -92,7 +122,8 @@ _MOE_FALLBACK = {
 
 
 def param_spec(mesh, path: str, shape: Tuple[int, ...], *,
-               train: bool) -> P:
+               train: bool,
+               record: Optional[List[ShardFallback]] = None) -> P:
     for pat, base_rank, spec in _PARAM_RULES:
         if re.search(pat, path):
             lead = len(shape) - base_rank
@@ -113,7 +144,8 @@ def param_spec(mesh, path: str, shape: Tuple[int, ...], *,
                             "data" if s == "D" and train else
                             (None if s == "D" else s) for s in spec2)
                         break
-            fitted = fit_spec(mesh, tail_shape, want)
+            fitted = fit_spec(mesh, tail_shape, want, record=record,
+                              path=path)
             return P(*((None,) * lead + tuple(fitted)))
     # fallback: replicate
     return P()
@@ -162,11 +194,13 @@ _CACHE_RULES: List[Tuple[str, int, Tuple]] = [
 ]
 
 
-def cache_spec(mesh, path: str, shape: Tuple[int, ...]) -> P:
+def cache_spec(mesh, path: str, shape: Tuple[int, ...],
+               record: Optional[List[ShardFallback]] = None) -> P:
     for pat, base_rank, spec in _CACHE_RULES:
         if re.search(pat, path):
             lead = len(shape) - base_rank
-            fitted = fit_spec(mesh, shape[lead:], spec)
+            fitted = fit_spec(mesh, shape[lead:], spec, record=record,
+                              path=path)
             return P(*((None,) * lead + tuple(fitted)))
     return P()
 
@@ -177,6 +211,48 @@ def cache_shardings(mesh, cache_shape):
                              cache_spec(mesh, _path_str(path), leaf.shape))
 
     return jax.tree_util.tree_map_with_path(assign, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# Paged-pool policy (the serving engine's KV pool + decode operands)
+# ---------------------------------------------------------------------------
+
+def pool_spec(mesh, shape: Tuple[int, ...], *,
+              record: Optional[List[ShardFallback]] = None) -> P:
+    """Serve-mode layout of the paged KV pool
+    ``(n_layers, n_pages, page_size, n_kv_heads, head_dim)``.
+
+    The page axis shards over ``model`` — the paged analogue of the
+    contiguous cache policy's sequence->``model`` rule (flash-decoding
+    style: pages hold token slots, and splitting them works for every
+    GQA ratio, unlike head sharding).  Everything that *indexes* the
+    pool — block tables, descendant bitmaps, page lists — stays
+    host/replicated, so tree-metadata derivation is mesh-oblivious by
+    construction.  ``data`` is reserved for the request batch of the
+    decode/prefill steps (see :func:`engine_batch_spec`).
+    """
+    return fit_spec(mesh, shape, (None, "model", None, None, None),
+                    record=record, path="pool/kv")
+
+
+def engine_batch_spec(mesh, shape: Tuple[int, ...], *,
+                      record: Optional[List[ShardFallback]] = None) -> P:
+    """Decode/prefill host operands: leading (batch) axis -> ``data``.
+
+    Applies to the per-row operand arrays the engine builds on the host
+    each step (tokens, lengths, write pages/slots, active mask) —
+    batch shards over ``data`` per the serve policy, trailing axes
+    replicate.  Pool-indexing metadata must NOT go through this spec:
+    block tables and the tree step's unique-page lists/bitmaps index
+    the whole (model-sharded) pool, so they stay replicated — the
+    mesh-oblivious half of the tree-metadata contract.
+    """
+    from .mesh import batch_axes
+    dp = batch_axes(mesh)
+    if len(dp) == 1:
+        dp = dp[0]          # P("data"), not P(("data",))
+    return fit_spec(mesh, shape, (dp,) + (None,) * (len(shape) - 1),
+                    record=record, path="engine/batch")
 
 
 # ---------------------------------------------------------------------------

@@ -139,6 +139,15 @@ class EngineConfig:
     # prompts longer than this many tokens prefill in page-streamed
     # segments instead of one bucket (None = always one bucket)
     prefill_chunk_tokens: Optional[int] = None
+    # device mesh for the serve layout (launch.mesh.make_host_mesh /
+    # make_production_mesh): the KV pool's page axis shards over
+    # "model" (launch.sharding.pool_spec) and per-row decode/prefill
+    # operands shard batch -> "data" (engine_batch_spec), while block
+    # tables, tree metadata and the allocator stay host/replicated.
+    # None (default) keeps the historical single-device engine
+    # bit-for-bit; a 1-device mesh is the equivalence oracle — same
+    # math, trivially partitioned, identical sampled streams.
+    mesh: Optional[object] = None
 
     def __post_init__(self):
         assert self.attention in ("paged", "tree"), self.attention
@@ -161,9 +170,30 @@ class PagedEngine:
         self.dump_page = ecfg.n_pages - 1
         self.alloc = PageAllocator(ecfg.n_pages - 1, ecfg.page_size)
         L = cfg.n_layers
+        # mesh-aware layout (EngineConfig.mesh): the pool places its
+        # K/V on the serve-policy sharding and per-row host operands
+        # are committed batch->data before each jitted step; every
+        # divisibility fallback the policy takes lands in
+        # ``shard_fallbacks`` so callers can see what replicated.
+        # mesh=None skips all of it — the historical engine, and the
+        # bit-identity baseline a 1-device mesh is tested against.
+        self.mesh = ecfg.mesh
+        self.shard_fallbacks: list = []
+        self._row_shd_cache: Dict[tuple, object] = {}
+        kv_sharding = None
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+            from repro.kernels.ops import check_mesh_compat
+            from repro.launch.sharding import pool_spec
+            check_mesh_compat(self.mesh, use_kernel=ecfg.use_kernel)
+            pool_shape = (L, ecfg.n_pages, ecfg.page_size,
+                          cfg.n_kv_heads, cfg.head_dim)
+            kv_sharding = NamedSharding(
+                self.mesh, pool_spec(self.mesh, pool_shape,
+                                     record=self.shard_fallbacks))
         self.pool = KVPool(L, ecfg.n_pages, ecfg.page_size,
                            cfg.n_kv_heads, cfg.head_dim,
-                           dtype=jnp.float32)
+                           dtype=jnp.float32, sharding=kv_sharding)
         self.tokens: Dict[int, List[int]] = {}   # full token history
         self.max_pages_per_seq = -(-ecfg.max_seq_len // ecfg.page_size)
         # throughput accounting (benchmarks/table2): how many decode
@@ -462,6 +492,45 @@ class PagedEngine:
         return jax.jit(step, donate_argnums=(9, 10))
 
     # ------------------------------------------------------------------
+    # Mesh placement of host-built operands
+    # ------------------------------------------------------------------
+    def _put_rows(self, arr):
+        """Commit a batch-leading host operand (tokens, lengths, write
+        pages/slots, active mask — anything whose axis 0 is the row
+        grid) with the serve policy's batch->``data`` sharding.  The
+        per-shape NamedSharding is cached, so fallback recording fires
+        once per shape, not once per step.  Without a mesh this is
+        exactly the historical ``jnp.asarray`` — same bits, same jit
+        signatures."""
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        shape = np.shape(arr)
+        shd = self._row_shd_cache.get(shape)
+        if shd is None:
+            from jax.sharding import NamedSharding
+            from repro.launch.sharding import engine_batch_spec
+            shd = NamedSharding(
+                self.mesh, engine_batch_spec(self.mesh, shape,
+                                             record=self.shard_fallbacks))
+            self._row_shd_cache[shape] = shd
+        return jax.device_put(np.asarray(arr), shd)
+
+    def _put_repl(self, arr):
+        """Commit a host operand replicated across the mesh: block
+        tables and the tree step's unique-page metadata (page lists,
+        descendant bitmaps, page lengths) index the *whole* pool, so
+        every shard needs all of them — the mesh-obliviousness contract
+        of the allocator's tree-metadata derivation."""
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        shd = self._row_shd_cache.get(("repl",))
+        if shd is None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            shd = NamedSharding(self.mesh, PartitionSpec())
+            self._row_shd_cache[("repl",)] = shd
+        return jax.device_put(np.asarray(arr), shd)
+
+    # ------------------------------------------------------------------
     # Public host API
     # ------------------------------------------------------------------
     def prefill(self, tokens: Sequence[int]) -> int:
@@ -557,9 +626,9 @@ class PagedEngine:
         self.n_prefill_calls += 1
         self.n_prefill_tokens += n_tokens
         logits, self.pool.k, self.pool.v = self._prefill_fn(
-            self.params, jnp.asarray(tok), jnp.asarray(pos),
-            jnp.asarray(pages), jnp.asarray(slots), jnp.asarray(lens),
-            self.pool.k, self.pool.v)
+            self.params, self._put_rows(tok), self._put_rows(pos),
+            self._put_rows(pages), self._put_rows(slots),
+            self._put_rows(lens), self.pool.k, self.pool.v)
         if self.ecfg.trace_logits:
             self.logits_trace.append(np.asarray(logits))
 
@@ -589,7 +658,7 @@ class PagedEngine:
         Tp = pow2_bucket(len(h.block_table), lo=1)
         tbl = np.zeros((1, Tp), np.int32)
         tbl[0, :len(h.block_table)] = h.block_table
-        tbl_j = jnp.asarray(tbl)
+        tbl_j = self._put_repl(tbl)
         for s0 in range(0, n, pct):
             s1 = min(s0 + pct, n)
             seg = ctx[s0:s1]
@@ -607,8 +676,8 @@ class PagedEngine:
             self.n_prefill_calls += 1
             self.n_prefill_tokens += m
             logits, self.pool.k, self.pool.v = self._streamed_prefill_fn(
-                self.params, jnp.asarray(tok), jnp.asarray(pos),
-                jnp.asarray(pages), jnp.asarray(slots),
+                self.params, self._put_rows(tok), self._put_rows(pos),
+                self._put_rows(pages), self._put_rows(slots),
                 jnp.asarray(np.int32(m)), tbl_j,
                 jnp.asarray(np.int32(s0)), self.pool.k, self.pool.v)
         if self.ecfg.trace_logits:
@@ -961,20 +1030,24 @@ class DecodeStream:
         if tree_mode:
             meta = eng.alloc.tree_metadata(rows, pad_page=eng.dump_page)
             eng._count_streamed_pages(live, meta.n_unique, meta.n_logical)
+            # rows shard batch->data; the unique-page metadata spans the
+            # whole tree (no batch axis) and stays replicated
             logits, eng.pool.k, eng.pool.v = eng._tree_decode_fn(
-                eng.params, jnp.asarray(tok), jnp.asarray(lens),
-                jnp.asarray(pages), jnp.asarray(slots), jnp.asarray(act),
-                jnp.asarray(meta.page_list), jnp.asarray(meta.page_mask),
-                jnp.asarray(meta.page_lens), eng.pool.k, eng.pool.v)
+                eng.params, eng._put_rows(tok), eng._put_rows(lens),
+                eng._put_rows(pages), eng._put_rows(slots),
+                eng._put_rows(act), eng._put_repl(meta.page_list),
+                eng._put_repl(meta.page_mask),
+                eng._put_repl(meta.page_lens), eng.pool.k, eng.pool.v)
         else:
             # paged reads stream every page of every live row
             n_logical = sum(len(eng.alloc.seqs[i].block_table)
                             for i in live)
             eng._count_streamed_pages(live, n_logical, n_logical)
             logits, eng.pool.k, eng.pool.v = eng._decode_fn(
-                eng.params, jnp.asarray(tok), jnp.asarray(bt),
-                jnp.asarray(lens), jnp.asarray(pages), jnp.asarray(slots),
-                jnp.asarray(act), eng.pool.k, eng.pool.v)
+                eng.params, eng._put_rows(tok), eng._put_repl(bt),
+                eng._put_rows(lens), eng._put_rows(pages),
+                eng._put_rows(slots), eng._put_rows(act),
+                eng.pool.k, eng.pool.v)
         if ecfg.trace_logits:
             eng.logits_trace.append(np.asarray(logits))
         # advance every slot's own key chain (freed slots' keys advance

@@ -1,0 +1,246 @@
+"""Mesh-aware engine + replica scaling.
+
+Equivalence contracts of the distributed serving layer:
+
+  * a 1-device mesh engine is bit-identical to the historical mesh-less
+    engine in BOTH attention modes (the mesh only changes placement,
+    never bits — the oracle every multi-device layout is built on);
+  * a multi-replica sweep / serving loop is bit-identical per problem
+    to serial single-replica runs, whatever the routing (per-problem
+    RNG namespaces are seeded from the backend seed alone, so which
+    replica runs a problem is invisible to its streams) —
+    property-tested over random routers and arrival patterns;
+  * ``make_host_mesh`` rejects non-divisible model-axis sizes up front;
+  * the Pallas wrapper seam refuses multi-device meshes (the kernels
+    are per-device until wrapped in shard_map).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_shim import HealthCheck, given, settings, st
+from test_serving import (StubBackend, STUB_PROMPTS, STUB_SCFG,
+                          _assert_results_identical)
+
+from repro.configs import get_config
+from repro.core import (ETSConfig, ReplicaServingLoop, ReplicaSweep,
+                        Request, SearchConfig, ServingConfig, ServingLoop,
+                        run_search, run_search_many)
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, PagedEngine
+from repro.serving.search_backend import BackendConfig, LMBackend
+
+
+# ---------------------------------------------------------------------------
+# make_host_mesh: divisibility guard + model=1 fast path
+# ---------------------------------------------------------------------------
+
+def test_make_host_mesh_model1_fast_path():
+    mesh = make_host_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.shape["model"] == 1
+    assert mesh.shape["data"] == jax.device_count()
+
+
+def test_make_host_mesh_rejects_nondivisible_model():
+    # this suite runs on 1 device, so any model > 1 cannot divide it
+    bad = jax.device_count() + 1
+    with pytest.raises(ValueError, match="must be >= 1 and divide"):
+        make_host_mesh(model=bad)
+    with pytest.raises(ValueError, match="must be >= 1 and divide"):
+        make_host_mesh(model=0)
+
+
+# ---------------------------------------------------------------------------
+# Kernel wrapper seam: multi-device mesh + Pallas path is refused
+# ---------------------------------------------------------------------------
+
+def test_check_mesh_compat_guards_kernel_path():
+    from repro.kernels.ops import check_mesh_compat
+
+    class FakeBigMesh:
+        size = 4
+
+    check_mesh_compat(None, use_kernel=True)             # no mesh: fine
+    check_mesh_compat(FakeBigMesh(), use_kernel=False)   # jnp path: fine
+    check_mesh_compat(make_host_mesh(), use_kernel=True)  # 1 device: fine
+    with pytest.raises(NotImplementedError, match="shard_map"):
+        check_mesh_compat(FakeBigMesh(), use_kernel=True)
+
+
+# ---------------------------------------------------------------------------
+# 1-device mesh == mesh-less engine, both attention modes (LM backend)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_models():
+    lm_cfg = dataclasses.replace(get_config("tiny-lm"), n_layers=2,
+                                 d_model=64, n_heads=4, n_kv_heads=2,
+                                 d_ff=128)
+    lm = build_model(lm_cfg, remat=False)
+    lm_params = lm.init(jax.random.key(0))
+    prm = build_model(dataclasses.replace(lm_cfg, n_layers=1),
+                      with_value_head=True, remat=False)
+    prm_params = prm.init(jax.random.key(1))
+    emb_cfg = dataclasses.replace(get_config("tiny-embedder"), n_layers=1,
+                                  d_model=64, n_heads=2, n_kv_heads=2,
+                                  d_ff=128)
+    emb = build_model(emb_cfg, remat=False)
+    emb_params = emb.init(jax.random.key(2))
+    return (lm, lm_params), (prm, prm_params), (emb, emb_params)
+
+
+def _lm_backend(tiny_models, attention, mesh=None):
+    (lm, lm_params), (prm, prm_params), (emb, emb_params) = tiny_models
+    engine = PagedEngine(lm, lm_params, EngineConfig(
+        n_pages=256, page_size=8, max_batch=32, max_seq_len=128,
+        attention=attention, mesh=mesh))
+    backend = LMBackend(engine, prm, prm_params, emb, emb_params,
+                        BackendConfig(step_token=2, eos_token=3,
+                                      max_step_tokens=6, max_depth=4),
+                        answer_fn=lambda full: None, seed=13)
+    return engine, backend
+
+
+LM_PROMPTS = [list(range(4, 4 + n)) for n in (17, 23, 9)]
+LM_SCFG = SearchConfig(method="ets", width=4, max_steps=2,
+                       ets=ETSConfig(lambda_b=1.0, lambda_d=1.0,
+                                     cluster_threshold=0.2))
+
+
+@pytest.mark.parametrize("attention", ["tree", "paged"])
+def test_one_device_mesh_bit_identical(tiny_models, attention):
+    _, base = _lm_backend(tiny_models, attention)
+    want = run_search_many(base, LM_SCFG, LM_PROMPTS)
+    engine, backend = _lm_backend(tiny_models, attention,
+                                  mesh=make_host_mesh())
+    got = run_search_many(backend, LM_SCFG, LM_PROMPTS)
+    _assert_results_identical(want, got)
+    # the pool actually lives on the mesh, and on a 1-device mesh no
+    # sharding rule can fall back
+    assert engine.pool.sharding is not None
+    assert engine.pool.k.sharding.mesh.size == 1
+    assert engine.shard_fallbacks == []
+
+
+def test_replica_sweep_lm_bit_identical(tiny_models):
+    """Two LM engine replicas behind one queue reproduce the
+    single-backend sweep per problem (identically-seeded backends)."""
+    _, base = _lm_backend(tiny_models, "tree")
+    want = run_search_many(base, LM_SCFG, LM_PROMPTS)
+    backends = [_lm_backend(tiny_models, "tree")[1] for _ in range(2)]
+    got = run_search_many(backends, LM_SCFG, LM_PROMPTS)
+    _assert_results_identical(want, got)
+
+
+# ---------------------------------------------------------------------------
+# Replica sweep: routing-invariant per-problem results (stub backend)
+# ---------------------------------------------------------------------------
+
+def _stub_serial(prompts, scfg=STUB_SCFG):
+    be = StubBackend()
+    return [run_search(be, scfg, tree=be.start(p)) for p in prompts]
+
+
+def test_replica_sweep_matches_serial_runs():
+    want = _stub_serial(STUB_PROMPTS)
+    for n_rep in (1, 2, 3):
+        rs = ReplicaSweep([StubBackend() for _ in range(n_rep)],
+                          STUB_SCFG, STUB_PROMPTS)
+        got = rs.run()
+        _assert_results_identical(want, got)
+        # every problem landed somewhere, none landed twice
+        counts = [len(rep.sched.results) for rep in rs.replicas]
+        assert sum(counts) == len(STUB_PROMPTS)
+        if n_rep > 1:
+            assert max(counts) < len(STUB_PROMPTS)   # routing spread
+
+
+def test_run_search_many_unwraps_single_backend_list():
+    want = run_search_many(StubBackend(), STUB_SCFG, STUB_PROMPTS)
+    got = run_search_many([StubBackend()], STUB_SCFG, STUB_PROMPTS)
+    _assert_results_identical(want, got)
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.integers(0, 10 ** 6),       # router seed
+       st.integers(1, 4),             # replicas
+       st.integers(1, 5))             # per-replica max_live
+def test_replica_sweep_random_routing_invariance(seed, n_rep, max_live):
+    """ANY room-respecting router yields the same per-problem results:
+    placement and admission order only move where/when a problem runs,
+    never what it computes."""
+    rng = np.random.default_rng(seed)
+
+    def chaotic_router(eligible, loads):
+        return eligible[int(rng.integers(len(eligible)))]
+
+    want = _stub_serial(STUB_PROMPTS)
+    rs = ReplicaSweep([StubBackend() for _ in range(n_rep)], STUB_SCFG,
+                      STUB_PROMPTS, max_live=max_live,
+                      router=chaotic_router)
+    _assert_results_identical(want, rs.run())
+
+
+# ---------------------------------------------------------------------------
+# Replica serving loop: one arrival stream over N loops
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("refill", [False, True])
+def test_replica_serving_degenerate_trace(refill):
+    """All arrivals at t=0: the replica pool reproduces the batch sweep
+    per request, and the merged SLO report covers every request."""
+    want = run_search_many(StubBackend(), STUB_SCFG, STUB_PROMPTS)
+    pool = ReplicaServingLoop(
+        [StubBackend() for _ in range(2)], STUB_SCFG,
+        [Request(prompt=p) for p in STUB_PROMPTS],
+        cfg=ServingConfig(refill=refill))
+    _assert_results_identical(want, pool.run())
+    rep = pool.slo.report()
+    assert rep["n_finished"] == len(STUB_PROMPTS)
+    assert sorted(pool.routed) == list(range(len(STUB_PROMPTS)))
+    assert pool.clock == max(lp.clock for lp in pool.loops)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.tuples(st.integers(0, 50),     # arrival time
+                          st.integers(0, 2)),     # priority class
+                min_size=2, max_size=6),
+       st.integers(1, 3),                         # replicas
+       st.integers(0, 10 ** 6))                   # router seed
+def test_replica_serving_timed_workload_invariance(specs, n_rep, seed):
+    """Random arrivals, priorities, replica counts, and routers: every
+    request finishes with its solo-run result — same contract the
+    single serving loop holds, now fleet-wide."""
+    rng = np.random.default_rng(seed)
+
+    def chaotic_router(eligible, loads):
+        return eligible[int(rng.integers(len(eligible)))]
+
+    prompts = [[100 + i, i % 7] for i in range(len(specs))]
+    reqs = [Request(prompt=p, arrival=float(a), priority=prio)
+            for p, (a, prio) in zip(prompts, specs)]
+    pool = ReplicaServingLoop([StubBackend() for _ in range(n_rep)],
+                              STUB_SCFG, reqs, max_live=2,
+                              cfg=ServingConfig(refill=True),
+                              router=chaotic_router)
+    got = pool.run()
+    _assert_results_identical(_stub_serial(prompts), got)
+    assert pool.slo.report()["n_finished"] == len(reqs)
+
+
+def test_serving_loop_submit_matches_constructor():
+    """submit() is equivalent to passing the request up front."""
+    reqs = [Request(prompt=p, arrival=float(i))
+            for i, p in enumerate(STUB_PROMPTS)]
+    want = ServingLoop(StubBackend(), STUB_SCFG, reqs,
+                       cfg=ServingConfig(refill=False)).run()
+    loop = ServingLoop(StubBackend(), STUB_SCFG, [],
+                       cfg=ServingConfig(refill=False))
+    for i, r in enumerate(reqs):
+        loop.submit(i, r)
+    _assert_results_identical(want, loop.run())

@@ -12,8 +12,9 @@ from repro.launch.sharding import fit_spec, param_spec, cache_spec
 
 
 class StubMesh:
-    """Only .shape is consulted by the spec logic."""
+    """Only .shape (and .axis_names for batch specs) is consulted."""
     shape = {"data": 16, "model": 16}
+    axis_names = ("data", "model")
 
 
 MESH = StubMesh()
@@ -65,6 +66,82 @@ def test_norms_replicated():
 def test_fit_spec_drops_nondivisible():
     assert fit_spec(MESH, (100, 64), ("data", "model")) == P(None, "model")
     assert fit_spec(MESH, (32, 32), ("data", "model")) == P("data", "model")
+
+
+# ---------------------------------------------------------------------------
+# Fallback recording: dropped axes must be surfaced, not silent
+# ---------------------------------------------------------------------------
+
+def test_fit_spec_records_dropped_axis():
+    rec = []
+    spec = fit_spec(MESH, (100, 64), ("data", "model"), record=rec,
+                    path="x/w")
+    assert spec == P(None, "model")
+    (fb,) = rec
+    assert (fb.path, fb.dim_index, fb.dim, fb.axis, fb.axis_size) \
+        == ("x/w", 0, 100, "data", 16)
+    # a fully-divisible fit appends nothing
+    fit_spec(MESH, (32, 32), ("data", "model"), record=rec, path="y/w")
+    assert len(rec) == 1
+
+
+def test_param_spec_records_fallback_train_policy():
+    # hubert vocab 504 % 16 != 0: the embed rule wants vocab->model and
+    # must RECORD the fallback it takes
+    rec = []
+    spec = param_spec(MESH, "embed", (504, 1280), train=True, record=rec)
+    assert spec == P(None, "data")
+    (fb,) = rec
+    assert fb.path == "embed" and fb.axis == "model" and fb.dim == 504
+
+
+def test_param_spec_serve_policy_drop_is_not_a_fallback():
+    # serve mode drops the data axis BY POLICY (weights replicate over
+    # the request batch) — that is not a divisibility fallback and must
+    # not pollute the record
+    rec = []
+    spec = param_spec(MESH, "groups/0/attn/wq", (32, 4096, 4096),
+                      train=False, record=rec)
+    assert spec == P(None, None, "model")
+    assert rec == []
+
+
+def test_cache_spec_records_fallback_serve_policy():
+    # batch=1 long-context decode: batch->data is unsatisfiable and
+    # recorded; sequence->model still applies
+    rec = []
+    spec = cache_spec(MESH, "groups/0/k", (13, 1, 4096, 32, 112),
+                      record=rec)
+    assert spec == P(None, None, "model", None, None)
+    (fb,) = rec
+    assert fb.axis == "data" and fb.dim == 1 and fb.axis_size == 16
+
+
+def test_pool_spec_pages_on_model_with_record():
+    from repro.launch.sharding import pool_spec
+    rec = []
+    # 2048 pages % 16 == 0 -> page axis shards over model, no fallback
+    assert pool_spec(MESH, (2, 2048, 8, 4, 64), record=rec) \
+        == P(None, "model", None, None, None)
+    assert rec == []
+    # 100 pages % 16 != 0 -> replicated pool, recorded under pool/kv
+    assert pool_spec(MESH, (2, 100, 8, 4, 64), record=rec) \
+        == P(None, None, None, None, None)
+    (fb,) = rec
+    assert fb.path == "pool/kv" and fb.dim == 100 and fb.axis == "model"
+
+
+def test_engine_batch_spec_leading_axis_to_data():
+    from repro.launch.sharding import engine_batch_spec
+    rec = []
+    assert engine_batch_spec(MESH, (32,), record=rec) == P("data")
+    assert engine_batch_spec(MESH, (32, 16), record=rec) \
+        == P("data", None)
+    assert rec == []
+    # a 1-row operand (streamed prefill) can't split 16 ways: recorded
+    assert engine_batch_spec(MESH, (1, 64), record=rec) == P(None, None)
+    (fb,) = rec
+    assert fb.path == "engine/batch" and fb.dim == 1
 
 
 def test_cache_spec_kv_seq_on_model():
