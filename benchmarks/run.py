@@ -103,7 +103,8 @@ def main() -> None:
                            "pressure": res.get("pressure", []),
                            "serving": res.get("serving", []),
                            "adaptive": res.get("adaptive", []),
-                           "mesh": res.get("mesh", [])},
+                           "mesh": res.get("mesh", []),
+                           "families": res.get("families", [])},
                           f, indent=1, default=str)
             print(f"[table2] rows -> {args.bench_json}")
             stage = os.path.join(args.out, "stage_costs.json")

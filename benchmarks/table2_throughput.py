@@ -44,7 +44,12 @@ refcounted tree sharing, lock-step batched decode — and measures
     Deterministic in its seed, so the trend check gates on accuracy
     exactly (the ``adaptive`` row must keep dominating: at-least-equal
     accuracy at strictly fewer tokens than the width-matched uniform
-    row).
+    row),
+  * model families (the ``families`` section): per-family greedy decode
+    smoke through the per-layer runtime stack — MoE, Mamba2, RWKV-6 and
+    hybrid tiny configs each prefill + decode through the paged engine;
+    tok/s per family is trend-gated so a family-specific regression
+    (or a family dropping out entirely) fails the smoke job.
 
 Three decode modes per method:
 
@@ -120,6 +125,12 @@ SERVING_MODES = [
     ("lockstep", False),
     ("refill", True),
 ]
+
+# families section: one tiny config per non-dense served model family
+# (dense/GQA is the main table's own model).  Smoke tok/s through the
+# paged runtime stack — a liveness + gross-regression gate per family,
+# not a throughput claim.
+FAMILY_ARCHS = ["mixtral-8x7b", "mamba2-370m", "rwkv6-7b", "zamba2-7b"]
 
 
 def measure_serving(lm, lm_params, prm, prm_params, emb, emb_params,
@@ -677,6 +688,56 @@ def measure_adaptive(n: int = 120, seed: int = 0, widths=(4, 8, 16),
     return rows
 
 
+def measure_families(n_tokens: int = 24, batch: int = 4):
+    """Per-family decode smoke through the paged runtime stack.
+
+    One tiny config per non-dense served model family (MoE, Mamba2,
+    RWKV-6, hybrid): prefill a small batch, greedy-decode ``n_tokens``
+    each, report tok/s.  Untrained weights — this is a liveness and
+    gross-regression gate for the per-layer runtime protocol (a family
+    whose decode step stops compiling, recompiles per step, or slows
+    >2x fails the trend check), not a throughput claim.  Warmup run
+    compiles; the measured run repeats the identical shapes so no
+    traces land in the timed window.
+    """
+    from repro.configs import get_config, tiny_variant
+    from repro.models.model import build_model
+    from repro.serving.engine import EngineConfig, PagedEngine
+
+    rows = []
+    for name in FAMILY_ARCHS:
+        cfg = tiny_variant(get_config(name))
+        model = build_model(cfg, remat=False)
+        params = model.init(jax.random.key(0))
+        eng = PagedEngine(model, params, EngineConfig(
+            n_pages=128, page_size=8, max_batch=8, max_seq_len=64))
+        prompts = [[(3 + 7 * i + j) % (cfg.vocab_size - 4) + 4
+                    for j in range(8)] for i in range(batch)]
+
+        def episode():
+            sids = eng.prefill_many(prompts)
+            out = eng.decode(sids, n_tokens, jax.random.key(1),
+                             temperature=0.0)
+            for s in sids:
+                eng.free(s)
+            return out
+
+        episode()                          # warmup: compile everything
+        traces0 = eng.decode_traces
+        t0 = time.time()
+        episode()
+        wall = time.time() - t0
+        rows.append({"family": name, "path": name,
+                     "tok_per_s": batch * n_tokens / wall,
+                     "has_state_pages": eng.state is not None,
+                     "n_kv_layers": eng.n_kv_layers,
+                     "decode_retraces": eng.decode_traces - traces0,
+                     "wall_s": wall})
+        assert rows[-1]["decode_retraces"] == 0, \
+            (name, "decode recompiled on identical shapes")
+    return rows
+
+
 def run(train_steps: int = 150, n_problems: int = 6, width: int = 12,
         max_steps: int = 8, task_ops: int = 4):
     from repro.configs import get_config
@@ -924,6 +985,20 @@ def run(train_steps: int = 150, n_problems: int = 6, width: int = 12,
           f"{me[1]['speedup_vs_single_engine']:.2f}x the single mesh'd "
           f"engine's problems/s (per-problem results bit-identical — "
           f"routing is invisible to the RNG namespaces)")
+
+    # -- model families: per-family smoke through the runtime stack -----
+    fam = measure_families()
+    out["families"] = fam
+    print(f"\n== model families (paged runtime stack, greedy smoke) ==")
+    for r in fam:
+        print(f"{r['family']:14s} {r['tok_per_s']:8.1f} tok/s "
+              f"({r['n_kv_layers']} KV layers"
+              + (", state pages" if r["has_state_pages"] else "")
+              + f", {r['decode_retraces']} retraces)")
+    print("-> every served family (MoE, Mamba2, RWKV-6, hybrid) decodes "
+          "through the per-layer runtime protocol with zero steady-state "
+          "recompiles; paged == contiguous bit-identity is pinned by "
+          "tests/test_family_runtimes.py")
 
     sp = {(r["method"], r["path"]): r for r in out["rows"]}
     for method in ["rebase", "ets"]:

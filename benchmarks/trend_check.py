@@ -160,6 +160,10 @@ def main() -> None:
                 ("serving", ("path", "arrival_rate"), "p99_tta", True,
                  None),
                 ("adaptive", ("path",), "acc", False, 1.0),
+                # per-family smoke tok/s through the runtime stack: a
+                # family whose decode slows >2x (or stops producing a
+                # row) fails here
+                ("families", ("family",), "tok_per_s", False, None),
                 # replica scaling gates on device-time problems/s (the
                 # projection off measured stage costs — wall clock on a
                 # single CI device can't see the second replica)

@@ -9,7 +9,7 @@ _LOADED = False
 _ARCH_MODULES = [
     "deepseek_moe_16b", "zamba2_7b", "hubert_xlarge", "phi3_mini_3_8b",
     "qwen2_vl_7b", "llama3_2_1b", "mixtral_8x7b", "qwen3_14b",
-    "rwkv6_7b", "yi_6b", "llemma_34b", "tiny",
+    "rwkv6_7b", "yi_6b", "llemma_34b", "mamba2_370m", "tiny",
 ]
 
 

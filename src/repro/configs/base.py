@@ -107,7 +107,9 @@ class ModelConfig:
         channel-mix).  Groups with count>1 are scanned over stacked params.
         """
         if self.arch_type == "ssm":
-            return [("wkv", self.n_layers)]
+            kind = self.ssm.kind if self.ssm is not None else "rwkv6"
+            return [("mamba" if kind == "mamba2" else "wkv",
+                     self.n_layers)]
         if self.arch_type == "hybrid":
             k = max(self.attn_every, 1)
             n_super, rem = divmod(self.n_layers, k)
@@ -149,9 +151,16 @@ class ModelConfig:
             n += self.n_layers * per
         elif self.arch_type == "ssm":
             s = self.ssm
-            # rwkv6: time-mix (r,k,v,g,o ~ 5 d^2) + channel mix (2*d*d_ff)
-            per = 5 * d * d + 2 * d * self.d_ff + 2 * d
-            per += 6 * d  # decay/bonus/token-shift params (approx)
+            if s is not None and s.kind == "mamba2":
+                d_in = s.expand * d
+                d_xbc = d_in + 2 * s.d_state
+                # z/xbc/dt projections + conv + out proj + norms
+                per = d * (d_in + d_xbc + d_in // s.head_dim) \
+                    + s.d_conv * d_xbc + d_in * d + d_in + d
+            else:
+                # rwkv6: time-mix (r,k,v,g,o ~ 5 d^2) + channel mix
+                per = 5 * d * d + 2 * d * self.d_ff + 2 * d
+                per += 6 * d  # decay/bonus/token-shift params (approx)
             n += self.n_layers * per
         elif self.arch_type == "hybrid":
             s = self.ssm

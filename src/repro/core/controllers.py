@@ -102,7 +102,8 @@ import math
 import warnings
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple
+from typing import (Any, Dict, List, Optional, Protocol, Sequence, Tuple,
+                    Union)
 
 import numpy as np
 
@@ -1372,13 +1373,41 @@ class SweepScheduler:
         return [self.results[i] for i in range(self._n)]
 
 
-def run_search_many(backend, scfg: SearchConfig,
+# One typed entry point serves both deployment shapes: a single backend
+# or a sequence of engine replicas.  Normalization happens in ONE place
+# (_as_replicas) so every route below sees the same canonical form.
+BackendOrReplicas = Union[Backend, Sequence[Backend]]
+
+
+def _as_replicas(backend: BackendOrReplicas) -> List[Backend]:
+    """Canonicalize the backend argument to a non-empty replica list.
+
+    A bare backend is a 1-replica deployment; a list/tuple is taken as
+    engine replicas.  Anything else (nested lists, empty sequences,
+    generators) is rejected here with an actionable error instead of
+    failing deep inside the scheduler.
+    """
+    if isinstance(backend, (list, tuple)):
+        reps = list(backend)
+        if not reps:
+            raise ValueError(
+                "run_search_many: backend list is empty — pass one "
+                "backend or a non-empty sequence of engine replicas")
+        if any(isinstance(b, (list, tuple)) for b in reps):
+            raise ValueError(
+                "run_search_many: backend replicas must be a flat "
+                "sequence, got a nested list")
+        return reps
+    return [backend]
+
+
+def run_search_many(backend: BackendOrReplicas, scfg: SearchConfig,
                     prompts: Sequence[Sequence[int]], *,
                     continuous: bool = True,
                     max_live: Optional[int] = None,
                     adaptive: Optional[AdaptiveConfig] = None
                     ) -> List[SearchResult]:
-    """Multi-problem sweep on one shared backend.
+    """Multi-problem sweep on one shared backend (or replica set).
 
     ``continuous=True`` (default) drives the whole sweep through the
     ``SweepScheduler``: problems are admitted in batched flash-prefill
@@ -1415,24 +1444,29 @@ def run_search_many(backend, scfg: SearchConfig,
     config at all.
 
     Horizontal scaling: ``backend`` may be a list/tuple of backends
-    (one engine replica each).  The sweep then runs through
-    :class:`repro.core.replica.ReplicaSweep` — one admission queue,
-    least-loaded routing, per-replica reservations — and ``max_live``
-    becomes the per-replica bound.  Per-problem results stay
-    bit-identical to the single-backend run (replica-invisible RNG
-    namespaces).  A 1-element sequence unwraps to the plain sweep.
+    (one engine replica each — :data:`BackendOrReplicas`).  The sweep
+    then runs through :class:`repro.core.replica.ReplicaSweep` — one
+    admission queue, least-loaded routing, per-replica reservations —
+    and ``max_live`` becomes the per-replica bound.  Per-problem
+    results stay bit-identical to the single-backend run
+    (replica-invisible RNG namespaces).  A 1-element sequence unwraps
+    to the plain sweep; both shapes share this one entry point and the
+    same validation.
     """
     if not prompts:
         return []
-    if isinstance(backend, (list, tuple)):
-        if len(backend) == 1:
-            backend = backend[0]
-        else:
-            assert continuous, \
-                "multi-replica sweeps require continuous=True"
-            from .replica import ReplicaSweep
-            return ReplicaSweep(backend, scfg, prompts,
-                                max_live=max_live, adaptive=adaptive).run()
+    replicas = _as_replicas(backend)
+    if len(replicas) > 1:
+        if not continuous:
+            raise ValueError(
+                "run_search_many: multi-replica sweeps require "
+                "continuous=True (the legacy one-problem-at-a-time "
+                "orchestration has no replica router) — pass a single "
+                "backend or drop continuous=False")
+        from .replica import ReplicaSweep
+        return ReplicaSweep(replicas, scfg, prompts,
+                            max_live=max_live, adaptive=adaptive).run()
+    backend = replicas[0]
     if continuous:
         return SweepScheduler(backend, scfg, prompts=prompts,
                               max_live=max_live, adaptive=adaptive).run()

@@ -34,7 +34,7 @@ def check_mesh_compat(mesh, *, use_kernel: bool) -> None:
     if mesh is None or not use_kernel:
         return
     if mesh.size > 1:
-        raise NotImplementedError(
+        raise ValueError(
             f"use_kernel=True on a {mesh.size}-device mesh: the Pallas "
             f"decode/prefill kernels are per-device and not yet wrapped "
             f"in shard_map — run the pure-jnp reference path "

@@ -8,4 +8,4 @@ exactly the refcount>1 pages this module tracks.
 """
 from .allocator import (PageAllocator, SequenceHandle,  # noqa: F401
                         VictimCandidate, select_victim)
-from .pool import KVPool  # noqa: F401
+from .pool import KVPool, StatePool  # noqa: F401

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .allocator import CopyOp
+from .allocator import CopyOp, OutOfPages
 
 
 class PendingGather:
@@ -208,6 +208,154 @@ def _gather_pages(pool_k, pool_v, idx):
 def _scatter_pages(pool_k, pool_v, idx, vals_k, vals_v):
     return (pool_k.at[:, idx].set(vals_k.astype(pool_k.dtype)),
             pool_v.at[:, idx].set(vals_v.astype(pool_v.dtype)))
+
+
+# ---------------------------------------------------------------------------
+# Recurrent-state pages (mamba2 / rwkv6 / hybrid families)
+# ---------------------------------------------------------------------------
+
+class PendingStateGather:
+    """An in-flight state-page gather (the StatePool twin of
+    :class:`PendingGather`): device snapshots taken, host copy deferred
+    to :meth:`resolve`."""
+
+    def __init__(self, dev: dict, n: int):
+        self._dev = dev
+        self._n = n
+        self._host = None
+
+    @property
+    def pending(self) -> bool:
+        return self._host is None
+
+    def resolve(self) -> dict:
+        if self._host is None:
+            n = self._n
+            self._host = {k: np.ascontiguousarray(np.asarray(a)[:, :n])
+                          for k, a in self._dev.items()}
+            self._dev = None
+        return self._host
+
+
+class StatePool:
+    """Constant-size recurrent state as a degenerate paged pool.
+
+    Recurrent layers (mamba2 SSD, rwkv6 wkv) carry O(1) state per
+    sequence instead of O(T) KV — exactly one "page" per sequence, so
+    tree search's branch/prune/swap/demote machinery works over hybrid
+    models with no new concepts: branch = copy-on-branch of the parent's
+    state page, prune = release, demote = gather to host + release,
+    promote = alloc + scatter.
+
+    Layout: one array per named state tensor, shaped
+    ``(n_layers, n_pages, *per_page)`` — the page axis sits where
+    KVPool's does, so the swap/copy helpers follow the same padded
+    jitted idiom.  ``specs`` maps ``name -> (n_layers, per_page_shape,
+    dtype)``; names are namespaced by the runtime that owns them (e.g.
+    ``"0:h"``, ``"0:conv"`` for group 0's mamba state).
+
+    The last page is the **dump page**: inactive decode rows read/write
+    it, padding scatters target it, and it is never allocated.  Pages
+    are zeroed at allocation — a freshly-allocated page is a valid
+    "empty history" state for every family, which is what lets streamed
+    prefill read state from the pool on every segment including the
+    first.
+    """
+
+    def __init__(self, specs: dict, n_pages: int):
+        assert n_pages >= 2, n_pages
+        self.specs = dict(specs)
+        self.n_pages = n_pages
+        self.dump_page = n_pages - 1
+        self._free = list(range(n_pages - 1))
+        self.arrays = {
+            name: jnp.zeros((L, n_pages) + tuple(shape), dtype)
+            for name, (L, shape, dtype) in self.specs.items()
+        }
+
+    # -- page accounting (engine-side free list) -----------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list:
+        """Allocate ``n`` zeroed pages (all-or-nothing)."""
+        if n > len(self._free):
+            raise OutOfPages(
+                f"state pool exhausted: need {n} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n)]
+        if pages:
+            self.zero(pages)
+        return pages
+
+    def release(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            assert 0 <= p < self.dump_page, p
+            self._free.append(p)
+
+    # -- jitted page ops -----------------------------------------------
+    def zero(self, pages: Sequence[int]) -> None:
+        n = len(pages)
+        if n == 0:
+            return
+        idx = np.full(pow2_bucket(n, lo=1), self.dump_page, np.int32)
+        idx[:n] = pages
+        self.arrays = _state_zero(self.arrays, jnp.asarray(idx))
+
+    def copy_page(self, src: int, dsts: Sequence[int]) -> None:
+        """Copy-on-branch: duplicate ``src``'s state into each of ``dsts``."""
+        n = len(dsts)
+        if n == 0:
+            return
+        idx = np.full(pow2_bucket(n, lo=1), self.dump_page, np.int32)
+        idx[:n] = dsts
+        self.arrays = _state_copy(self.arrays, np.int32(src),
+                                  jnp.asarray(idx))
+
+    def gather_pages_async(self, pages: Sequence[int]) -> PendingStateGather:
+        n = len(pages)
+        idx = np.zeros(pow2_bucket(max(n, 1), lo=1), np.int32)
+        idx[:n] = pages
+        dev = _state_gather(self.arrays, jnp.asarray(idx))
+        return PendingStateGather(dev, n)
+
+    def scatter_pages(self, pages: Sequence[int], host: dict) -> None:
+        """Write host state-page copies back into the pool at ``pages``."""
+        n = len(pages)
+        if n == 0:
+            return
+        P = pow2_bucket(n, lo=1)
+        idx = np.full(P, self.dump_page, np.int32)
+        idx[:n] = pages
+        vals = {}
+        for name, a in host.items():
+            assert a.shape[1] == n, (name, a.shape, n)
+            pad = ((0, 0), (0, P - n)) + ((0, 0),) * (a.ndim - 2)
+            vals[name] = jnp.asarray(np.pad(a, pad))
+        self.arrays = _state_scatter(self.arrays, jnp.asarray(idx), vals)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _state_zero(arrays, idx):
+    return {k: a.at[:, idx].set(jnp.zeros((), a.dtype))
+            for k, a in arrays.items()}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _state_copy(arrays, src, idx):
+    return {k: a.at[:, idx].set(a[:, src][:, None])
+            for k, a in arrays.items()}
+
+
+@jax.jit
+def _state_gather(arrays, idx):
+    return {k: a[:, idx] for k, a in arrays.items()}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _state_scatter(arrays, idx, vals):
+    return {k: a.at[:, idx].set(vals[k].astype(a.dtype))
+            for k, a in arrays.items()}
 
 
 # ---------------------------------------------------------------------------

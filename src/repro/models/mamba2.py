@@ -134,10 +134,19 @@ def _ssd_chunk(carry_h, inp, *, hd: int, ds: int):
     return h_next, (y_intra + y_inter)
 
 
-def mamba_apply_full(p, x, cfg, state=None) -> Tuple[jnp.ndarray, dict]:
+def mamba_apply_full(p, x, cfg, state=None,
+                     lengths=None) -> Tuple[jnp.ndarray, dict]:
     """Full-sequence mixer.  x: (B,T,d).  Returns (y (B,T,d), new state).
 
     T must be a multiple of cfg.ssm.chunk_size (callers pad).
+
+    ``lengths`` (B,) marks per-row valid prefixes of a right-padded
+    batch: positions >= lengths[b] become *identity* steps (dt = 0, so
+    no state write and no decay) and the returned state is exactly the
+    state after lengths[b] tokens — the conv tail is gathered per row
+    instead of sliced from the padded end.  Outputs at padded positions
+    are garbage and must be discarded by the caller.  A row with
+    lengths[b] == 0 keeps its incoming state untouched.
     """
     s = cfg.ssm
     d_in, H, d_xbc = _dims(cfg)
@@ -146,12 +155,24 @@ def mamba_apply_full(p, x, cfg, state=None) -> Tuple[jnp.ndarray, dict]:
     if state is None:
         state = init_mamba_state(cfg, B)
 
-    z, xBC, dt_raw = _split_proj(p, x, cfg)
-    xBC, conv_new = _conv_full(p, xBC, state["conv"])
+    z, xBC_raw, dt_raw = _split_proj(p, x, cfg)
+    xBC, conv_new = _conv_full(p, xBC_raw, state["conv"])
+    if lengths is not None and s.d_conv > 1:
+        # per-row conv tail: the raw (pre-silu) xBC values at positions
+        # [len-K+1, len) — ext index len..len+K-2 (identity for len==0)
+        K = s.d_conv
+        ext = jnp.concatenate([state["conv"].astype(xBC_raw.dtype),
+                               xBC_raw], axis=1)
+        idx = lengths[:, None] + jnp.arange(K - 1)[None, :]   # (B, K-1)
+        conv_new = jnp.take_along_axis(
+            ext, idx[..., None], axis=1).astype(state["conv"].dtype)
     xh = xBC[..., :d_in].reshape(B, T, H, hd)
     Bm = xBC[..., d_in:d_in + ds]
     Cm = xBC[..., d_in + ds:]
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    if lengths is not None:
+        valid = jnp.arange(T)[None, :] < lengths[:, None]     # (B, T)
+        dt = jnp.where(valid[..., None], dt, 0.0)
     A = -jnp.exp(p["A_log"])                            # (H,) negative
     dA = dt * A                                          # (B,T,H) <= 0
 

@@ -140,8 +140,18 @@ def _wkv_chunk(S, inp):
     return S_new, y
 
 
-def rwkv_apply_full(p, x, cfg, state=None) -> Tuple[jnp.ndarray, dict]:
-    """Full-sequence time-mix.  x: (B,T,d) -> (y (B,T,d), new state)."""
+def rwkv_apply_full(p, x, cfg, state=None,
+                    lengths=None) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence time-mix.  x: (B,T,d) -> (y (B,T,d), new state).
+
+    ``lengths`` (B,) marks per-row valid prefixes of a right-padded
+    batch: k/v/logw at padded positions are zeroed (identity steps —
+    the WKV state stops evolving after lengths[b] tokens) and the
+    returned ``x_prev[0]`` is gathered at position lengths[b]-1 instead
+    of taken from the padded end.  Padded outputs are garbage and must
+    be discarded by the caller; a row with lengths[b] == 0 keeps its
+    incoming state untouched.
+    """
     H, hd = _dims(cfg)
     B, T, d = x.shape
     if state is None:
@@ -149,6 +159,12 @@ def rwkv_apply_full(p, x, cfg, state=None) -> Tuple[jnp.ndarray, dict]:
     x_shift = jnp.concatenate([state["x_prev"][:, 0:1].astype(x.dtype),
                                x[:, :-1]], axis=1)
     r, k, v, g, logw = _proj(p, x, x_shift, cfg)
+    if lengths is not None:
+        valid = (jnp.arange(T)[None, :]
+                 < lengths[:, None])[..., None, None]    # (B,T,1,1)
+        k = jnp.where(valid, k, 0.0)
+        v = jnp.where(valid, v, 0.0)
+        logw = jnp.where(valid, logw, 0.0)
 
     Q = min(cfg.ssm.chunk_size, T)
     pad = (-T) % Q
@@ -174,9 +190,17 @@ def rwkv_apply_full(p, x, cfg, state=None) -> Tuple[jnp.ndarray, dict]:
     S_final, ys = jax.lax.scan(body, state["S"].astype(jnp.float32), chunks)
     y = ys.swapaxes(0, 1).reshape(B, Tp, H, hd)[:, :T]
     out = _finish(p, y, g, cfg)
+    if lengths is None:
+        last = x[:, -1]
+    else:
+        idx = jnp.clip(lengths - 1, 0)[:, None, None]    # (B,1,1)
+        last = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (B, 1, d)), axis=1)[:, 0]
+        last = jnp.where((lengths > 0)[:, None], last,
+                         state["x_prev"][:, 0].astype(x.dtype))
     new_state = {"S": S_final,
                  "x_prev": state["x_prev"].at[:, 0].set(
-                     x[:, -1].astype(state["x_prev"].dtype))}
+                     last.astype(state["x_prev"].dtype))}
     return out, new_state
 
 

@@ -94,9 +94,19 @@ problem's solo stream bit-for-bit.
 Within a mode, attention runs the pure-jnp reference everywhere, or the
 Pallas kernel (interpret on CPU, Mosaic on TPU) when ``use_kernel=True``.
 
-Supports the dense/GQA families (the search LM + PRM of the paper are
-dense llama-style models); MoE/SSM serving goes through the unified
-``LM.decode_step`` contiguous path instead.
+Model families (serving/runtimes.py): the jitted steps do not assume
+every layer is KV attention — they thread the residual stream through a
+stack of per-layer-group runtimes built from ``cfg.layer_plan()``.
+Dense/VLM GQA layers run the historical engine body verbatim
+(:class:`AttentionRuntime` — bit-identical to the pre-refactor engine),
+MoE layers ride the same attention with a sort-dispatch FFN
+(:class:`MoERuntime`), and mamba2/rwkv6 layers keep their constant-size
+recurrent state in a :class:`StatePool` — one state page per sequence,
+copied on branch, demoted/promoted with the KV spill machinery — so ETS
+tree search (branch/prune/swap/demote) works unchanged over pure-SSM
+and hybrid (Zamba2) models.  Attention-free models keep a zero-layer KV
+pool: block tables still drive token/position bookkeeping, the pool
+arrays just hold no bytes.
 """
 from __future__ import annotations
 
@@ -107,14 +117,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kvcache import KVPool, PageAllocator
-from repro.kvcache.pool import PendingGather, paged_attention_ref
+from repro.kvcache import KVPool, PageAllocator, StatePool
+from repro.kvcache.allocator import OutOfPages
+from repro.kvcache.pool import (PendingGather, PendingStateGather,
+                                paged_attention_ref)
 # the canonical bucketing primitive lives with the pool (kvcache may
 # not import serving); re-exported here for the engine-side callers
 from repro.kvcache.pool import pow2_bucket  # noqa: F401  (re-export)
 from repro.kernels.ref import tree_attention_ref
-from repro.models.layers import mlp_apply, rms_norm
-from repro.models.layers import apply_rope, rope_angles
+from .runtimes import (DecodeCtx, PrefillCtx, build_runtimes,
+                       collect_state_specs, total_kv_layers)
 
 
 # One jitted split per decode iteration advances every row's key chain
@@ -139,6 +151,9 @@ class EngineConfig:
     # prompts longer than this many tokens prefill in page-streamed
     # segments instead of one bucket (None = always one bucket)
     prefill_chunk_tokens: Optional[int] = None
+    # recurrent-state pages (mamba2/rwkv6/hybrid families): one page per
+    # live sequence, last page is the dump target.  None = n_pages.
+    n_state_pages: Optional[int] = None
     # device mesh for the serve layout (launch.mesh.make_host_mesh /
     # make_production_mesh): the KV pool's page axis shards over
     # "model" (launch.sharding.pool_spec) and per-row decode/prefill
@@ -150,18 +165,53 @@ class EngineConfig:
     mesh: Optional[object] = None
 
     def __post_init__(self):
-        assert self.attention in ("paged", "tree"), self.attention
-        assert self.prefill in ("flash", "dense"), self.prefill
-        assert self.kernel_block_b is None or self.kernel_block_b >= 1
-        assert self.prefill_chunk_tokens is None \
-            or self.prefill_chunk_tokens >= self.page_size
+        if self.attention not in ("paged", "tree"):
+            raise ValueError(
+                f"EngineConfig.attention must be 'paged' or 'tree', got "
+                f"{self.attention!r}")
+        if self.prefill not in ("flash", "dense"):
+            raise ValueError(
+                f"EngineConfig.prefill must be 'flash' or 'dense', got "
+                f"{self.prefill!r}")
+        if self.kernel_block_b is not None and self.kernel_block_b < 1:
+            raise ValueError(
+                f"EngineConfig.kernel_block_b must be >= 1, got "
+                f"{self.kernel_block_b} — pass None for the kernel default")
+        if self.prefill_chunk_tokens is not None:
+            if self.prefill == "dense":
+                raise ValueError(
+                    "prefill='dense' is the one-shot equivalence oracle and "
+                    "cannot stream long prompts in segments — drop "
+                    "prefill_chunk_tokens or use prefill='flash'")
+            if self.prefill_chunk_tokens < self.page_size:
+                raise ValueError(
+                    f"prefill_chunk_tokens={self.prefill_chunk_tokens} is "
+                    f"smaller than page_size={self.page_size}: a streamed "
+                    f"segment must cover at least one pool page")
+        if self.n_state_pages is not None and self.n_state_pages < 2:
+            raise ValueError(
+                f"n_state_pages={self.n_state_pages} must be >= 2 (one live "
+                f"page plus the dump page)")
 
 
 class PagedEngine:
     def __init__(self, model, params, ecfg: EngineConfig):
         cfg = model.cfg
-        assert cfg.arch_type in ("dense", "vlm"), \
-            "paged engine serves attention archs"
+        if not cfg.supports_decode:
+            raise ValueError(
+                f"{cfg.name} ({cfg.arch_type}) has no decode path — the "
+                f"paged engine serves autoregressive models only")
+        if ecfg.attention == "tree" and cfg.is_attention_free:
+            raise ValueError(
+                f"attention='tree' dedups shared KV pages, but {cfg.name} "
+                f"is attention-free (recurrent-only) — use "
+                f"attention='paged'")
+        if cfg.sliding_window and ecfg.max_seq_len > cfg.sliding_window:
+            raise ValueError(
+                f"max_seq_len={ecfg.max_seq_len} exceeds {cfg.name}'s "
+                f"sliding_window={cfg.sliding_window}: the paged decode "
+                f"path keeps every page live and applies no window "
+                f"masking, so windowed models must fit inside the window")
         self.model = model
         self.cfg = cfg
         self.params = params
@@ -169,7 +219,12 @@ class PagedEngine:
         # last physical page is the dump target for padded batch rows
         self.dump_page = ecfg.n_pages - 1
         self.alloc = PageAllocator(ecfg.n_pages - 1, ecfg.page_size)
-        L = cfg.n_layers
+        # model-family runtime stack (serving/runtimes.py): one runtime
+        # per layer_plan() group; the KV pool's layer axis covers only
+        # the attention-bearing groups (0 layers for pure-SSM models)
+        self.runtimes = build_runtimes(model, ecfg)
+        L = total_kv_layers(self.runtimes)
+        self.n_kv_layers = L
         # mesh-aware layout (EngineConfig.mesh): the pool places its
         # K/V on the serve-policy sharding and per-row host operands
         # are committed batch->data before each jitted step; every
@@ -180,20 +235,33 @@ class PagedEngine:
         self.mesh = ecfg.mesh
         self.shard_fallbacks: list = []
         self._row_shd_cache: Dict[tuple, object] = {}
+        # attention-free models keep a zero-layer pool: the page axes
+        # stay (block tables drive token bookkeeping) but the arrays
+        # hold no bytes.  Head dims are clamped to 1 so the shape stays
+        # well-formed when cfg has no attention heads.
+        kvh = max(cfg.n_kv_heads, 1)
+        khd = max(cfg.head_dim, 1)
         kv_sharding = None
         if self.mesh is not None:
             from jax.sharding import NamedSharding
             from repro.kernels.ops import check_mesh_compat
             from repro.launch.sharding import pool_spec
             check_mesh_compat(self.mesh, use_kernel=ecfg.use_kernel)
-            pool_shape = (L, ecfg.n_pages, ecfg.page_size,
-                          cfg.n_kv_heads, cfg.head_dim)
+            pool_shape = (L, ecfg.n_pages, ecfg.page_size, kvh, khd)
             kv_sharding = NamedSharding(
                 self.mesh, pool_spec(self.mesh, pool_shape,
                                      record=self.shard_fallbacks))
         self.pool = KVPool(L, ecfg.n_pages, ecfg.page_size,
-                           cfg.n_kv_heads, cfg.head_dim,
-                           dtype=jnp.float32, sharding=kv_sharding)
+                           kvh, khd, dtype=jnp.float32,
+                           sharding=kv_sharding)
+        # recurrent-state pool (None for attention-only stacks): one
+        # page per live sequence + the trailing dump page
+        state_specs = collect_state_specs(self.runtimes)
+        self.state: Optional[StatePool] = None
+        self.state_of: Dict[int, int] = {}    # seq_id -> state page
+        if state_specs:
+            nsp = ecfg.n_state_pages or ecfg.n_pages
+            self.state = StatePool(state_specs, nsp)
         self.tokens: Dict[int, List[int]] = {}   # full token history
         self.max_pages_per_seq = -(-ecfg.max_seq_len // ecfg.page_size)
         # throughput accounting (benchmarks/table2): how many decode
@@ -221,11 +289,15 @@ class PagedEngine:
         # A namespace holds a *list* of segments because subtree-grained
         # demotion (partial swap_out) may spill it in several waves.
         self._spill: Dict[int, List[Tuple[List[int], PendingGather]]] = {}
+        # ns -> [(seq_ids, PendingStateGather)]: the state-page twin of
+        # the KV spill buffer (recurrent families; empty otherwise)
+        self._state_spill: Dict[
+            int, List[Tuple[List[int], PendingStateGather]]] = {}
         # FIFO of not-yet-materialized spill gathers: at most
         # _spill_buffers transfers stay pending (device snapshots taken,
         # host copy deferred) so demotion overlaps decode without
         # pinning unbounded device memory
-        self._pending_spills: List[PendingGather] = []
+        self._pending_spills: List[object] = []
         self._spill_buffers = 2
         # per-step attention IO accounting: pages the attention actually
         # streams (unique — tree mode dedups shared prefixes) vs the
@@ -270,22 +342,21 @@ class PagedEngine:
     # ------------------------------------------------------------------
     def _build_prefill_fn(self):
         cfg, model = self.cfg, self.model
-        use_kernel = self.ecfg.use_kernel
-        dense = self.ecfg.prefill == "dense"
-        scale = cfg.head_dim ** -0.5
-        from repro.models import attention as A
 
         def prefill(params, tokens, positions, pages, slots, lengths,
-                    pool_k, pool_v):
+                    srows, pool_k, pool_v, state):
             """One lock-step prefill over a right-padded prompt bucket.
 
             tokens/pages/slots (B,T); positions (B,T), -1 at padded
             slots; lengths (B,) valid context tokens per row (0 =
-            inactive padding row).  Each layer's K/V is written straight
-            into the pool pages before attention runs — padded slots
-            target the dump page, and right-padding under the causal
-            mask keeps them out of every valid query's score set, so
-            the flash path needs no extra length masking.
+            inactive padding row); srows (B,) state page per row (dump
+            for stateless rows).  Attention groups write each layer's
+            K/V straight into the pool pages before attention runs —
+            padded slots target the dump page, and right-padding under
+            the causal mask keeps them out of every valid query's score
+            set.  Recurrent groups run the masked chunked scan (identity
+            steps past ``lengths``) and write the exact post-prompt
+            state into the rows' state pages.
             """
             self.prefill_traces += 1       # trace-time side effect
             B, T = tokens.shape
@@ -296,59 +367,38 @@ class PagedEngine:
                 pos = positions
             x, pos = model.embed_inputs(params, {"tokens": tokens,
                                                  "positions": pos})
-            gp = params["groups"][0]
-            for l in range(cfg.n_layers):
-                blk = jax.tree.map(lambda a: a[l], gp)
-                h = rms_norm(blk["ln1"], x, cfg.norm_eps)
-                q, k, v = A._project_qkv(blk["attn"], h, cfg, pos)
-                pool_k = pool_k.at[l, pages, slots].set(
-                    k.astype(pool_k.dtype))
-                pool_v = pool_v.at[l, pages, slots].set(
-                    v.astype(pool_v.dtype))
-                if dense:
-                    mask = A.make_mask(positions, positions,
-                                       causal=cfg.causal,
-                                       window=cfg.sliding_window)
-                    y = A.masked_attention(q, k, v, mask, scale=scale)
-                elif use_kernel:
-                    from repro.kernels import ops
-                    y = ops.flash_prefill(q, k, v, scale=scale,
-                                          causal=cfg.causal,
-                                          window=cfg.sliding_window)
-                else:
-                    y = A.blocked_attention(q, k, v, positions, positions,
-                                            causal=cfg.causal,
-                                            window=cfg.sliding_window,
-                                            scale=scale)
-                x = x + y.reshape(B, T, -1) @ blk["attn"]["wo"]
-                h = rms_norm(blk["ln2"], x, cfg.norm_eps)
-                x = x + mlp_apply(blk["mlp"], h, cfg.act)
+            ctx = PrefillCtx(positions=positions, pos=pos, pages=pages,
+                             slots=slots, lengths=lengths, state_rows=srows)
+            for rt in self.runtimes:
+                x, pool_k, pool_v, state = rt.prefill_into_pool(
+                    params, x, ctx, pool_k, pool_v, state)
             idx = jnp.clip(lengths - 1, 0, T - 1)
             logits = model.logits(params, x[jnp.arange(B), idx])
             logits = jnp.where((lengths > 0)[:, None], logits, 0.0)
-            return logits, pool_k, pool_v
+            return logits, pool_k, pool_v, state
 
-        return jax.jit(prefill, donate_argnums=(6, 7))
+        return jax.jit(prefill, donate_argnums=(7, 8, 9))
 
     def _build_streamed_prefill_fn(self):
         cfg, model = self.cfg, self.model
-        scale = cfg.head_dim ** -0.5
-        ps = self.ecfg.page_size
-        from repro.models import attention as A
 
         def streamed(params, tokens, positions, pages, slots, length,
-                     hist_table, hist_len, pool_k, pool_v):
+                     hist_table, hist_len, srows, pool_k, pool_v, state):
             """One segment of a page-streamed long-prompt prefill.
 
             tokens/positions/pages/slots (1,Ts) — the segment, right
             padded (positions -1, pages -> dump page); length valid
             segment tokens; hist_table (1,Tp) the prompt's block table
-            (pow2-padded); hist_len tokens already in the pool.  Each
-            layer writes the segment's KV into the pool, then attends
-            causally within the segment AND over the history gathered
-            from the pool through the block table — absolute-position
-            masking keeps padded table slots and not-yet-written page
-            tails out of every score set.
+            (pow2-padded); hist_len tokens already in the pool; srows
+            (1,) the prompt's state page.  Attention groups write the
+            segment's KV into the pool, then attend causally within the
+            segment AND over the history gathered from the pool through
+            the block table — absolute-position masking keeps padded
+            table slots and not-yet-written page tails out of every
+            score set.  Recurrent groups read the running state from
+            the pool and write it back, so each segment continues the
+            scan exactly where the previous one stopped (a freshly
+            allocated page is the zero empty-history state).
             """
             self.prefill_traces += 1       # trace-time side effect
             B, Ts = tokens.shape
@@ -359,90 +409,50 @@ class PagedEngine:
                 pos = positions
             x, pos = model.embed_inputs(params, {"tokens": tokens,
                                                  "positions": pos})
-            P = pool_k.shape[1]
-            Lh = hist_table.shape[1] * ps
-            hist_idx = (jnp.clip(hist_table, 0)[:, :, None] * ps
-                        + jnp.arange(ps)[None, None, :]).reshape(B, Lh)
-            hist_pos = jnp.where(jnp.arange(Lh)[None, :] < hist_len,
-                                 jnp.arange(Lh)[None, :], -1)
-            mask_h = A.make_mask(positions, hist_pos, causal=cfg.causal,
-                                 window=cfg.sliding_window)
-            mask_s = A.make_mask(positions, positions, causal=cfg.causal,
-                                 window=cfg.sliding_window)
-            mask = jnp.concatenate([mask_h, mask_s], axis=-1)
-            gp = params["groups"][0]
-            for l in range(cfg.n_layers):
-                blk = jax.tree.map(lambda a: a[l], gp)
-                h = rms_norm(blk["ln1"], x, cfg.norm_eps)
-                q, k, v = A._project_qkv(blk["attn"], h, cfg, pos)
-                pool_k = pool_k.at[l, pages, slots].set(
-                    k.astype(pool_k.dtype))
-                pool_v = pool_v.at[l, pages, slots].set(
-                    v.astype(pool_v.dtype))
-                K, hd = k.shape[2], k.shape[3]
-                flat_k = pool_k[l].reshape(P * ps, K, hd)
-                flat_v = pool_v[l].reshape(P * ps, K, hd)
-                hk = flat_k[hist_idx]              # (1, Lh, K, hd)
-                hv = flat_v[hist_idx]
-                kk = jnp.concatenate([hk.astype(k.dtype), k], axis=1)
-                vv = jnp.concatenate([hv.astype(v.dtype), v], axis=1)
-                y = A.masked_attention(q, kk, vv, mask, scale=scale)
-                x = x + y.reshape(B, Ts, -1) @ blk["attn"]["wo"]
-                h = rms_norm(blk["ln2"], x, cfg.norm_eps)
-                x = x + mlp_apply(blk["mlp"], h, cfg.act)
+            ctx = PrefillCtx(positions=positions, pos=pos, pages=pages,
+                             slots=slots,
+                             lengths=jnp.full((B,), length, jnp.int32),
+                             state_rows=srows, hist_table=hist_table,
+                             hist_len=hist_len)
+            for rt in self.runtimes:
+                x, pool_k, pool_v, state = rt.prefill_streamed(
+                    params, x, ctx, pool_k, pool_v, state)
             idx = jnp.clip(length - 1, 0, Ts - 1)
             logits = model.logits(params, x[:, idx])
             logits = jnp.where(length > 0, logits, 0.0)
-            return logits, pool_k, pool_v
+            return logits, pool_k, pool_v, state
 
-        return jax.jit(streamed, donate_argnums=(8, 9))
+        return jax.jit(streamed, donate_argnums=(9, 10, 11))
 
     def _decode_body(self, params, tokens, lengths, pages, slots, active,
-                     pool_k, pool_v, attend):
-        """Shared transformer body of one lock-step decode.
+                     srows, pool_k, pool_v, state, attend):
+        """Shared body of one lock-step decode over the runtime stack.
 
         tokens (B,) previous tokens; lengths (B,) context length
-        (position of the new token); pages/slots (B,) write targets.
-        ``attend(layer, q, pool_k, pool_v) -> (B, H, hd)`` is the only
-        thing the two attention modes disagree on — per-row RoPE and KV
-        writes are identical, which is what makes them interchangeable.
+        (position of the new token); pages/slots (B,) KV write targets;
+        srows (B,) state pages.  ``attend(kv_layer, q, pool_k, pool_v)
+        -> (B, H, hd)`` is the only thing the two attention modes
+        disagree on — per-row RoPE and KV writes are identical, which
+        is what makes them interchangeable.
         """
-        cfg, model = self.cfg, self.model
-        B = tokens.shape[0]
         cdt = jnp.float32
         x = params["embed"].astype(cdt)[tokens][:, None]   # (B,1,d)
-        gp = params["groups"][0]
-        for l in range(cfg.n_layers):
-            blk = jax.tree.map(lambda a: a[l], gp)
-            h = rms_norm(blk["ln1"], x, cfg.norm_eps)
-            ap = blk["attn"]
-            hd = cfg.head_dim
-            q = (h @ ap["wq"]).reshape(B, 1, cfg.n_heads, hd)
-            k = (h @ ap["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
-            v = (h @ ap["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
-            if cfg.qk_norm:
-                q = rms_norm(ap["q_norm"], q, cfg.norm_eps)
-                k = rms_norm(ap["k_norm"], k, cfg.norm_eps)
-            ang = rope_angles(lengths[:, None], hd, cfg.rope_theta, ())
-            q = apply_rope(q, ang)
-            k = apply_rope(k, ang)
-            pool_k = pool_k.at[l, pages, slots].set(k[:, 0])
-            pool_v = pool_v.at[l, pages, slots].set(v[:, 0])
-            y = attend(l, q[:, 0], pool_k, pool_v)
-            x = x + (y.reshape(B, 1, -1) @ ap["wo"])
-            h = rms_norm(blk["ln2"], x, cfg.norm_eps)
-            x = x + mlp_apply(blk["mlp"], h, cfg.act)
-        logits = model.logits(params, x[:, 0])
+        ctx = DecodeCtx(lengths=lengths, pages=pages, slots=slots,
+                        state_rows=srows, attend=attend)
+        for rt in self.runtimes:
+            x, pool_k, pool_v, state = rt.decode_step(
+                params, x, ctx, pool_k, pool_v, state)
+        logits = self.model.logits(params, x[:, 0])
         logits = jnp.where(active[:, None], logits, 0.0)
-        return logits, pool_k, pool_v
+        return logits, pool_k, pool_v, state
 
     def _build_decode_fn(self):
         use_kernel = self.ecfg.use_kernel
         block_b = self.ecfg.kernel_block_b
-        scale = self.cfg.head_dim ** -0.5
+        scale = self.cfg.head_dim ** -0.5 if self.cfg.head_dim else 1.0
 
         def step(params, tokens, block_tables, lengths, pages, slots,
-                 active, pool_k, pool_v):
+                 active, srows, pool_k, pool_v, state):
             """Paged lock-step decode: each row attends over its own
             block table, so shared pages are streamed once per leaf."""
             self.decode_traces += 1        # trace-time side effect
@@ -458,17 +468,19 @@ class PagedEngine:
                                            lengths + 1, scale=scale)
 
             return self._decode_body(params, tokens, lengths, pages, slots,
-                                     active, pool_k, pool_v, attend)
+                                     active, srows, pool_k, pool_v, state,
+                                     attend)
 
-        return jax.jit(step, donate_argnums=(7, 8))
+        return jax.jit(step, donate_argnums=(8, 9, 10))
 
     def _build_tree_decode_fn(self):
         use_kernel = self.ecfg.use_kernel
         block_b = self.ecfg.kernel_block_b
-        scale = self.cfg.head_dim ** -0.5
+        scale = self.cfg.head_dim ** -0.5 if self.cfg.head_dim else 1.0
 
         def step(params, tokens, lengths, pages, slots, active,
-                 page_list, page_mask, page_lens, pool_k, pool_v):
+                 page_list, page_mask, page_lens, srows, pool_k, pool_v,
+                 state):
             """Tree lock-step decode: attention walks the unique live
             pages of the whole tree (page_list padded to a power of two,
             zero-length entries inert), so a shared prefix page is
@@ -487,9 +499,10 @@ class PagedEngine:
                                           scale=scale)
 
             return self._decode_body(params, tokens, lengths, pages, slots,
-                                     active, pool_k, pool_v, attend)
+                                     active, srows, pool_k, pool_v, state,
+                                     attend)
 
-        return jax.jit(step, donate_argnums=(9, 10))
+        return jax.jit(step, donate_argnums=(10, 11, 12))
 
     # ------------------------------------------------------------------
     # Mesh placement of host-built operands
@@ -566,7 +579,17 @@ class PagedEngine:
         assert all(len(t) <= self.ecfg.max_seq_len for t in all_toks), \
             "prompt exceeds max_seq_len"
         ctxs = [t[:-1] for t in all_toks]
+        # all-or-nothing across BOTH pools: check state capacity before
+        # the allocator commits KV pages, allocate state pages after
+        if self.state is not None and len(ctxs) > self.state.n_free:
+            raise OutOfPages(
+                f"state pool exhausted: need {len(ctxs)} pages, "
+                f"{self.state.n_free} free")
         handles = self.alloc.new_seqs([len(c) for c in ctxs], ns=ns)
+        if self.state is not None:
+            spages = self.state.alloc(len(handles))   # zeroed at alloc
+            for h, pg in zip(handles, spages):
+                self.state_of[h.seq_id] = pg
         for h, t in zip(handles, all_toks):
             self.tokens[h.seq_id] = t
         pct = self.ecfg.prefill_chunk_tokens
@@ -604,6 +627,7 @@ class PagedEngine:
         pages = np.full((Bp, T), self.dump_page, np.int32)
         slots = np.zeros((Bp, T), np.int32)
         lens = np.zeros(Bp, np.int32)
+        srows = self._state_rows([h.seq_id for h in handles], Bp)
         n_tokens = 0
         for r, (h, ctx) in enumerate(zip(handles, ctxs)):
             n = len(ctx)
@@ -615,20 +639,40 @@ class PagedEngine:
             slots[r, :n] = np.tile(np.arange(ps), len(h.block_table))[:n]
             lens[r] = n
             n_tokens += n
-        return tok, pos, pages, slots, lens, n_tokens
+        return tok, pos, pages, slots, lens, srows, n_tokens
+
+    def _state_rows(self, seq_ids, n_rows: int) -> np.ndarray:
+        """(n_rows,) state page per row; dump page for padding rows and
+        for attention-only stacks (whose jitted steps carry an empty
+        state dict — the indices are then inert)."""
+        dump = self.state.dump_page if self.state is not None else 0
+        srows = np.full(n_rows, dump, np.int32)
+        for r, sid in enumerate(seq_ids):
+            if sid is not None and sid in self.state_of:
+                srows[r] = self.state_of[sid]
+        return srows
+
+    def _state_in(self):
+        return self.state.arrays if self.state is not None else {}
+
+    def _state_out(self, new) -> None:
+        if self.state is not None:
+            self.state.arrays = new
 
     def _launch_prefill_chunk(self, prep) -> None:
         """Device half of one prefill stream: dispatch the jitted step
         over arrays ``_prep_prefill_chunk`` built (async under jax)."""
         if prep is None:
             return
-        tok, pos, pages, slots, lens, n_tokens = prep
+        tok, pos, pages, slots, lens, srows, n_tokens = prep
         self.n_prefill_calls += 1
         self.n_prefill_tokens += n_tokens
-        logits, self.pool.k, self.pool.v = self._prefill_fn(
+        logits, self.pool.k, self.pool.v, new_state = self._prefill_fn(
             self.params, self._put_rows(tok), self._put_rows(pos),
             self._put_rows(pages), self._put_rows(slots),
-            self._put_rows(lens), self.pool.k, self.pool.v)
+            self._put_rows(lens), self._put_rows(srows),
+            self.pool.k, self.pool.v, self._state_in())
+        self._state_out(new_state)
         if self.ecfg.trace_logits:
             self.logits_trace.append(np.asarray(logits))
 
@@ -659,6 +703,7 @@ class PagedEngine:
         tbl = np.zeros((1, Tp), np.int32)
         tbl[0, :len(h.block_table)] = h.block_table
         tbl_j = self._put_repl(tbl)
+        srows = self._state_rows([h.seq_id], 1)
         for s0 in range(0, n, pct):
             s1 = min(s0 + pct, n)
             seg = ctx[s0:s1]
@@ -675,18 +720,32 @@ class PagedEngine:
             slots[0, :m] = idx % ps
             self.n_prefill_calls += 1
             self.n_prefill_tokens += m
-            logits, self.pool.k, self.pool.v = self._streamed_prefill_fn(
-                self.params, self._put_rows(tok), self._put_rows(pos),
-                self._put_rows(pages), self._put_rows(slots),
-                jnp.asarray(np.int32(m)), tbl_j,
-                jnp.asarray(np.int32(s0)), self.pool.k, self.pool.v)
+            logits, self.pool.k, self.pool.v, new_state = \
+                self._streamed_prefill_fn(
+                    self.params, self._put_rows(tok), self._put_rows(pos),
+                    self._put_rows(pages), self._put_rows(slots),
+                    jnp.asarray(np.int32(m)), tbl_j,
+                    jnp.asarray(np.int32(s0)), self._put_rows(srows),
+                    self.pool.k, self.pool.v, self._state_in())
+            self._state_out(new_state)
         if self.ecfg.trace_logits:
             self.logits_trace.append(np.asarray(logits))
 
     def branch(self, seq_id: int, n: int) -> List[int]:
+        if self.state is not None and n > self.state.n_free:
+            raise OutOfPages(
+                f"state pool exhausted: need {n} pages, "
+                f"{self.state.n_free} free")
         handles = self.alloc.branch(seq_id, n)
         for b in handles:
             self.tokens[b.seq_id] = list(self.tokens[seq_id])
+        if self.state is not None:
+            # recurrent state has no prefix sharing: every branch eagerly
+            # copies the parent's constant-size page (copy-on-branch)
+            pages = self.state.alloc(len(handles))
+            self.state.copy_page(self.state_of[seq_id], pages)
+            for b, pg in zip(handles, pages):
+                self.state_of[b.seq_id] = pg
         return [b.seq_id for b in handles]
 
     def free(self, seq_id: int) -> None:
@@ -695,6 +754,9 @@ class PagedEngine:
         was_swapped = h.swapped if h is not None else False
         self.alloc.free_seq(seq_id)
         self.tokens.pop(seq_id, None)
+        pg = self.state_of.pop(seq_id, None)
+        if pg is not None and self.state is not None:
+            self.state.release([pg])
         # last swapped sequence of a parked namespace gone -> its spill
         # buffer can never be swapped back in; drop the host copy
         if was_swapped and ns not in self.alloc.swapped:
@@ -734,6 +796,14 @@ class PagedEngine:
         assert released == pages, (released, pages)
         self._spill.setdefault(ns, []).append((pages, gather))
         self._pending_spills.append(gather)
+        if self.state is not None:
+            # recurrent-state pages are per-sequence exclusive: spill one
+            # page per demoted id and free it alongside the KV pages
+            spages = [self.state_of.pop(i) for i in ids]
+            sgather = self.state.gather_pages_async(spages)
+            self.state.release(spages)
+            self._state_spill.setdefault(ns, []).append((ids, sgather))
+            self._pending_spills.append(sgather)
         while len(self._pending_spills) > self._spill_buffers:
             self._pending_spills.pop(0).resolve()
         self.swapped_out_pages += len(pages)
@@ -759,6 +829,16 @@ class PagedEngine:
             return 0
         ns = self.alloc.seqs[ids[0]].ns
         segments = self._spill.get(ns, [])
+        idset = set(ids)
+        if self.state is not None:
+            need = sum(sum(1 for sid in seg_ids if sid in idset)
+                       for seg_ids, _ in self._state_spill.get(ns, []))
+            if need > self.state.n_free:
+                # all-or-nothing across both pools: refuse before the KV
+                # restore so everything stays parked
+                raise OutOfPages(
+                    f"state pool exhausted: need {need} pages, "
+                    f"{self.state.n_free} free")
         mapping = self.alloc.swap_in_seqs(ids)     # may raise OutOfPages
         restored = 0
         for pages, gather in segments:
@@ -771,6 +851,17 @@ class PagedEngine:
                     host_k[:, rows], host_v[:, rows],
                     dump_page=self.dump_page)
             restored += len(rows)
+        if self.state is not None:
+            for seg_ids, sgather in self._state_spill.get(ns, []):
+                host = sgather.resolve()
+                rows = [j for j, sid in enumerate(seg_ids)
+                        if sid in idset]
+                if rows:
+                    npages = self.state.alloc(len(rows))
+                    self.state.scatter_pages(
+                        npages, {k: a[:, rows] for k, a in host.items()})
+                    for pg, j in zip(npages, rows):
+                        self.state_of[seg_ids[j]] = pg
         self._drop_spill(ns)
         self.swapped_in_pages += restored
         self.n_swap_ins += 1
@@ -781,6 +872,9 @@ class PagedEngine:
         and un-pin their device snapshots from the pending-transfer
         FIFO."""
         for _, gather in self._spill.pop(ns, []):
+            if gather in self._pending_spills:
+                self._pending_spills.remove(gather)
+        for _, gather in self._state_spill.pop(ns, []):
             if gather in self._pending_spills:
                 self._pending_spills.remove(gather)
 
@@ -794,6 +888,7 @@ class PagedEngine:
         for sid in list(self.alloc.seqs):
             self.free(sid)
         self._spill.clear()
+        self._state_spill.clear()
         self._pending_spills.clear()
         self.logits_trace.clear()
 
@@ -1027,27 +1122,32 @@ class DecodeStream:
             act[j] = True
             rows[j] = i
 
+        srows = eng._state_rows(rows, B)
         if tree_mode:
             meta = eng.alloc.tree_metadata(rows, pad_page=eng.dump_page)
             eng._count_streamed_pages(live, meta.n_unique, meta.n_logical)
             # rows shard batch->data; the unique-page metadata spans the
             # whole tree (no batch axis) and stays replicated
-            logits, eng.pool.k, eng.pool.v = eng._tree_decode_fn(
-                eng.params, eng._put_rows(tok), eng._put_rows(lens),
-                eng._put_rows(pages), eng._put_rows(slots),
-                eng._put_rows(act), eng._put_repl(meta.page_list),
-                eng._put_repl(meta.page_mask),
-                eng._put_repl(meta.page_lens), eng.pool.k, eng.pool.v)
+            logits, eng.pool.k, eng.pool.v, new_state = \
+                eng._tree_decode_fn(
+                    eng.params, eng._put_rows(tok), eng._put_rows(lens),
+                    eng._put_rows(pages), eng._put_rows(slots),
+                    eng._put_rows(act), eng._put_repl(meta.page_list),
+                    eng._put_repl(meta.page_mask),
+                    eng._put_repl(meta.page_lens), eng._put_rows(srows),
+                    eng.pool.k, eng.pool.v, eng._state_in())
         else:
             # paged reads stream every page of every live row
             n_logical = sum(len(eng.alloc.seqs[i].block_table)
                             for i in live)
             eng._count_streamed_pages(live, n_logical, n_logical)
-            logits, eng.pool.k, eng.pool.v = eng._decode_fn(
+            logits, eng.pool.k, eng.pool.v, new_state = eng._decode_fn(
                 eng.params, eng._put_rows(tok), eng._put_repl(bt),
                 eng._put_rows(lens), eng._put_rows(pages),
                 eng._put_rows(slots), eng._put_rows(act),
-                eng.pool.k, eng.pool.v)
+                eng._put_rows(srows), eng.pool.k, eng.pool.v,
+                eng._state_in())
+        eng._state_out(new_state)
         if ecfg.trace_logits:
             eng.logits_trace.append(np.asarray(logits))
         # advance every slot's own key chain (freed slots' keys advance

@@ -85,6 +85,7 @@ measured sharing ratio.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -668,7 +669,21 @@ class LMBackend:
         traces nor leak RNG state.  Jit caches (decode/prefill/bucketed
         PRM + embedder) and the jit-trace counters (``score_traces``
         etc., which track cache lifetime, not per-problem state) survive
-        untouched."""
+        untouched.
+
+        .. deprecated::
+            Problem namespaces made the blanket reset vestigial: every
+            search tree lives in its own namespace and ``run_search``
+            frees it on exit, so independent problems never share KV or
+            RNG state to begin with.  For benchmark measurement windows
+            call ``engine.reset_counters()`` directly.  ``reset()`` will
+            be removed in a future release."""
+        warnings.warn(
+            "LMBackend.reset() is deprecated: per-problem namespaces "
+            "already isolate searches (run_search frees its tree on "
+            "exit); use engine.reset_counters() to delimit measurement "
+            "windows. reset() will be removed in a future release.",
+            DeprecationWarning, stacklevel=2)
         self.engine.reset()
         if hasattr(self.engine, "reset_counters"):
             self.engine.reset_counters()

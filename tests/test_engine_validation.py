@@ -1,0 +1,143 @@
+"""EngineConfig / engine-build validation and API-cleanup seams.
+
+Incoherent configurations must fail at construction with an actionable
+message, not as a downstream shape error; the deprecated
+``LMBackend.reset()`` path must warn; and ``run_search_many``'s unified
+backend-or-replicas entry point must reject malformed backend
+arguments up front.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config, tiny_variant
+from repro.core import SearchConfig
+from repro.core.controllers import run_search_many
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, PagedEngine
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig field validation
+# ---------------------------------------------------------------------------
+
+def _ecfg(**over):
+    kw = dict(n_pages=32, page_size=8, max_batch=4, max_seq_len=64)
+    kw.update(over)
+    return EngineConfig(**kw)
+
+
+def test_rejects_unknown_attention_mode():
+    with pytest.raises(ValueError,
+                       match="attention must be 'paged' or 'tree'"):
+        _ecfg(attention="dense")
+
+
+def test_rejects_unknown_prefill_mode():
+    with pytest.raises(ValueError, match="prefill must be"):
+        _ecfg(prefill="paged")
+
+
+def test_rejects_nonpositive_kernel_block():
+    with pytest.raises(ValueError, match="kernel_block_b"):
+        _ecfg(kernel_block_b=0)
+
+
+def test_rejects_dense_prefill_with_chunking():
+    with pytest.raises(ValueError, match="one-shot equivalence oracle"):
+        _ecfg(prefill="dense", prefill_chunk_tokens=16)
+
+
+def test_rejects_chunk_smaller_than_page():
+    with pytest.raises(ValueError,
+                       match="cover at least one pool page"):
+        _ecfg(prefill_chunk_tokens=4)
+
+
+def test_rejects_degenerate_state_pool():
+    with pytest.raises(ValueError, match="plus the dump page"):
+        _ecfg(n_state_pages=1)
+
+
+# ---------------------------------------------------------------------------
+# Engine <-> model coherence (needs real models)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mamba():
+    cfg = tiny_variant(get_config("mamba2-370m"))
+    model = build_model(cfg, remat=False)
+    return model, model.init(jax.random.key(0))
+
+
+def test_rejects_tree_attention_on_recurrent_only_model(mamba):
+    model, params = mamba
+    with pytest.raises(ValueError, match="attention-free"):
+        PagedEngine(model, params, _ecfg(attention="tree"))
+
+
+def test_rejects_encoder_models():
+    cfg = tiny_variant(get_config("hubert-xlarge"))
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    with pytest.raises(ValueError, match="no decode path"):
+        PagedEngine(model, params, _ecfg())
+
+
+def test_rejects_seq_len_beyond_sliding_window():
+    cfg = tiny_variant(get_config("mixtral-8x7b"))     # window 64
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    with pytest.raises(ValueError, match="sliding_window"):
+        PagedEngine(model, params, _ecfg(max_seq_len=128))
+
+
+def test_recurrent_engine_accepts_paged(mamba):
+    model, params = mamba
+    eng = PagedEngine(model, params, _ecfg())
+    assert eng.state is not None and eng.n_kv_layers == 0
+
+
+# ---------------------------------------------------------------------------
+# LMBackend.reset() deprecation
+# ---------------------------------------------------------------------------
+
+def test_backend_reset_warns_deprecated(mamba):
+    from repro.serving.search_backend import BackendConfig, LMBackend
+    model, params = mamba
+    prm_cfg = dataclasses.replace(get_config("tiny-lm"), n_layers=1,
+                                  d_model=64, n_heads=2, n_kv_heads=2,
+                                  d_ff=128, vocab_size=model.cfg.vocab_size)
+    prm = build_model(prm_cfg, with_value_head=True, remat=False)
+    emb = build_model(dataclasses.replace(prm_cfg, n_layers=1),
+                      remat=False)
+    be = LMBackend(PagedEngine(model, params, _ecfg()),
+                   prm, prm.init(jax.random.key(1)),
+                   emb, emb.init(jax.random.key(2)),
+                   BackendConfig(step_token=2, eos_token=3),
+                   answer_fn=lambda full: None, seed=0)
+    with pytest.deprecated_call(match="LMBackend.reset"):
+        be.reset()
+
+
+# ---------------------------------------------------------------------------
+# run_search_many: one typed entry point for backend | replicas
+# ---------------------------------------------------------------------------
+
+def test_run_search_many_rejects_empty_backend_list():
+    with pytest.raises(ValueError, match="backend list is empty"):
+        run_search_many([], SearchConfig(method="ets"), [[1, 2]])
+
+
+def test_run_search_many_rejects_nested_backend_list():
+    with pytest.raises(ValueError, match="flat sequence"):
+        run_search_many([[object()], [object()]],
+                        SearchConfig(method="ets"), [[1, 2]])
+
+
+def test_run_search_many_rejects_replicas_without_continuous():
+    with pytest.raises(ValueError, match="require\\s+continuous=True"):
+        run_search_many([object(), object()],
+                        SearchConfig(method="ets"), [[1, 2]],
+                        continuous=False)

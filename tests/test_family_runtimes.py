@@ -1,0 +1,260 @@
+"""Model-family runtimes: paged == contiguous per family, end to end.
+
+The engine composes per-layer runtimes (serving/runtimes.py) instead of
+assuming every layer is KV attention.  These tests pin the equivalence
+discipline per family — MoE (mixtral), pure-SSM (mamba2, rwkv6) and
+hybrid (zamba2) — at three grains:
+
+  * greedy decode through the paged engine == the contiguous
+    ``LM.prefill``/``decode_step`` oracle, token for token;
+  * a full greedy ETS search through the paged engine produces node
+    streams the contiguous oracle reproduces exactly (every tree edge
+    replayed);
+  * recurrent state pages survive branch (copy-on-branch) and
+    swap-out/swap-in round trips bit-identically, and the new runtimes
+    stay inside the pow2 recompile bounds.
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, tiny_variant
+from repro.core import ETSConfig, SearchConfig, run_search
+from repro.kvcache.allocator import OutOfPages
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, PagedEngine
+from repro.serving.search_backend import BackendConfig, LMBackend
+
+FAMILIES = ["mixtral-8x7b", "mamba2-370m", "rwkv6-7b", "zamba2-7b"]
+
+
+@pytest.fixture(scope="module", params=FAMILIES)
+def family(request):
+    cfg = tiny_variant(get_config(request.param))
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    return request.param, cfg, model, params
+
+
+def _engine(model, params, **over):
+    kw = dict(n_pages=128, page_size=8, max_batch=16, max_seq_len=64)
+    kw.update(over)
+    return PagedEngine(model, params, EngineConfig(**kw))
+
+
+def _oracle_greedy(model, params, ctx, n):
+    """Contiguous-cache greedy continuation of ``ctx`` (n tokens)."""
+    lg, cache = model.prefill(
+        params, {"tokens": jnp.asarray([ctx[:-1]], jnp.int32)},
+        cache_len=64)
+    last = ctx[-1]
+    out = []
+    for _ in range(n):
+        lg, cache = model.decode_step(
+            params, jnp.asarray([[last]], jnp.int32), cache)
+        last = int(jnp.argmax(lg[0]))
+        out.append(last)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Greedy decode: paged engine == contiguous oracle
+# ---------------------------------------------------------------------------
+
+def test_family_greedy_matches_contiguous(family):
+    _, _, model, params = family
+    eng = _engine(model, params)
+    prompts = [[3, 5, 7, 2, 9], [4, 4, 1]]
+    sids = eng.prefill_many(prompts)
+    outs = eng.decode(sids, 8, jax.random.key(1), temperature=0.0)
+    for p, sid in zip(prompts, sids):
+        assert outs[sid] == _oracle_greedy(model, params, p, 8)
+    eng.alloc.check_invariants()
+
+
+def test_family_streamed_prefill_matches_contiguous(family):
+    """Chunked prefill (recurrent state carried across segments, KV
+    history re-attended) lands in the same state as one-shot."""
+    name, _, model, params = family
+    eng = _engine(model, params, prefill_chunk_tokens=16)
+    prompt = list(np.random.default_rng(3).integers(1, 500, 40))
+    if name == "mixtral-8x7b":
+        prompt = prompt[:40]          # window 64 caps prompt+decode
+    sid = eng.prefill(prompt)
+    out = eng.decode([sid], 6, jax.random.key(2), temperature=0.0)
+    assert out[sid] == _oracle_greedy(model, params, prompt, 6)
+
+
+# ---------------------------------------------------------------------------
+# Full ETS search: every sampled edge replayed on the contiguous oracle
+# ---------------------------------------------------------------------------
+
+def _search_stack(cfg, model, params, **eng_over):
+    prm_cfg = dataclasses.replace(get_config("tiny-lm"), n_layers=1,
+                                  d_model=64, n_heads=2, n_kv_heads=2,
+                                  d_ff=128, vocab_size=cfg.vocab_size)
+    prm = build_model(prm_cfg, with_value_head=True, remat=False)
+    prm_params = prm.init(jax.random.key(1))
+    emb_cfg = dataclasses.replace(get_config("tiny-embedder"), n_layers=1,
+                                  d_model=64, n_heads=2, n_kv_heads=2,
+                                  d_ff=128, vocab_size=cfg.vocab_size)
+    emb = build_model(emb_cfg, remat=False)
+    emb_params = emb.init(jax.random.key(2))
+    engine = _engine(model, params, **eng_over)
+    backend = LMBackend(engine, prm, prm_params, emb, emb_params,
+                        BackendConfig(step_token=2, eos_token=3,
+                                      max_step_tokens=6, max_depth=3,
+                                      temperature=0.0),
+                        answer_fn=lambda full: None, seed=13)
+    return engine, backend
+
+
+def _node_ctx(tree, nid):
+    """Token context ending at node ``nid`` (prompt + path steps)."""
+    toks = []
+    while nid >= 0:                  # root's parent is -1
+        node = tree.node(nid)
+        toks = list(node.payload["tokens"]) + toks
+        nid = node.parent
+    return toks
+
+
+def test_family_full_ets_search_matches_contiguous(family):
+    """A full greedy ETS search (prefill, branch CoW — KV pages and
+    state pages — lock-step decode, prune) through the paged engine:
+    every tree edge's token stream is reproduced by the contiguous
+    oracle, and the jitted steps stay inside the pow2 recompile
+    bounds."""
+    _, cfg, model, params = family
+    engine, backend = _search_stack(cfg, model, params)
+    prompt = list(range(4, 21))
+    tree = backend.start(prompt)
+    res = run_search(backend, SearchConfig(
+        method="ets", width=4, max_steps=3,
+        ets=ETSConfig(lambda_b=1.0, lambda_d=1.0,
+                      cluster_threshold=0.2)), tree=tree)
+    assert res.steps >= 1 and len(res.tree.nodes) > 1
+    engine.alloc.check_invariants()
+
+    # replay every unique (context -> step tokens) edge on the oracle
+    seen = set()
+    replayed = 0
+    for nid in range(1, len(res.tree.nodes)):
+        node = res.tree.node(nid)
+        toks = list(node.payload["tokens"])
+        if not toks:
+            continue
+        # the root payload holds no tokens; the prompt IS the root step
+        ctx = tuple(prompt) + tuple(_node_ctx(res.tree, node.parent))
+        if (ctx, tuple(toks)) in seen:
+            continue                 # greedy siblings are identical
+        seen.add((ctx, tuple(toks)))
+        assert toks == _oracle_greedy(model, params, list(ctx), len(toks))
+        replayed += 1
+    assert replayed >= 1
+
+    # recompile bounds: one signature per pow2 bucket at most
+    n_buckets = int(math.log2(engine.ecfg.n_pages)) + 1
+    assert engine.decode_traces <= n_buckets
+    assert engine.prefill_traces <= n_buckets
+
+
+# ---------------------------------------------------------------------------
+# State pages: copy-on-branch + swap round trips
+# ---------------------------------------------------------------------------
+
+def _recurrent(family):
+    name, cfg, model, params = family
+    if model.cfg.layer_plan() == [("attn", model.cfg.n_layers)]:
+        pytest.skip("attention-only family holds no state pages")
+    return name, cfg, model, params
+
+
+def test_state_pages_copy_on_branch(family):
+    _, _, model, params = _recurrent(family)
+    eng = _engine(model, params)
+    assert eng.state is not None
+    free0 = eng.state.n_free
+    sid = eng.prefill(list(range(1, 20)))
+    assert eng.state.n_free == free0 - 1
+    b1, b2 = eng.branch(sid, 2)
+    # copy-on-branch: one fresh state page per branch, parent kept
+    assert eng.state.n_free == free0 - 3
+    assert len({eng.state_of[s] for s in (sid, b1, b2)}) == 3
+    out = eng.decode([b1, b2], 6, jax.random.key(0), temperature=0.0)
+    assert out[b1] == out[b2]        # identical copied state, greedy
+    for s in (sid, b1, b2):
+        eng.free(s)
+    assert eng.state.n_free == free0
+
+
+def test_state_pool_exhaustion_is_all_or_nothing(family):
+    _, _, model, params = _recurrent(family)
+    eng = _engine(model, params, n_state_pages=3)   # 2 live + dump
+    sid = eng.prefill(list(range(1, 10)))
+    with pytest.raises(OutOfPages, match="state pool exhausted"):
+        eng.branch(sid, 2)
+    # the refused branch left no orphans in either pool
+    assert eng.state.n_free == 1
+    eng.alloc.check_invariants()
+
+
+def test_state_swap_roundtrip_bit_identical(family):
+    """Demote/restore with dirtied pools: decode resumes identically."""
+    _, _, model, params = _recurrent(family)
+    prompt = list(range(1, 20))
+    keys = jax.random.split(jax.random.key(11), 2)
+    keys2 = jax.random.split(jax.random.key(12), 2)
+
+    def run(with_swap):
+        eng = _engine(model, params)
+        sid = eng.prefill(prompt)
+        b1, b2 = eng.branch(sid, 2)
+        out1 = eng.decode([b1, b2], 4, row_keys=keys, temperature=1.0)
+        if with_swap:
+            eng.swap_out([sid, b1, b2])
+            assert all(s not in eng.state_of for s in (sid, b1, b2))
+            filler = eng.prefill(list(range(25, 60)))  # dirty both pools
+            eng.free(filler)
+            eng.swap_in([sid, b1, b2])
+        out2 = eng.decode([b1, b2], 4, row_keys=keys2, temperature=1.0)
+        return [out1[b1], out1[b2], out2[b1], out2[b2]]
+
+    assert run(with_swap=False) == run(with_swap=True)
+
+
+def test_state_partial_spill_segments(family):
+    """Subtree-grained demotion in two waves spills two state segments;
+    swap-in restores both and drains the transfer FIFO."""
+    _, _, model, params = _recurrent(family)
+    eng = _engine(model, params)
+    sid = eng.prefill(list(range(1, 20)))
+    b1, b2, b3 = eng.branch(sid, 3)
+    eng.decode([b1, b2, b3], 4, jax.random.key(21), temperature=0.0)
+    eng.swap_out([b1], partial=True)
+    eng.swap_out([b2], partial=True)
+    ns = eng.alloc.seqs[sid].ns
+    assert len(eng._state_spill[ns]) == 2
+    filler = eng.prefill(list(range(25, 60)))
+    eng.free(filler)
+    eng.swap_in([b1, b2])
+    assert eng._state_spill == {} and eng._pending_spills == []
+    out = eng.decode([b1, b2, b3], 4, jax.random.key(22), temperature=0.0)
+    assert out[b1] == out[b2] == out[b3]      # greedy branches agree
+    eng.alloc.check_invariants()
+
+
+def test_state_freed_while_parked_drops_spill(family):
+    _, _, model, params = _recurrent(family)
+    eng = _engine(model, params)
+    sid = eng.prefill(list(range(1, 20)))
+    ns = eng.alloc.seqs[sid].ns
+    eng.swap_out([sid])
+    assert ns in eng._state_spill
+    eng.free(sid)
+    assert ns not in eng._state_spill
+    assert eng._pending_spills == []

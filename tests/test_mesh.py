@@ -66,7 +66,7 @@ def test_check_mesh_compat_guards_kernel_path():
     check_mesh_compat(None, use_kernel=True)             # no mesh: fine
     check_mesh_compat(FakeBigMesh(), use_kernel=False)   # jnp path: fine
     check_mesh_compat(make_host_mesh(), use_kernel=True)  # 1 device: fine
-    with pytest.raises(NotImplementedError, match="shard_map"):
+    with pytest.raises(ValueError, match="shard_map"):
         check_mesh_compat(FakeBigMesh(), use_kernel=True)
 
 
